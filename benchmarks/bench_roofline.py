@@ -1,0 +1,64 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``artifacts/dryrun/*.json`` (written by ``repro.launch.dryrun``) and
+prints, per single-pod (arch × shape) cell: the three roofline terms, the
+dominant one, per-device memory, and MODEL_FLOPS/HLO_FLOPS.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+
+def load_cells(mesh="single"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(verbose: bool = True, mesh: str = "single"):
+    cells = load_cells(mesh)
+    rows = []
+    header = (f"{'arch':18s} {'shape':12s} {'st':4s} {'dom':10s} "
+              f"{'comp_s':>9s} {'mem_s':>9s} {'coll_s':>9s} "
+              f"{'frac':>6s} {'useful':>6s} {'GB/dev':>7s} fits")
+    if verbose:
+        print(header)
+        print("-" * len(header))
+    for c in cells:
+        if c["status"] == "skipped":
+            if verbose:
+                print(f"{c['arch']:18s} {c['shape']:12s} skip   "
+                      f"({c['reason'][:60]})")
+            continue
+        if c["status"] == "error":
+            if verbose:
+                print(f"{c['arch']:18s} {c['shape']:12s} ERR    "
+                      f"{c['error'][:70]}")
+            continue
+        r = c.get("roofline")
+        gb = c["per_device_bytes"] / 1e9
+        if r is None:
+            if verbose:
+                print(f"{c['arch']:18s} {c['shape']:12s} ok     (no probes)"
+                      f"{'':40s}{gb:7.1f} {c['fits_v5e']}")
+            continue
+        rows.append({**{k: c[k] for k in ("arch", "shape")}, **r,
+                     "gb_per_dev": gb, "fits": c["fits_v5e"]})
+        if verbose:
+            print(f"{c['arch']:18s} {c['shape']:12s} ok   {r['dominant']:10s} "
+                  f"{r['compute_s']:9.2e} {r['memory_s']:9.2e} "
+                  f"{r['collective_s']:9.2e} {r['compute_fraction']:6.3f} "
+                  f"{r['useful_flops_ratio']:6.2f} {gb:7.1f} {c['fits_v5e']}")
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

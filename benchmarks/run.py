@@ -1,0 +1,57 @@
+"""Benchmark harness — one entry per paper table/figure + roofline/kernels.
+
+Prints ``name,value,derived`` CSV lines per benchmark plus the validation
+summary EXPERIMENTS.md quotes.  Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_balancer,
+        bench_chunk_model,
+        bench_kernels,
+        bench_roofline,
+        bench_table_scheme,
+    )
+
+    print("=" * 72)
+    print("ColoGrid benchmarks (paper: HadoopBase-MIP backend, Bao et al. 2017)")
+    print("=" * 72)
+
+    print("\n--- [Fig. 3] Use case 1: heterogeneous cluster / load balancer ---")
+    t0 = time.perf_counter()
+    b1 = bench_balancer.run()
+    print(f"bench_balancer,{(time.perf_counter()-t0)*1e6:.0f},"
+          f"mean_speedup={b1['mean_balancer_speedup']:.2f}x;paper=1.5x")
+
+    print("\n--- [Fig. 4] Use case 2: large-dataset average / chunk model ---")
+    t0 = time.perf_counter()
+    b2 = bench_chunk_model.run()
+    print(f"bench_chunk_model,{(time.perf_counter()-t0)*1e6:.0f},"
+          f"eta_star={b2['eta_star_model']};paper=50-60;"
+          f"sge_wall_x={b2['sge_wall_x']:.1f};paper=5-8;"
+          f"sge_rt_x={b2['sge_rt_x']:.1f};paper=14-20")
+
+    print("\n--- [Fig. 6/Table 3] Use case 3: table scheme / rapid query ---")
+    t0 = time.perf_counter()
+    b3 = bench_table_scheme.run()
+    print(f"bench_table_scheme,{(time.perf_counter()-t0)*1e6:.0f},"
+          f"naive_over_proposed_small={b3['naive_over_proposed_small']:.1f}x;"
+          f"paper=9x;sge_over_proposed_large="
+          f"{b3['sge_over_proposed_large']:.1f}x;paper=3x")
+
+    print("\n--- Kernels (interpret-mode validation) ---")
+    bench_kernels.run()
+
+    print("\n--- Roofline (single-pod dry-run artifacts) ---")
+    bench_roofline.run()
+
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Use case 1 + fault tolerance: the balancer as a living scheduler.
+
+Walks through the paper's heterogeneous-cluster story and ColoGrid's
+extensions on top of it:
+
+1. default (balanced) vs greedy #CPU×MIPS allocation on the paper's
+   224-core grid — simulated wall/resource times;
+2. straggler mitigation: a node silently slows 3×, the GridScheduler's
+   EWMA powers detect it and the offline rebalance shifts regions away;
+3. failure: a node dies, its regions are adopted by survivors;
+4. elastic join: a fast node arrives and takes a proportional share.
+
+    PYTHONPATH=src python examples/heterogeneous_balance.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.balancer import (
+    NodeSpec,
+    allocation_imbalance,
+    balanced_allocation,
+    greedy_allocation,
+)
+from repro.core.placement import Placement
+from repro.core.regions import HierarchicalSplitPolicy
+from repro.core.scheduler import GridScheduler
+from repro.core.simulator import ClusterSim, SimTask, paper_cluster
+from repro.core.table import ColumnSpec, make_mip_table
+
+
+def part1_paper_balancer():
+    print("=" * 64)
+    print("1. heterogeneous cluster: default vs greedy (paper Fig. 3)")
+    print("=" * 64)
+    nodes = paper_cluster()
+    rng = np.random.default_rng(0)
+    region_bytes = {i: int(b) for i, b in
+                    enumerate(rng.integers(150e6, 220e6, 416))}
+    region_of = rng.integers(0, 416, 1200)
+    for name, alloc in (
+            ("balanced (HBase default)", balanced_allocation(region_bytes, nodes)),
+            ("greedy #CPU×MIPS (paper)", greedy_allocation(region_bytes, nodes))):
+        tasks = [SimTask(i, 15e6, 8.9e6, work=48.0,
+                         home_node=alloc[region_of[i]])
+                 for i in range(1200)]
+        res = ClusterSim(nodes, bandwidth=70e6).run(tasks, "hadoop")
+        imb = allocation_imbalance(alloc, region_bytes, nodes)
+        print(f"  {name:28s} wall={res.wall_time:7.1f}s "
+              f"resource={res.resource_time:9.0f}s imbalance={imb:.3f}")
+    print()
+
+
+def build_placement(n_nodes=4, n_rows=512):
+    rng = np.random.default_rng(1)
+    t = make_mip_table(payload_shape=(2,),
+                       split_policy=HierarchicalSplitPolicy(int(120e6)))
+    t.upload([f"r{i:05d}" for i in range(n_rows)],
+             {"img": {"data": rng.normal(size=(n_rows, 2)).astype(np.float32)},
+              "idx": {"size": rng.integers(6e6, 20e6, n_rows)}})
+    nodes = [NodeSpec(i, cores=1, mips=1.0) for i in range(n_nodes)]
+    return t, Placement.from_strategy(t, nodes, "greedy")
+
+
+def part2_straggler():
+    print("=" * 64)
+    print("2. straggler mitigation (EWMA powers -> rebalance)")
+    print("=" * 64)
+    t, pl = build_placement()
+    sched = GridScheduler(pl, chunk_size=8, rebalance_threshold=0.25,
+                          min_rounds_between_rebalance=2)
+    print(f"  initial rows/node: {pl.node_row_counts()}")
+    for rnd in range(10):
+        times = {0: 1.0, 1: 1.0, 2: 1.0, 3: 3.0}  # node 3 is slow
+        ev = sched.observe_round(times)
+        if ev:
+            print(f"  round {rnd}: REBALANCE ({ev.reason}), moved "
+                  f"{len(ev.moved_regions)} regions, imbalance "
+                  f"{ev.imbalance_before:.2f} -> {ev.imbalance_after:.2f}")
+    print(f"  final rows/node:   {pl.node_row_counts()}  "
+          f"(node 3 deweighted)\n")
+
+
+def part3_failure_and_join():
+    print("=" * 64)
+    print("3. failure handling + elastic join")
+    print("=" * 64)
+    t, pl = build_placement()
+    sched = GridScheduler(pl, chunk_size=8)
+    print(f"  rows/node: {pl.node_row_counts()}")
+    ev = sched.handle_failure([2])
+    print(f"  node 2 died -> {len(ev.moved_regions)} regions adopted; "
+          f"rows/node now {pl.node_row_counts()}")
+    ev = sched.handle_join([NodeSpec(9, cores=1, mips=2.0)])
+    print(f"  fast node 9 joined -> {len(ev.moved_regions)} regions moved; "
+          f"rows/node now {pl.node_row_counts()}")
+    counts = pl.node_row_counts()
+    assert counts[9] == max(counts.values())
+    print("  (node 9, 2x faster, now holds the largest share)\n")
+
+
+if __name__ == "__main__":
+    part1_paper_balancer()
+    part2_straggler()
+    part3_failure_and_join()

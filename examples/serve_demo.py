@@ -1,0 +1,59 @@
+"""Serve a small model with batched requests: prefill + cached decode.
+
+Uses the same serve_step the decode dry-run cells lower.  Checks that
+greedy decoding through the cache matches teacher-forced logits.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = ModelConfig(
+        name="serve-demo", family="dense", n_layers=4, d_model=128,
+        n_heads=4, n_kv_heads=2, d_ff=512, vocab=1024,
+        remat_policy="none", dtype=jnp.float32, param_dtype=jnp.float32,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+
+    B, S_prompt, new = 4, 12, 24
+    prompts = np.asarray(
+        jax.random.randint(jax.random.key(1), (B, S_prompt), 0, cfg.vocab),
+        np.int32)
+    engine = ServeEngine(cfg, params, capacity=S_prompt + new + 1,
+                         batch_size=B)
+
+    import time
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, max_new_tokens=new)
+    dt = time.perf_counter() - t0
+    print(f"generated {B}x{new} tokens in {dt:.2f}s "
+          f"({B*new/dt:.0f} tok/s on CPU)")
+    for b in range(B):
+        print(f"  req {b}: {prompts[b].tolist()} -> {out.tokens[b].tolist()}")
+
+    # correctness: greedy decode must equal argmax of teacher-forced logits
+    full = np.concatenate([prompts, out.tokens], axis=1)
+    logits, _ = model.forward_train(params, jnp.asarray(full))
+    want = np.asarray(jnp.argmax(logits[:, S_prompt - 1:-1], axis=-1))
+    match = (want == out.tokens).mean()
+    print(f"teacher-forced agreement: {match*100:.1f}% "
+          f"({'OK' if match == 1.0 else 'MISMATCH'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Use case 3 end-to-end: age/sex-specific templates via the table scheme.
+
+Runs the paper's Table-3 queries against BOTH table schemes, showing the
+byte-accounting difference (index-only scan vs full image traversal), then
+computes the subset average on the mesh with locality preserved.
+
+    PYTHONPATH=src python examples/subset_query.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+import jax
+
+from repro.core.balancer import NodeSpec
+from repro.core.mapreduce import MapReduceEngine
+from repro.core.placement import Placement
+from repro.core.query import (
+    age_sex_predicate,
+    indexed_query,
+    mask_to_device_layout,
+    naive_query,
+)
+from repro.core.stats import MeanProgram
+from repro.core.table import ColumnSpec, make_naive_table
+from repro.data.pipeline import synthetic_image_population
+from repro.utils import make_mesh
+
+
+def main():
+    pop = synthetic_image_population(payload_shape=(6, 6, 6), scale=0.1)
+    naive = make_naive_table(
+        payload_shape=(6, 6, 6),
+        extra_index_columns=[ColumnSpec("age", (), np.float32),
+                             ColumnSpec("sex", (), np.int8)])
+    naive.upload([k.decode() for k in pop.keys],
+                 {"img": {"data": pop.column("img", "data"),
+                          "size": pop.column("idx", "size"),
+                          "age": pop.column("idx", "age"),
+                          "sex": pop.column("idx", "sex")}})
+    print(f"population: {pop.num_rows} subjects, "
+          f"{pop.total_bytes()/1e9:.2f} GB logical\n")
+
+    mesh = make_mesh((jax.device_count(),), ("data",))
+    D = mesh.shape["data"]
+    pl = Placement.from_strategy(
+        pop, [NodeSpec(i) for i in range(D)], "greedy")
+    vals, valid = pl.put_column(mesh, "img", "data", chunk_size=16)
+    row_ids, vl = pl.device_layout(chunk_size=16)
+    engine = MapReduceEngine(mesh)
+
+    for label, lo, hi, sex in [("female 20-40", 20, 40, 1),
+                               ("male >60", 60, None, 0),
+                               ("all female", None, None, 1)]:
+        pred = age_sex_predicate(lo, hi, sex)
+        m_p, st_p = indexed_query(pop, pred, ["age", "sex"])
+        m_n, st_n = naive_query(naive, pred, ["age", "sex"])
+        assert (m_p == m_n).all()
+
+        dm = mask_to_device_layout(m_p, row_ids, vl)
+        avg, stats = engine.run(
+            MeanProgram(), vals, valid, 16,
+            row_mask=jax.device_put(dm, pl.data_sharding(mesh)))
+        ref = pop.column("img", "data")[m_p].mean(axis=0)
+        err = float(np.abs(np.asarray(avg) - ref).max())
+
+        print(f"{label:14s} n={st_p.rows_selected:5d}")
+        print(f"  proposed scheme scanned {st_p.total_bytes_scanned:>14,} B "
+              f"(index only)")
+        print(f"  naive scheme scanned    {st_n.total_bytes_scanned:>14,} B "
+              f"({st_n.total_bytes_scanned/max(st_p.total_bytes_scanned,1):,.0f}x"
+              f" more — full image traversal)")
+        print(f"  subset template err vs numpy: {err:.2e}\n")
+
+
+if __name__ == "__main__":
+    main()

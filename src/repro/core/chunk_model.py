@@ -1,0 +1,251 @@
+"""The paper's chunk-size model — eq. (1)-(8) of §2.2, faithfully.
+
+Predicts wall-clock time (what the user experiences) and resource time
+(Σ busy time across nodes) for a MapReduce summary-statistic job as a function
+of the map-task chunk size η (images per map task), and finds the optimal η
+inside the validity window
+
+    η ∈ [ max(#img·SizeSmall/mem, #img/core),  mem/SizeBig ]          (paper §2.2)
+
+(lower bound: one map round across all cores + reduce-phase memory; upper
+bound: a chunk must fit in one machine's memory).
+
+Two parameterizations ship:
+
+- :data:`PAPER_PARAMS` — the paper's cluster (§2.4: 70 MB/s network, 100/65
+  MB/s disk R/W, 224 cores, SizeBig/Small/Gen = 20/6/21 MB, 5,153 images,
+  ``avgANTS(η) = 0.4η + 5`` s).  With these constants the model reproduces the
+  reported optimum η* in [50, 60] and the Fig. 4C/D trends.
+- :data:`TPU_V5E_PARAMS` — the TPU translation: disk→HBM (819 GB/s), network→
+  ICI (~50 GB/s/link), machine→chip (16 GB HBM); the compute kernel is
+  memory-bound streaming mean rather than ANTS.  This drives ColoGrid's chunk
+  auto-tuner at runtime.
+
+Notes on constants the paper leaves implicit:
+
+- ``alpha`` (unbuffered-map-output ratio) is never given a value; we default
+  to 0.25, which places the predicted optimum at η*≈59, inside the reported
+  [50, 60] band (any α∈[0,0.6] keeps η*∈[56,63] — the model is flat there).
+- ``mem`` is set to 3.2 GB so that the upper bound mem/SizeBig equals the 160
+  the paper assesses (their "4 GB per job" is a scheduler grant, not the
+  model's machine memory).
+- ``wt_init + wt_end`` (MapReduce job setup/teardown) defaults to 30 s, the
+  Hadoop-typical overhead visible as the Fig. 3 intercept.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+MB = 1e6
+GB = 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkModelParams:
+    """Table 2 of the paper, as a value type.  Sizes in bytes, rates in B/s."""
+
+    n_img: int                    # #img
+    size_big: float               # SizeBig  — max input file size (worst case)
+    size_small: float             # SizeSmall — min input file size (η bounds)
+    size_gen: float               # SizeGen  — max intermediate/output size
+    bandwidth: float              # cluster network bandwidth
+    v_disc_r: float               # local disk read B/s
+    v_disc_w: float               # local disk write B/s
+    mem: float                    # memory of one machine
+    core: int                     # total CPU cores of the cluster
+    alpha: float = 0.25           # unbuffered ratio of map outputs (spilled)
+    beta: float = 0.9             # rack-local (network-loaded) map-task ratio
+    wt_init: float = 15.0         # job initialization (s)
+    wt_end: float = 15.0          # job conclusion (s)
+    # avg_fn(η) — seconds to average η images on one core.  The paper's
+    # empirical worst case for ANTS AverageImages is 0.4η + 5.
+    avg_fn: Callable[[float], float] = lambda eta: 0.4 * eta + 5.0
+
+    # -- helper functions of Table 2 ------------------------------------
+
+    def disc_r(self, x: float) -> float:
+        return x / self.v_disc_r
+
+    def disc_w(self, x: float) -> float:
+        return x / self.v_disc_w
+
+    def bdw(self, x: float) -> float:
+        return x / self.bandwidth
+
+
+class ChunkModel:
+    """Evaluates eq. (1)-(8) and optimizes η."""
+
+    def __init__(self, params: ChunkModelParams):
+        self.p = params
+
+    # ------------------------------------------------------------------
+    # validity window (§2.2)
+    # ------------------------------------------------------------------
+
+    def eta_bounds(self) -> Tuple[int, int]:
+        p = self.p
+        lo = max(p.n_img * p.size_small / p.mem, p.n_img / p.core)
+        hi = p.mem / p.size_big
+        lo_i, hi_i = int(math.ceil(lo)), int(math.floor(hi))
+        if lo_i > hi_i:
+            raise ValueError(
+                f"empty η window [{lo:.1f}, {hi:.1f}] — cluster cannot run "
+                f"this dataset in one wave; add nodes or memory"
+            )
+        return lo_i, hi_i
+
+    # ------------------------------------------------------------------
+    # wall-clock time, eq. (1)-(4)
+    # ------------------------------------------------------------------
+
+    def wall_time(self, eta: int) -> Dict[str, float]:
+        p = self.p
+        n_job = p.n_img // eta                       # ⌊#img/η⌋ as in the paper
+
+        # eq. (2): the longest map task (worst case: all-big-image chunk;
+        # read local, possibly network-loaded, write intermediate, compute)
+        wt_map = (
+            p.disc_r(p.size_big * eta)
+            + p.bdw(p.size_big * eta)
+            + p.disc_w(p.size_big * eta)
+            + p.avg_fn(eta)
+        )
+        # eq. (3): worst-case shuffle — unbuffered outputs from disk, over
+        # the wire, spilled at the reducer
+        wt_shuffle = (
+            p.disc_r(p.size_gen)
+            + p.bdw(p.alpha * n_job * p.size_gen)
+            + p.disc_w(n_job * p.size_gen)
+        )
+        # eq. (4): reduce = average the #job intermediates + final I/O
+        wt_reduce = p.avg_fn(n_job) + p.disc_r(p.size_gen) + p.disc_w(p.size_gen)
+
+        total = p.wt_init + wt_map + wt_shuffle + wt_reduce + p.wt_end
+        return {
+            "init": p.wt_init, "map": wt_map, "shuffle": wt_shuffle,
+            "reduce": wt_reduce, "end": p.wt_end, "total": total,
+        }
+
+    # ------------------------------------------------------------------
+    # resource time, eq. (5)-(8)
+    # ------------------------------------------------------------------
+
+    def resource_time(self, eta: int) -> Dict[str, float]:
+        p = self.p
+        n_job = p.n_img // eta
+
+        # eq. (6): every image read+written once somewhere, the β rack-local
+        # fraction also crossing the network, plus all map computations
+        rt_map = (
+            p.disc_r(p.n_img * p.size_big)
+            + p.disc_w(p.n_img * p.size_big)
+            + p.bdw(p.beta * n_job * eta * p.size_big)
+            + n_job * p.avg_fn(eta)
+        )
+        # eq. (7): spills on both sides + full intermediate transfer + sink
+        rt_shuffle = (
+            p.alpha * n_job * (p.disc_w(p.size_gen) + p.disc_r(p.size_gen))
+            + p.bdw(n_job * p.size_gen)
+            + p.disc_w(n_job * p.size_gen)
+        )
+        # eq. (8) == eq. (4)
+        rt_reduce = p.avg_fn(n_job) + p.disc_r(p.size_gen) + p.disc_w(p.size_gen)
+
+        total = rt_map + rt_shuffle + rt_reduce
+        return {
+            "map": rt_map, "shuffle": rt_shuffle, "reduce": rt_reduce,
+            "total": total,
+        }
+
+    # ------------------------------------------------------------------
+    # optimizer
+    # ------------------------------------------------------------------
+
+    def optimal_eta(
+        self,
+        metric: str = "wall",
+        step: int = 1,
+        bounds: Optional[Tuple[int, int]] = None,
+    ) -> Tuple[int, float]:
+        """argmin over the validity window; returns ``(η*, predicted_time)``."""
+        lo, hi = bounds if bounds is not None else self.eta_bounds()
+        fn = self.wall_time if metric == "wall" else self.resource_time
+        best_eta, best_t = lo, float("inf")
+        for eta in range(lo, hi + 1, step):
+            t = fn(eta)["total"]
+            if t < best_t:
+                best_eta, best_t = eta, t
+        return best_eta, best_t
+
+    def sweep(self, etas) -> Dict[int, Dict[str, float]]:
+        return {
+            int(e): {
+                "wall": self.wall_time(int(e))["total"],
+                "resource": self.resource_time(int(e))["total"],
+            }
+            for e in etas
+        }
+
+
+# ----------------------------------------------------------------------
+# Shipped parameterizations
+# ----------------------------------------------------------------------
+
+#: The paper's cluster (§2.4) — reproduces Fig. 4C/D and η* ∈ [50, 60].
+PAPER_PARAMS = ChunkModelParams(
+    n_img=5153,
+    size_big=20 * MB,
+    size_small=6 * MB,
+    size_gen=21 * MB,
+    bandwidth=70 * MB,
+    v_disc_r=100 * MB,
+    v_disc_w=65 * MB,
+    mem=3.2 * GB,                 # makes mem/SizeBig = 160, the paper's bound
+    core=224,
+)
+
+
+def tpu_chunk_params(
+    n_img: int,
+    row_bytes: float,
+    n_devices: int,
+    hbm_bytes: float = 16 * GB,
+    hbm_bw: float = 819e9,
+    ici_bw: float = 50e9,
+    flops: float = 197e12,
+) -> ChunkModelParams:
+    """TPU v5e translation of Table 2 (see DESIGN.md §2).
+
+    disk → HBM, network → ICI, machine → chip.  The per-chunk compute is a
+    memory-bound streaming mean: ``avg(η) ≈ η·row_bytes / HBM_bw`` plus a
+    fixed kernel-dispatch overhead; the MXU term is negligible for adds.
+    """
+    dispatch = 5e-6  # per-chunk kernel launch/loop overhead (s)
+
+    def avg_fn(eta: float) -> float:
+        return eta * row_bytes / hbm_bw + dispatch
+
+    return ChunkModelParams(
+        n_img=n_img,
+        size_big=row_bytes,
+        size_small=row_bytes,
+        size_gen=row_bytes,
+        bandwidth=ici_bw,
+        v_disc_r=hbm_bw,
+        v_disc_w=hbm_bw,
+        mem=hbm_bytes * 0.5,      # stats may only claim half of HBM
+        core=n_devices,
+        alpha=0.0,                # no spill: partials live in HBM
+        beta=0.0,                 # colocated: no network loads in map
+        wt_init=1e-3,             # dispatch, not a JVM job launch
+        wt_end=1e-3,
+        avg_fn=avg_fn,
+    )
+
+
+#: A representative TPU parameterization (5,153 rows of 20 MB on 256 chips).
+TPU_V5E_PARAMS = tpu_chunk_params(n_img=5153, row_bytes=20 * MB, n_devices=256)

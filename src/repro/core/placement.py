@@ -1,0 +1,201 @@
+"""Placement — region→device maps realized as JAX sharded layouts.
+
+The balancer decides *which node owns which region*; this module turns that
+decision into something XLA can execute.  SPMD requires equal per-device array
+shards, so (exactly like the paper, which moves uniform *regions* rather than
+bytes) heterogeneity is expressed as **different numbers of row slots per
+device filled**: the table's rows are gathered into a ``[devices, capacity,
+...]`` layout (rowkey order preserved within a device), padded with a validity
+mask, and sharded along the mesh's ``data`` axis.  Map tasks then iterate
+device-local chunks; the mask keeps the lockstep SPMD program correct while
+devices carry different amounts of real work — the schedule is where the
+imbalance lives, not the array type.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.balancer import (
+    Allocation,
+    NodeSpec,
+    balanced_allocation,
+    central_allocation,
+    greedy_allocation,
+    node_loads,
+)
+from repro.core.table import TensorTable
+
+
+@dataclasses.dataclass
+class Placement:
+    """A realized region→node assignment over a table."""
+
+    table: TensorTable
+    nodes: Tuple[NodeSpec, ...]
+    alloc: Allocation  # region id -> node id
+
+    # ------------------------------------------------------------------
+    # constructors
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_strategy(
+        cls,
+        table: TensorTable,
+        nodes: Sequence[NodeSpec],
+        strategy: str = "greedy",
+    ) -> "Placement":
+        region_bytes = table.region_bytes()
+        if strategy == "greedy":
+            alloc = greedy_allocation(region_bytes, nodes)
+        elif strategy == "balanced":
+            alloc = balanced_allocation(region_bytes, nodes)
+        elif strategy == "central":
+            alloc = central_allocation(region_bytes, nodes)
+        else:
+            raise ValueError(f"unknown strategy {strategy!r}")
+        return cls(table, tuple(nodes), alloc)
+
+    # ------------------------------------------------------------------
+    # bookkeeping
+    # ------------------------------------------------------------------
+
+    def apply_splits(self) -> None:
+        """Children of a split region inherit the parent's node (HBase
+        keeps daughters on the same region server until a balancer run)."""
+        for parent, left, right in self.table.split_log:
+            if parent.rid in self.alloc:
+                nid = self.alloc.pop(parent.rid)
+                self.alloc[left.rid] = nid
+                self.alloc[right.rid] = nid
+        self.table.split_log.clear()
+        # adopt any regions still missing (e.g. created before this placement)
+        for r in self.table.regions:
+            if r.rid not in self.alloc:
+                self.alloc[r.rid] = self.nodes[0].node_id
+
+    def node_bytes(self) -> Dict[int, float]:
+        return node_loads(self.alloc, self.table.region_bytes(), self.nodes)
+
+    def rows_for_node(self, node_id: int) -> np.ndarray:
+        """Positional row indices owned by ``node_id``, in rowkey order."""
+        keys = self.table.keys
+        pieces: List[np.ndarray] = []
+        for region in self.table.regions:
+            if self.alloc.get(region.rid) == node_id:
+                s = region.row_slice(keys)
+                pieces.append(np.arange(s.start, s.stop, dtype=np.int64))
+        if not pieces:
+            return np.empty((0,), dtype=np.int64)
+        return np.sort(np.concatenate(pieces))
+
+    def node_row_counts(self) -> Dict[int, int]:
+        counts = {n.node_id: 0 for n in self.nodes}
+        rc = self.table.region_row_counts()
+        for rid, nid in self.alloc.items():
+            counts[nid] += rc.get(rid, 0)
+        return counts
+
+    # ------------------------------------------------------------------
+    # device layouts
+    # ------------------------------------------------------------------
+
+    def device_layout(
+        self, capacity: Optional[int] = None, chunk_size: int = 1
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """``(row_ids[D, C], valid[D, C])`` with ``C`` a chunk_size multiple.
+
+        ``row_ids`` holds positional indices into the table's row order
+        (0 where padded); ``valid`` marks real slots.  ``capacity`` defaults
+        to the maximum per-node row count, rounded up to ``chunk_size``.
+        """
+        per_node = [self.rows_for_node(n.node_id) for n in self.nodes]
+        need = max((len(p) for p in per_node), default=0)
+        cap = capacity if capacity is not None else need
+        if cap < need:
+            raise ValueError(f"capacity {cap} < max per-node rows {need}")
+        cap = max(chunk_size, -(-cap // chunk_size) * chunk_size)
+        D = len(self.nodes)
+        row_ids = np.zeros((D, cap), dtype=np.int64)
+        valid = np.zeros((D, cap), dtype=bool)
+        for d, rows in enumerate(per_node):
+            row_ids[d, : len(rows)] = rows
+            valid[d, : len(rows)] = True
+        return row_ids, valid
+
+    def gather_column(
+        self,
+        family: str,
+        qualifier: str,
+        capacity: Optional[int] = None,
+        chunk_size: int = 1,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Materialize a column in device layout: ``values[D, C, ...], valid``."""
+        row_ids, valid = self.device_layout(capacity, chunk_size)
+        col = self.table.column(family, qualifier)
+        values = col[row_ids]          # padded slots read row 0; masked off
+        values = np.where(
+            valid.reshape(valid.shape + (1,) * (values.ndim - 2)), values, 0
+        )
+        return values, valid
+
+    @staticmethod
+    def data_sharding(mesh: Mesh, data_axis: str = "data") -> NamedSharding:
+        """Sharding for ``[D, C, ...]`` layouts: leading dim over ``data``.
+
+        When the mesh has extra axes (pod/model) the layout is replicated
+        over them — map tasks are a data-axis concern.
+        """
+        return NamedSharding(mesh, P(data_axis))
+
+    def put_column(
+        self,
+        mesh: Mesh,
+        family: str,
+        qualifier: str,
+        data_axis: str = "data",
+        capacity: Optional[int] = None,
+        chunk_size: int = 1,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Device-put a column with colocation: shard d ↔ node d's rows."""
+        values, valid = self.gather_column(family, qualifier, capacity, chunk_size)
+        D = mesh.shape[data_axis]
+        if len(self.nodes) != D:
+            raise ValueError(
+                f"placement has {len(self.nodes)} nodes but mesh axis "
+                f"{data_axis!r} has {D} devices"
+            )
+        sh = self.data_sharding(mesh, data_axis)
+        return jax.device_put(values, sh), jax.device_put(valid, sh)
+
+    # ------------------------------------------------------------------
+    # schedule / diagnostics
+    # ------------------------------------------------------------------
+
+    def rounds(self, chunk_size: int) -> int:
+        """SPMD map rounds = chunks on the busiest device (the wall clock)."""
+        counts = self.node_row_counts().values()
+        return max((-(-c // chunk_size) for c in counts), default=0)
+
+    def total_chunks(self, chunk_size: int) -> int:
+        """Σ real chunks (the resource clock; ≙ the paper's #job)."""
+        return sum(-(-c // chunk_size) for c in self.node_row_counts().values() if c)
+
+    def describe(self) -> str:
+        nb = self.node_bytes()
+        rc = self.node_row_counts()
+        lines = [f"Placement over {len(self.nodes)} nodes, "
+                 f"{len(self.table.regions)} regions, {self.table.num_rows} rows"]
+        for n in self.nodes:
+            lines.append(
+                f"  node {n.node_id:4d} power={n.power:8.1f} "
+                f"rows={rc[n.node_id]:6d} bytes={nb[n.node_id]:.3e}"
+            )
+        return "\n".join(lines)

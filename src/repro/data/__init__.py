@@ -1,0 +1,11 @@
+from repro.data.pipeline import (
+    ColocatedTokenDataset,
+    synthetic_token_table,
+    synthetic_image_population,
+)
+
+__all__ = [
+    "ColocatedTokenDataset",
+    "synthetic_token_table",
+    "synthetic_image_population",
+]

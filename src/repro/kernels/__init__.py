@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for ColoGrid's compute hot-spots.
+
+Three kernels, each with ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (jit'd public wrapper, shape plumbing, interpret-mode
+switch) and ``ref.py`` (pure-jnp oracle used by the allclose sweeps):
+
+- ``streaming_stats``  — the paper's map-task hot loop: masked streaming
+  sum/count (+ second moment) over a chunk of image rows (ANTS
+  AverageImages analogue, HBM-bandwidth-bound);
+- ``flash_attention``  — blockwise softmax attention forward (training /
+  prefill path of the LM workloads);
+- ``ssm_scan``         — chunked SSD recurrence (mamba2 / zamba2 / long
+  context decode).
+
+CPU container note: kernels are TARGETED at TPU (tile sizes chosen for
+VMEM and the 128×128 MXU) and VALIDATED here with ``interpret=True``.
+"""

@@ -1,0 +1,142 @@
+"""Pallas kernel: blockwise (flash) attention forward with causal / SWA mask.
+
+Online-softmax over KV blocks: for each (batch·head, q-block) the kernel
+sweeps KV blocks (innermost sequential grid dim), keeping the running max
+``m``, normalizer ``l`` and the unnormalized accumulator in fp32 VMEM
+scratch.  GQA is folded in through the K/V BlockSpec index maps (query head
+h reads KV head ``h // group``) so grouped heads never materialize
+broadcast K/V in HBM.
+
+Tile sizes: 128×128 q/kv blocks match the MXU; with head_dim 128 the live
+VMEM per step is q(64KB) + k(64KB) + v(64KB) + acc(64KB fp32) + O(16KB)
+softmax state — comfortably inside the ~16MB/core VMEM with double
+buffering.  Causal masking skips fully-masked KV blocks via the grid's
+upper bound only in the XLA wrapper; inside the kernel, partially-masked
+blocks apply the position mask.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, block_q: int,
+                  block_k: int, seq_len: int):
+    """One (bh, q_block, kv_block) cell.
+
+    q_ref [1, BQ, D]; k_ref/v_ref [1, BK, D]; o_ref [1, BQ, D];
+    scratch: m/l [BQ, 1] fp32, acc [BQ, D] fp32.
+    """
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)                 # [BQ, D]
+        k = k_ref[0].astype(jnp.float32)                 # [BK, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [BQ, BK]
+
+        ok = k_pos < seq_len
+        if causal:
+            ok &= k_pos <= q_pos
+            if window > 0:
+                ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # [BQ, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                           # [BQ, BK]
+        correction = jnp.exp(m_prev - m_new)             # [BQ, 1]
+        l_ref[...] = l_ref[...] * correction + p.sum(axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                 # [BK, D]
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [BQ, D]
+        acc_ref[...] = acc_ref[...] * correction + pv
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks entirely above the diagonal (no valid k <= q there)
+        first_q = qi * block_q
+        first_k = kj * block_k
+        pl.when(first_k <= first_q + block_q - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,          # [BH, Sq, D]   (batch*heads flattened)
+    k: jax.Array,          # [BHkv, Skv, D]
+    v: jax.Array,          # [BHkv, Skv, D]
+    group: int,            # q heads per kv head
+    n_heads: int,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,       # 0 = no sliding window
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    kv_len: int = 0,       # true (unpadded) kv length; 0 = full
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    true_kv = kv_len if kv_len > 0 else Skv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    grid = (BH, Sq // bq, Skv // bk)
+
+    def kv_index(bh, qi, kj):
+        # query stream bh = b * n_heads + h reads kv stream b * n_kv + h//group
+        b = bh // n_heads
+        h = bh % n_heads
+        n_kv = n_heads // group
+        return (b * n_kv + h // group, kj, 0)
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, seq_len=true_kv,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # normalizer l
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Public flash-attention op: [B,H,S,D] layout, GQA, padding, impl switch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "causal", "window", "impl", "interpret"))
+def flash_attention(
+    q: jax.Array,          # [B, H, Sq, D]
+    k: jax.Array,          # [B, Hkv, Skv, D]
+    v: jax.Array,          # [B, Hkv, Skv, D]
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    impl: str = "pallas",
+    interpret: bool = True,
+) -> jax.Array:
+    if impl == "ref":
+        return attention_ref(q, k, v, scale, causal, window)
+    B, H, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = H // Hkv
+
+    # pad sequence dims to 128-multiples; padded KV is masked by seq_len,
+    # padded Q rows are sliced away
+    pq = -Sq % min(128, max(Sq, 8))
+    pk = -Skv % min(128, max(Skv, 8))
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+
+    out = flash_attention_pallas(
+        qp.reshape(B * H, Sq + pq, D),
+        kp.reshape(B * Hkv, Skv + pk, D),
+        vp.reshape(B * Hkv, Skv + pk, D),
+        group=group,
+        n_heads=H,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=min(128, Sq + pq),
+        block_k=min(128, Skv + pk),
+        kv_len=Skv,
+        interpret=interpret,
+    )
+    out = out.reshape(B, H, Sq + pq, D)
+    return out[:, :, :Sq] if pq else out

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for flash attention (naive softmax attention)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,          # [B, H, Sq, D]
+    k: jax.Array,          # [B, Hkv, Skv, D]
+    v: jax.Array,          # [B, Hkv, Skv, D]
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    qg = q.reshape(B, Hkv, group, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) * scale
+    if causal:
+        q_pos = jnp.arange(Sq)[:, None]
+        k_pos = jnp.arange(k.shape[2])[None, :]
+        ok = k_pos <= q_pos
+        if window > 0:
+            ok = ok & (k_pos > q_pos - window)
+        s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, vf)
+    return out.reshape(B, H, Sq, D).astype(q.dtype)

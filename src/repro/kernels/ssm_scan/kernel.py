@@ -1,0 +1,117 @@
+"""Pallas kernel: chunked SSD (mamba2) scan with VMEM-resident state.
+
+One grid stream per (batch·head); the chunk index is the innermost
+(sequential) grid dim, so the ``[P, N]`` recurrent state lives in fp32 VMEM
+scratch across the whole sequence — HBM sees each input tile exactly once
+and never sees the state.  Per chunk the kernel does the SSD decomposition:
+
+    y_intra = (C·Bᵀ ⊙ L) x          (masked decay matmul, MXU)
+    y_inter = decay_in ⊙ (C · Sᵀ)   (carried state)
+    S      ← chunk_decay · S + (x · decay_out)ᵀ B
+
+Chunk Q=128 and P=64/N=64 (mamba2's dims) give MXU-aligned [128,128]·[128,64]
+products and a 16 KiB state — the working set per step is ~200 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, s_out_ref, state_ref, *,
+                chunk: int):
+    """x [1,Q,P], a [1,Q,1], b/c [1,Q,N]; y [1,Q,P]; s_out [1,P,N];
+    scratch state [P,N] fp32."""
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # [Q, P]
+    a = a_ref[0].astype(jnp.float32)          # [Q, 1]
+    Bm = b_ref[0].astype(jnp.float32)         # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)         # [Q, N]
+
+    la = jnp.log(jnp.maximum(a, 1e-20))       # [Q, 1]
+    cum = jnp.cumsum(la, axis=0)              # [Q, 1] inclusive
+    # intra-chunk decay L[i,j] = exp(cum_i - cum_j), i >= j (mask pre-exp)
+    seg = cum - cum.reshape(1, chunk)         # [Q, Q]
+    i_ge_j = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    Lmat = jnp.exp(jnp.where(i_ge_j, seg, NEG_INF))
+
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q,Q]
+    y = jax.lax.dot_general(cb * Lmat, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q,P]
+
+    # carried state contribution: decay_in[i] * C_i · S  (S [P,N])
+    decay_in = jnp.exp(cum)                   # [Q, 1]
+    s_t = state_ref[...]
+    y += decay_in * jax.lax.dot_general(
+        Cm, s_t, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)   # [Q,N]x[P,N] -> [Q,P]
+
+    # state update: S = chunk_decay * S + (x * decay_out)^T B
+    decay_out = jnp.exp(cum[chunk - 1] - cum) # [Q, 1]
+    s_in = jax.lax.dot_general(
+        x * decay_out, Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)   # [P, N]
+    chunk_decay = jnp.exp(cum[chunk - 1])     # [1]
+    state_ref[...] = s_t * chunk_decay + s_in
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _emit_state():
+        s_out_ref[0] = state_ref[...].astype(s_out_ref.dtype)
+
+
+def ssd_scan_pallas(
+    x: jax.Array,          # [BH, L, P]   (dt folded in)
+    a: jax.Array,          # [BH, L]      per-step decay
+    Bm: jax.Array,         # [BH, L, N]   (already broadcast per head-stream)
+    Cm: jax.Array,         # [BH, L, N]
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+):
+    """-> (y [BH,L,P], final_state [BH,P,N]) — zero initial state."""
+    BH, L, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    grid = (BH, L // Q)
+    a3 = a.reshape(BH, L, 1)
+
+    y, s = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, c: (bh, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, P, N), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, L, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, a3, Bm, Cm)
+    return y, s

@@ -1,0 +1,47 @@
+"""Public SSD-scan op: model-layout plumbing + impl switch."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import DEFAULT_CHUNK, ssd_scan_pallas
+from repro.kernels.ssm_scan.ref import ssd_scan_sequential
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def ssd_scan(
+    x: jax.Array,          # [B, L, H, P]  (dt folded in, model layout)
+    a: jax.Array,          # [B, L, H]
+    Bm: jax.Array,         # [B, L, N]     (shared across heads)
+    Cm: jax.Array,         # [B, L, N]
+    chunk: int = DEFAULT_CHUNK,
+    impl: str = "pallas",
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """-> (y [B,L,H,P], final_state [B,H,P,N]); zero initial state."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    # head-major streams: [B*H, L, *]
+    xs = jnp.moveaxis(x, 2, 1).reshape(B * H, L, P)
+    as_ = jnp.moveaxis(a, 2, 1).reshape(B * H, L)
+    Bs = jnp.broadcast_to(Bm[:, None], (B, H, L, N)).reshape(B * H, L, N)
+    Cs = jnp.broadcast_to(Cm[:, None], (B, H, L, N)).reshape(B * H, L, N)
+
+    if impl == "ref":
+        y, s = ssd_scan_sequential(xs, as_, Bs, Cs)
+    else:
+        Q = min(chunk, L)
+        pad = -L % Q
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+            as_ = jnp.pad(as_, ((0, 0), (0, pad)), constant_values=1.0)
+            Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+            Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+        y, s = ssd_scan_pallas(xs, as_, Bs, Cs, chunk=Q, interpret=interpret)
+        y = y[:, :L]
+    y = jnp.moveaxis(y.reshape(B, H, L, P), 1, 2)
+    return y, s.reshape(B, H, P, N)

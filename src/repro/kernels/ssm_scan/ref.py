@@ -1,0 +1,32 @@
+"""Oracle for the SSD scan kernel: the sequential recurrence, plus a
+re-export of the model's chunked-jnp implementation (itself scan-verified)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked_ref  # noqa: F401  (second oracle)
+
+
+def ssd_scan_sequential(x, a, Bm, Cm):
+    """Literal per-step recurrence: x [BH,L,P], a [BH,L], B/C [BH,L,N]
+    -> (y [BH,L,P], final_state [BH,P,N])."""
+    BH, L, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(s, inp):
+        x_t, a_t, b_t, c_t = inp                     # [BH,P],[BH],[BH,N],[BH,N]
+        s = s * a_t[:, None, None] + jnp.einsum("bp,bn->bpn", x_t, b_t)
+        y = jnp.einsum("bn,bpn->bp", c_t, s)
+        return s, y
+
+    s0 = jnp.zeros((BH, P, N), jnp.float32)
+    inputs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Cm.astype(jnp.float32), 1, 0),
+    )
+    s_fin, ys = jax.lax.scan(step, s0, inputs)
+    return jnp.moveaxis(ys, 0, 1), s_fin

@@ -1,0 +1,93 @@
+"""Pallas kernel: masked streaming sum / sum-of-squares over image rows.
+
+This is the map-task hot loop of the paper's §2.2 workload (ANTS
+AverageImages): fold η images of F features into ``(Σx, Σx², count)``.
+The op is memory-bound (1 FLOP per 2 bytes read), so the kernel's job is
+pure bandwidth: stream HBM→VMEM tiles once, accumulate in fp32 VMEM.
+
+Tiling: grid ``(F // BF, R // BR)`` — feature tiles outer, row blocks inner
+(the innermost grid dim is sequential on TPU), so each feature tile's fp32
+accumulator lives in the *output* VMEM block across the row sweep and is
+initialized at row-block 0.  ``BF = 512`` lanes (4 × 128-lane vregs),
+``BR = 256`` rows keeps the input tile at 512 KiB (bf16) — well under VMEM
+while long enough to amortize the HBM latency.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+DEFAULT_BLOCK_FEATURES = 512
+
+
+def _stats_kernel(x_ref, mask_ref, sum_ref, sq_ref, cnt_ref):
+    """One (feature-tile, row-block) cell.
+
+    x_ref    [BR, BF]  input tile (any float dtype)
+    mask_ref [BR, 1]   row validity (float 0/1)
+    sum_ref  [1, BF]   fp32 accumulator (revisited across row blocks)
+    sq_ref   [1, BF]   fp32 accumulator
+    cnt_ref  [1, 1]    fp32 accumulator
+    """
+    j = pl.program_id(1)  # row-block index (innermost, sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    m = mask_ref[...].astype(jnp.float32)          # [BR, 1]
+    xm = x * m
+    sum_ref[...] += jnp.sum(xm, axis=0, keepdims=True)
+    sq_ref[...] += jnp.sum(xm * x, axis=0, keepdims=True)
+    cnt_ref[...] += jnp.sum(m, keepdims=True)
+
+
+def streaming_stats_pallas(
+    x: jax.Array,          # [R, F]
+    mask: jax.Array,       # [R] bool/float
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_features: int = DEFAULT_BLOCK_FEATURES,
+    interpret: bool = False,
+):
+    """-> (sum [F] fp32, sumsq [F] fp32, count [] fp32).
+
+    R and F are padded to block multiples by the ops wrapper.
+    """
+    R, F = x.shape
+    br = min(block_rows, R)
+    bf = min(block_features, F)
+    assert R % br == 0 and F % bf == 0, (R, F, br, bf)
+    grid = (F // bf, R // br)
+
+    m2 = mask.reshape(R, 1).astype(jnp.float32)
+
+    sums, sqs, cnt = pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bf), lambda i, j: (j, i)),
+            pl.BlockSpec((br, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bf), lambda i, j: (0, i)),
+            pl.BlockSpec((1, bf), lambda i, j: (0, i)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, F), jnp.float32),
+            jax.ShapeDtypeStruct((1, F), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, m2)
+    # cnt block is shared across feature tiles: each tile's j==0 resets it
+    # and its row sweep re-accumulates, so the final value is exact.
+    return sums[0], sqs[0], cnt[0, 0]

@@ -1,0 +1,75 @@
+"""Public op: masked streaming stats over a chunk of rows.
+
+Handles arbitrary row shapes (flattens features), pads to tile multiples
+(mask-padded rows contribute zero), dispatches to the Pallas kernel (or the
+jnp reference when ``impl='ref'``), and exposes a MapReduce program so the
+engine's map phase can run on the kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapreduce import MapReduceProgram
+from repro.kernels.streaming_stats.kernel import (
+    DEFAULT_BLOCK_FEATURES,
+    DEFAULT_BLOCK_ROWS,
+    streaming_stats_pallas,
+)
+from repro.kernels.streaming_stats.ref import streaming_stats_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def streaming_stats(
+    rows: jax.Array,       # [R, *feature_shape]
+    mask: jax.Array,       # [R]
+    impl: str = "pallas",
+    interpret: bool = True,   # CPU container: interpret by default
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (sum, sumsq, count); sum/sumsq have the row's feature shape."""
+    R = rows.shape[0]
+    fshape = rows.shape[1:]
+    x = rows.reshape(R, -1)
+    F = x.shape[1]
+    if impl == "ref":
+        s, sq, c = streaming_stats_ref(x, mask)
+        return s.reshape(fshape), sq.reshape(fshape), c
+
+    br = min(DEFAULT_BLOCK_ROWS, max(8, R))
+    bf = min(DEFAULT_BLOCK_FEATURES, max(128, F))
+    pr = -R % br
+    pf = -F % bf
+    if pr or pf:
+        x = jnp.pad(x, ((0, pr), (0, pf)))
+        mask = jnp.pad(mask.astype(jnp.float32), ((0, pr),))
+    s, sq, c = streaming_stats_pallas(x, mask, br, bf, interpret=interpret)
+    if pf:
+        s, sq = s[:F], sq[:F]
+    return s.reshape(fshape), sq.reshape(fshape), c
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelMeanProgram(MapReduceProgram):
+    """MeanProgram with the Pallas kernel as the map-phase fold."""
+
+    interpret: bool = True
+    additive = True
+
+    def zero(self, row_shape, dtype):
+        return {"sum": jnp.zeros(row_shape, jnp.float32),
+                "count": jnp.zeros((), jnp.float32)}
+
+    def map_chunk(self, rows, valid):
+        s, _, c = streaming_stats(rows, valid, interpret=self.interpret)
+        return {"sum": s, "count": c}
+
+    def merge(self, a, b):
+        return jax.tree.map(jnp.add, a, b)
+
+    def finalize(self, p):
+        return p["sum"] / jnp.maximum(p["count"], 1)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the streaming-stats kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def streaming_stats_ref(x: jax.Array, mask: jax.Array):
+    """x [R, F], mask [R] -> (sum [F], sumsq [F], count []) in fp32."""
+    xf = x.astype(jnp.float32)
+    m = mask.astype(jnp.float32)[:, None]
+    xm = xf * m
+    return xm.sum(0), (xm * xf).sum(0), m.sum()

@@ -1,0 +1,150 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration driver for the hillclimb cells (§Perf methodology).
+
+Measures one (arch × shape) cell on the single-pod mesh under config /
+sharding-rule overrides, with the same probe-corrected accounting as the
+dry-run.  Results cached to artifacts/perf/<arch>__<shape>__<tag>.json.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch llama3_405b \
+        --shape train_4k --tag chunked_attn \
+        --set attention_impl=chunked
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.probes import corrected, make_probe_plan
+from repro.launch.roofline import derive_terms, model_flops
+from repro.launch.shapes import SHAPES, input_specs
+from repro.launch import steps as steps_mod
+from repro.launch.dryrun import compile_cell
+
+
+def apply_overrides(cfg, overrides: Dict[str, str]):
+    moe_fields = {f.name for f in dataclasses.fields(type(cfg.moe))} \
+        if cfg.moe else set()
+    kw = {}
+    for key, val in overrides.items():
+        if key in moe_fields:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, **{key: _conv(val)}))
+        else:
+            kw[key] = _conv(val)
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _conv(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "false"):
+        return v == "true"
+    return v
+
+
+def measure(arch: str, shape: str, tag: str,
+            overrides: Optional[Dict[str, str]] = None,
+            rules_overrides: Optional[Dict[str, tuple]] = None,
+            out_dir: str = "artifacts/perf", force: bool = False) -> Dict:
+    path = os.path.join(out_dir, f"{arch}__{shape}__{tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = apply_overrides(get_config(arch), overrides or {})
+    mesh = make_production_mesh()
+    spec = SHAPES[shape]
+
+    # rule overrides hook into the single resolution point
+    orig_rules_for = steps_mod.rules_for
+    if rules_overrides:
+        def patched(kind, fsdp=True):
+            r = dict(orig_rules_for(kind, fsdp))
+            r.update(rules_overrides)
+            return r
+        steps_mod.rules_for = patched
+    try:
+        t0 = time.perf_counter()
+        main = compile_cell(cfg, shape, mesh, spec.kind)
+        probe_a, probe_bs = make_probe_plan(cfg)
+        a = compile_cell(probe_a, shape, mesh, spec.kind)
+        bs = [(pb, compile_cell(pb.cfg, shape, mesh, spec.kind))
+              for pb in probe_bs]
+        corr = corrected(a, bs)
+    finally:
+        steps_mod.rules_for = orig_rules_for
+
+    terms = derive_terms(corr["flops"], corr["bytes"], corr["wire_bytes"])
+    mf = model_flops(cfg, spec)
+    mem = main["memory"]
+    per_dev = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               - mem.get("alias_size_in_bytes", 0))
+    record = {
+        "arch": arch, "shape": shape, "tag": tag,
+        "overrides": overrides or {},
+        "rules_overrides": {k: list(v) for k, v in
+                            (rules_overrides or {}).items()},
+        "per_device_bytes": per_dev,
+        "fits_v5e": bool(per_dev < 16e9),
+        "corrected": {k: corr[k] for k in ("flops", "bytes", "wire_bytes")},
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "bound_s": terms.bound_s,
+            "compute_fraction": terms.compute_fraction(),
+            "useful_flops_ratio": (mf / mesh.size) / max(corr["flops"], 1e-30),
+        },
+        "wall_s": round(time.perf_counter() - t0, 1),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def show(rec: Dict):
+    r = rec["roofline"]
+    print(f"{rec['arch']} {rec['shape']} [{rec['tag']}]: "
+          f"dom={r['dominant']} comp={r['compute_s']:.3g}s "
+          f"mem={r['memory_s']:.3g}s coll={r['collective_s']:.3g}s "
+          f"frac={r['compute_fraction']:.3f} "
+          f"temp={rec['per_device_bytes']/1e9:.1f}GB fits={rec['fits_v5e']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (moe fields auto-nested)")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="rules override name=axis1+axis2 (or empty)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+    rules = {}
+    for kv in args.rule:
+        name, axes = kv.split("=", 1)
+        rules[name] = tuple(a for a in axes.split("+") if a)
+    rec = measure(args.arch, args.shape, args.tag, overrides, rules,
+                  force=args.force)
+    show(rec)
+
+
+if __name__ == "__main__":
+    main()

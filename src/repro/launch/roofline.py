@@ -1,0 +1,129 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (v5e constants):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = wire_bytes_per_device / ICI_bw
+
+``cost_analysis()`` supplies flops/bytes of the per-partition module;
+collective bytes are parsed from the post-SPMD HLO text (cost_analysis does
+not count them): per-device wire bytes ≈ Σ op_output_bytes × factor, with
+the ring factors {all-reduce: 2, all-gather/reduce-scatter/all-to-all/
+collective-permute: 1}.  Cross-pod (DCN) collectives are split out by
+replica-group size when detectable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 6.25e9          # ~50 Gb/s/host effective for cross-pod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "e4m3": 1, "e5m2": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# e.g. "  %x = f32[8,128]{1,0} all-reduce(...)" or tuple-typed ops
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """-> {'wire_bytes': per-device Σ bytes×factor, 'by_op': {...},
+    'count': N}."""
+    by_op: Dict[str, float] = {}
+    count = 0
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(type_str) * _COLLECTIVE_FACTOR[op]
+        by_op[op] = by_op.get(op, 0.0) + b
+        count += 1
+    return {
+        "wire_bytes": float(sum(by_op.values())),
+        "by_op": by_op,
+        "count": count,
+    }
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def compute_fraction(self) -> float:
+        """Fraction of roofline: useful-compute time over the binding term."""
+        return self.compute_s / max(self.bound_s, 1e-30)
+
+
+def derive_terms(
+    flops: float,
+    bytes_accessed: float,
+    wire_bytes: float,
+) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=bytes_accessed / HBM_BW,
+        collective_s=wire_bytes / ICI_BW,
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        wire_bytes_per_device=wire_bytes,
+    )
+
+
+def model_flops(cfg, shape_spec, n_tokens: Optional[int] = None) -> float:
+    """6·N·D (training) / 2·N·D (inference fwd) with N = active params."""
+    n_active = cfg.active_param_count()
+    if n_tokens is None:
+        n_tokens = shape_spec.global_batch * (
+            1 if shape_spec.kind == "decode" else shape_spec.seq_len)
+    mult = 6.0 if shape_spec.kind == "train" else 2.0
+    return mult * n_active * n_tokens

@@ -1,0 +1,95 @@
+"""Assigned input shapes and their ShapeDtypeStruct stand-ins.
+
+Four cells per LM architecture:
+
+    train_4k      seq_len=4096    global_batch=256   lowers train_step
+    prefill_32k   seq_len=32768   global_batch=32    lowers prefill
+    decode_32k    seq_len=32768   global_batch=128   lowers serve_step
+    long_500k     seq_len=524288  global_batch=1     lowers serve_step
+                                  (SSM/hybrid/windowed archs only)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — no device
+allocation ever happens for the full configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import build_model, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str               # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """-> (runs?, reason-if-skipped).  See DESIGN.md §Arch-applicability."""
+    spec = SHAPES[shape]
+    if spec.name == "long_500k" and not cfg.runs_long_context:
+        return False, ("pure full-attention arch: 500k decode cache is "
+                       "eligible only for SSM/hybrid/windowed archs")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step."""
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+
+    if spec.kind == "train":
+        if cfg.is_encdec:
+            return {
+                "frames": _sds((B, cfg.encoder.n_frames, cfg.d_model), cfg.dtype),
+                "tokens": _sds((B, S), jnp.int32),
+            }
+        if cfg.family == "vlm":
+            # frontend stub: precomputed patch/text embeddings + M-RoPE ids
+            return {
+                "embeds": _sds((B, S, cfg.d_model), cfg.dtype),
+                "positions": _sds((B, 3, S), jnp.int32),
+                "targets": _sds((B, S), jnp.int32),
+            }
+        return {"tokens": _sds((B, S), jnp.int32)}
+
+    if spec.kind == "prefill":
+        if cfg.is_encdec:
+            return {
+                "frames": _sds((B, cfg.encoder.n_frames, cfg.d_model), cfg.dtype),
+                "tokens": _sds((B, S), jnp.int32),
+            }
+        if cfg.family == "vlm":
+            return {
+                "embeds": _sds((B, S, cfg.d_model), cfg.dtype),
+            }
+        return {"tokens": _sds((B, S), jnp.int32)}
+
+    # decode: one new token against a seq_len cache
+    model = build_model(cfg)
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {
+        "token": _sds((B,), jnp.int32),
+        "pos": _sds((B,), jnp.int32),
+        "caches": cache_shapes,
+    }

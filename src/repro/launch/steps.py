@@ -1,0 +1,238 @@
+"""Step builders + sharding assembly for the dry-run and launchers.
+
+One place decides, per (arch × shape-kind), WHAT function lowers and HOW
+its inputs/outputs shard.  Training shards batch over (pod, data) and
+parameters per the FSDP+TP rules; decode additionally shards the KV-cache
+*sequence* dim over ``model`` (32k×128 caches don't fit otherwise, and the
+partitioned softmax XLA emits is exactly the flash-decode pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.models.params import resolve_spec, resolve_tree, sharding_rules
+from repro.models.sharding import ShardingPolicy
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.serve.engine import make_serve_step
+from repro.train.loss import cross_entropy, encdec_loss, lm_loss
+from repro.train.step import TrainStepConfig, make_train_step
+
+
+def rules_for(kind: str, fsdp: bool = True) -> Dict:
+    rules = sharding_rules(fsdp=fsdp)
+    if kind == "decode":
+        # shard cache sequence over the model axis (flash-decode layout)
+        rules = dict(rules)
+        rules["seq"] = ("model",)
+    return rules
+
+
+def _is_axes_leaf(x):
+    return x is None or (isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_specs(shapes_tree, axes_tree, rules, mesh) -> Any:
+    mesh_shape = dict(mesh.shape)
+    return jax.tree.map(
+        lambda s, a: resolve_spec(s.shape, a, rules, mesh_shape),
+        shapes_tree, axes_tree, is_leaf=lambda x: _is_axes_leaf(x),
+    )
+
+
+def _shardify(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+class CellBuilder:
+    """Builds (fn, in_shardings, kwargs-specs, donate) for one dry-run cell."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, kind: str):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.kind = kind
+        self.model = build_model(cfg)
+        self.rules = rules_for(kind)
+        self.policy = ShardingPolicy(mesh, self.rules)
+
+        param_shapes = jax.eval_shape(self.model.init, jax.random.key(0))
+        self.param_specs = tree_specs(
+            param_shapes, self.model.logical_axes(), self.rules, mesh)
+        self.param_sh = _shardify(self.param_specs, mesh)
+        self.param_shapes = param_shapes
+
+    # ------------------------------------------------------------------
+
+    def opt_shardings(self):
+        opt_shapes = jax.eval_shape(adamw_init, self.param_shapes)
+        specs = {"m": self.param_specs, "v": self.param_specs, "step": P()}
+        return _shardify(specs, self.mesh), opt_shapes
+
+    def cache_shardings(self, cache_shapes):
+        if self.cfg.is_encdec:
+            self_axes = model_lib._attn_cache_axes(self.cfg, stacked=True)
+            kv_axes = {"k": ("layers", "batch", None, "kv_heads", None),
+                       "v": ("layers", "batch", None, "kv_heads", None)}
+            axes = (self_axes, kv_axes)
+        else:
+            axes = self.model.cache_axes()
+        specs = tree_specs(cache_shapes, axes, self.rules, self.mesh)
+        return _shardify(specs, self.mesh)
+
+    # ------------------------------------------------------------------
+
+    def input_sh(self, shape_struct, axes):
+        """Divisibility-aware sharding for one input (batch=1 stays
+        replicated instead of tripping pjit)."""
+        spec = resolve_spec(shape_struct.shape, axes, self.rules,
+                            dict(self.mesh.shape))
+        return NamedSharding(self.mesh, spec)
+
+    def build(self, specs: Dict[str, Any]):
+        """-> (fn, arg_specs tuple, in_shardings tuple, donate_argnums)."""
+        cfg, model, mesh = self.cfg, self.model, self.mesh
+        rep = NamedSharding(mesh, P())
+        policy = self.policy
+
+        if self.kind == "train":
+            opt_sh, opt_shapes = self.opt_shardings()
+            if cfg.is_encdec:
+                def loss_fn_builder(frames):
+                    def loss_fn(p, toks):
+                        return encdec_loss(cfg, model, p, frames, toks)
+                    return loss_fn
+
+                def step(params, opt_state, frames, tokens, step_idx):
+                    from repro.models.sharding import use_policy
+                    with use_policy(policy):
+                        inner = make_train_step(
+                            cfg, model, AdamWConfig(),
+                            TrainStepConfig(
+                                num_microbatches=cfg.train_microbatches,
+                                unroll_microbatches=cfg.microbatch_unroll),
+                            loss_fn=loss_fn_builder(frames))
+                        return inner(params, opt_state, tokens, step_idx)
+
+                args = (self.param_shapes, opt_shapes, specs["frames"],
+                        specs["tokens"], jax.ShapeDtypeStruct((), jnp.int32))
+                shardings = (self.param_sh, opt_sh,
+                             self.input_sh(specs["frames"],
+                                           ("batch", None, None)),
+                             self.input_sh(specs["tokens"], ("batch", "seq")),
+                             rep)
+                return step, args, shardings, (0, 1)
+
+            if cfg.family == "vlm":
+                def loss_fn(p, batch):
+                    embeds, positions, targets = batch
+                    logits, aux = model.forward_train(
+                        p, embeds=embeds, positions=positions)
+                    return cross_entropy(logits, targets) + 0.0 * aux, \
+                        {"aux": aux}
+
+                def step(params, opt_state, embeds, positions, targets,
+                         step_idx):
+                    from repro.models.sharding import use_policy
+                    with use_policy(policy):
+                        inner = make_train_step(
+                            cfg, model, AdamWConfig(),
+                            TrainStepConfig(
+                                num_microbatches=cfg.train_microbatches,
+                                unroll_microbatches=cfg.microbatch_unroll),
+                            loss_fn=loss_fn)
+                        return inner(params, opt_state,
+                                     (embeds, positions, targets), step_idx)
+
+                args = (self.param_shapes, opt_shapes, specs["embeds"],
+                        specs["positions"], specs["targets"],
+                        jax.ShapeDtypeStruct((), jnp.int32))
+                shardings = (self.param_sh, opt_sh,
+                             self.input_sh(specs["embeds"],
+                                           ("batch", "seq", "embed_act")),
+                             self.input_sh(specs["positions"],
+                                           ("batch", None, "seq")),
+                             self.input_sh(specs["targets"],
+                                           ("batch", "seq")),
+                             rep)
+                return step, args, shardings, (0, 1)
+
+            def step(params, opt_state, tokens, step_idx):
+                from repro.models.sharding import use_policy
+                with use_policy(policy):
+                    inner = make_train_step(
+                        cfg, model, AdamWConfig(),
+                        TrainStepConfig(
+                            num_microbatches=cfg.train_microbatches,
+                            unroll_microbatches=cfg.microbatch_unroll))
+                    return inner(params, opt_state, tokens, step_idx)
+
+            args = (self.param_shapes, opt_shapes, specs["tokens"],
+                    jax.ShapeDtypeStruct((), jnp.int32))
+            shardings = (self.param_sh, opt_sh,
+                         self.input_sh(specs["tokens"], ("batch", "seq")),
+                         rep)
+            return step, args, shardings, (0, 1)
+
+        if self.kind == "prefill":
+            if cfg.is_encdec:
+                def step(params, frames, tokens):
+                    from repro.models.sharding import use_policy
+                    with use_policy(policy):
+                        return model.prefill(params, frames, tokens)
+                args = (self.param_shapes, specs["frames"], specs["tokens"])
+                return step, args, (
+                    self.param_sh,
+                    self.input_sh(specs["frames"], ("batch", None, None)),
+                    self.input_sh(specs["tokens"], ("batch", "seq"))), ()
+            if cfg.family == "vlm":
+                def step(params, embeds):
+                    from repro.models.sharding import use_policy
+                    with use_policy(policy):
+                        return model.prefill(params, embeds=embeds)
+                args = (self.param_shapes, specs["embeds"])
+                return step, args, (
+                    self.param_sh,
+                    self.input_sh(specs["embeds"],
+                                  ("batch", "seq", "embed_act"))), ()
+
+            def step(params, tokens):
+                from repro.models.sharding import use_policy
+                with use_policy(policy):
+                    return model.prefill(params, tokens)
+            args = (self.param_shapes, specs["tokens"])
+            return step, args, (
+                self.param_sh,
+                self.input_sh(specs["tokens"], ("batch", "seq"))), ()
+
+        # decode
+        cache_sh = self.cache_shardings(specs["caches"])
+
+        def step(params, caches, token, pos):
+            from repro.models.sharding import use_policy
+            with use_policy(policy):
+                logits, new_caches = model.decode_step(
+                    params, token, pos, caches)
+                next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return next_tok, new_caches
+
+        args = (self.param_shapes, specs["caches"], specs["token"],
+                specs["pos"])
+        shardings = (self.param_sh, cache_sh,
+                     self.input_sh(specs["token"], ("batch",)),
+                     self.input_sh(specs["pos"], ("batch",)))
+        return step, args, shardings, (1,)

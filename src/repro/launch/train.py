@@ -1,0 +1,90 @@
+"""Production training launcher.
+
+On a TPU pod this script is what every host runs (jax.distributed handles
+process grouping); on this CPU container pass ``--reduced`` to run the same
+code path end-to-end with the arch's smoke config on the host mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3p2_1b \
+        --reduced --steps 30 --global-batch 8 --seq 64
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.pipeline import ColocatedTokenDataset, synthetic_token_table
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import CellBuilder, tree_specs
+from repro.models.model import build_model
+from repro.models.sharding import ShardingPolicy, use_policy
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.optim.schedule import linear_warmup_cosine
+from repro.train.step import TrainStepConfig, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke config on the host mesh (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if cfg.is_encdec or cfg.family == "vlm":
+        raise SystemExit(
+            "this token-corpus launcher drives decoder-only LMs; whisper/vlm "
+            "train via their dry-run cells and tests (stub frontends)")
+    model = build_model(cfg)
+    mesh = (make_host_mesh() if args.reduced
+            else make_production_mesh(multi_pod=args.multi_pod))
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+
+    builder = CellBuilder(cfg, mesh, "train")
+    policy = builder.policy
+    with use_policy(policy):
+        params = jax.jit(
+            model.init, out_shardings=builder.param_sh)(jax.random.key(0))
+    opt_sh, _ = builder.opt_shardings()
+    opt_state = jax.jit(adamw_init, out_shardings=opt_sh)(params)
+
+    table = synthetic_token_table(
+        n_rows=max(args.global_batch * 16, 256),
+        seq_len=args.seq + 1, vocab=cfg.vocab)
+    ds = ColocatedTokenDataset(table, mesh, global_batch=args.global_batch)
+
+    schedule = lambda s: linear_warmup_cosine(s, 10, args.steps)
+    raw_step = make_train_step(
+        cfg, model, AdamWConfig(lr=3e-4),
+        TrainStepConfig(num_microbatches=args.microbatches,
+                        schedule=schedule))
+
+    def step_with_policy(p, o, b, i):
+        with use_policy(policy):
+            return raw_step(p, o, b, i)
+
+    step = jax.jit(step_with_policy, donate_argnums=(0, 1))
+    trainer = Trainer(step, ds, TrainerConfig(
+        total_steps=args.steps, log_every=5,
+        checkpoint_every=max(args.steps // 2, 1),
+        checkpoint_dir=args.ckpt_dir))
+    params, opt_state, history = trainer.run(params, opt_state)
+    print(f"done: loss {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

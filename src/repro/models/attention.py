@@ -1,0 +1,406 @@
+"""Attention variants: GQA (llama/qwen), qk-norm, QKV-bias, sliding-window,
+M-RoPE, cross-attention (whisper), and DeepSeek MLA with absorbed decode.
+
+All functions are pure; caches are explicit pytrees.  Three entry modes:
+
+- ``full``   — training / prefill over a whole sequence (causal or not);
+- ``decode`` — one new token against a cache (the ``serve_step`` path);
+- cross-attention takes precomputed encoder KV.
+
+The XLA path here is the dry-run/roofline path (cost_analysis sees real
+einsums); the Pallas flash kernel in :mod:`repro.kernels.flash_attention` is
+a drop-in for the ``full`` softmax-attention inner product.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mrope, apply_rope, rms_norm
+from repro.models.params import KeyGen, normal_init, zeros_init
+
+
+# ----------------------------------------------------------------------
+# masks
+# ----------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def causal_mask(q_len: int, kv_len: int, window: Optional[int] = None,
+                q_offset: int = 0) -> jax.Array:
+    """[q_len, kv_len] additive mask; supports sliding window and a query
+    position offset (for chunked prefill)."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    ok = k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array, scale: float,
+                  causal: bool, window: Optional[int],
+                  block: int = 1024) -> jax.Array:
+    """Blockwise online-softmax attention in pure XLA (flash-style).
+
+    Scans KV blocks with running (max, normalizer, accumulator) carry, so
+    the [S, T] score matrix never exists whole — peak attention memory drops
+    from O(S·T) to O(S·block) per head (the temp-memory blocker on the
+    long-context train/prefill cells; see EXPERIMENTS.md §Perf).
+    """
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    blk = min(block, T)
+    nb = -(-T // blk)
+    pad = nb * blk - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = (q.reshape(B, S, Hkv, G, D) * scale).astype(q.dtype)
+    kb = jnp.moveaxis(k.reshape(B, nb, blk, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nb, blk, Hkv, Dv), 1, 0)
+    q_pos = jnp.arange(S)[:, None]
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, j = xs                                # [B,blk,Hkv,D], j
+        s = jnp.einsum("bshgd,bthd->bhgst", qg, kblk,
+                       preferred_element_type=jnp.float32)
+        k_pos = j * blk + jnp.arange(blk)[None, :]
+        ok = k_pos < T
+        if causal:
+            ok = ok & (k_pos <= q_pos)
+            if window is not None:
+                ok = ok & (k_pos > q_pos - window)
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))            # [B,Hkv,G,S]
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgst,bthd->bhgsd", p.astype(vblk.dtype), vblk)
+        acc = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, S), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, S, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, Dv)
+    return out.astype(q.dtype)
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array], scale: float) -> jax.Array:
+    """q [B,S,H,Dqk], k [B,T,Hkv,Dqk], v [B,T,Hkv,Dv] -> [B,S,H,Dv].
+
+    GQA broadcast via grouping; MLA passes Dv != Dqk."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    Dv = v.shape[-1]
+    group = H // Hkv
+    qg = q.reshape(B, S, Hkv, group, D)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = logits + mask  # mask broadcasts over [B,h,g]
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, Dv)
+
+
+# ----------------------------------------------------------------------
+# standard multi-head attention (GQA superset)
+# ----------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, kg: KeyGen, cross: bool = False) -> Dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    dt = cfg.param_dtype
+    p = {
+        "wq": normal_init(kg(), (d, qd), dt),
+        "wk": normal_init(kg(), (d, kvd), dt),
+        "wv": normal_init(kg(), (d, kvd), dt),
+        "wo": normal_init(kg(), (qd, d), dt, fan_in=qd),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((qd,), dt)
+        p["bk"] = jnp.zeros((kvd,), dt)
+        p["bv"] = jnp.zeros((kvd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), dt)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), dt)
+    return p
+
+
+def attention_axes(cfg: ModelConfig, cross: bool = False) -> Dict:
+    ax = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qkv_bias and not cross:
+        ax.update({"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",)})
+    if cfg.qk_norm:
+        ax.update({"q_norm": (None,), "k_norm": (None,)})
+    return ax
+
+
+def _project_qkv(cfg: ModelConfig, p: Dict, xq: jax.Array,
+                 xkv: jax.Array, compute_dtype):
+    B, S, _ = xq.shape
+    T = xkv.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", xq, p["wq"].astype(compute_dtype))
+    k = jnp.einsum("btd,dh->bth", xkv, p["wk"].astype(compute_dtype))
+    v = jnp.einsum("btd,dh->bth", xkv, p["wv"].astype(compute_dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(compute_dtype)
+        k = k + p["bk"].astype(compute_dtype)
+        v = v + p["bv"].astype(compute_dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def attention_full(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,                       # [B, S, D]
+    positions: jax.Array,               # [B, S] or [B, 3, S] under M-RoPE
+    causal: bool = True,
+) -> Tuple[jax.Array, Dict]:
+    """Training / prefill; returns output and the KV cache content.
+
+    ``positions=None`` skips RoPE entirely (whisper uses absolute position
+    embeddings added at the input instead)."""
+    dt = x.dtype
+    q, k, v = _project_qkv(cfg, p, x, x, dt)
+    if positions is None:
+        pass
+    elif cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    S = x.shape[1]
+    if cfg.attention_impl == "chunked":
+        out = _sdpa_chunked(q, k, v, cfg.head_dim ** -0.5, causal,
+                            cfg.sliding_window, cfg.attention_block)
+    else:
+        mask = causal_mask(S, S, cfg.sliding_window) if causal else None
+        out = _sdpa(q, k, v, mask, cfg.head_dim ** -0.5)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(out.shape[0], S, -1),
+                   p["wo"].astype(dt))
+    return y, {"k": k, "v": v}
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,                       # [B, 1, D]
+    cache: Dict,                        # {"k","v": [B, T, Hkv, Dh]}
+    pos: jax.Array,                     # [B] current position index
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Dict]:
+    """One-token decode against a fixed-capacity cache (in-place update).
+
+    ``use_rope=False`` callers (whisper) pass positions only for the cache
+    scatter/mask."""
+    dt = x.dtype
+    q, k_new, v_new = _project_qkv(cfg, p, x, x, dt)
+    if not use_rope:
+        pass
+    elif cfg.mrope:
+        # decode: text token — all three channels share the position
+        pos3 = jnp.broadcast_to(pos[:, None, None], (pos.shape[0], 3, 1))
+        q = apply_mrope(q, pos3, cfg.rope_theta)
+        k_new = apply_mrope(k_new, pos3, cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    T = cache["k"].shape[1]
+    b_idx = jnp.arange(x.shape[0])
+    k = cache["k"].at[b_idx, pos].set(k_new[:, 0])
+    v = cache["v"].at[b_idx, pos].set(v_new[:, 0])
+
+    k_pos = jnp.arange(T)[None, :]
+    ok = k_pos <= pos[:, None]
+    if cfg.sliding_window is not None:
+        ok &= k_pos > (pos[:, None] - cfg.sliding_window)
+    mask = jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]  # [B,1,1,1,T]
+    out = _sdpa(q, k, v, mask, cfg.head_dim ** -0.5)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(out.shape[0], 1, -1),
+                   p["wo"].astype(dt))
+    return y, {"k": k, "v": v}
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,                       # [B, S, D] decoder states
+    enc_kv: Dict,                       # {"k","v": [B, T, H, Dh]} precomputed
+) -> jax.Array:
+    dt = x.dtype
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt))
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    out = _sdpa(q, enc_kv["k"], enc_kv["v"], None, cfg.head_dim ** -0.5)
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), p["wo"].astype(dt))
+
+
+def encode_cross_kv(cfg: ModelConfig, p: Dict, enc_out: jax.Array) -> Dict:
+    """Precompute encoder KV once per request (whisper decoder)."""
+    dt = enc_out.dtype
+    B, T, _ = enc_out.shape
+    k = jnp.einsum("btd,dh->bth", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dh->bth", enc_out, p["wv"].astype(dt))
+    return {
+        "k": k.reshape(B, T, cfg.n_kv_heads, cfg.head_dim),
+        "v": v.reshape(B, T, cfg.n_kv_heads, cfg.head_dim),
+    }
+
+
+# ----------------------------------------------------------------------
+# DeepSeek Multi-head Latent Attention
+# ----------------------------------------------------------------------
+
+def init_mla(cfg: ModelConfig, kg: KeyGen) -> Dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dt = cfg.param_dtype
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": normal_init(kg(), (d, m.q_lora_rank), dt),
+        "q_a_norm": jnp.ones((m.q_lora_rank,), dt),
+        "wq_b": normal_init(kg(), (m.q_lora_rank, H * qk_head), dt),
+        "wkv_a": normal_init(kg(), (d, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+        "kv_a_norm": jnp.ones((m.kv_lora_rank,), dt),
+        "wk_b": normal_init(kg(), (m.kv_lora_rank, H * m.qk_nope_head_dim), dt),
+        "wv_b": normal_init(kg(), (m.kv_lora_rank, H * m.v_head_dim), dt),
+        "wo": normal_init(kg(), (H * m.v_head_dim, d), dt, fan_in=H * m.v_head_dim),
+    }
+
+
+def mla_axes(cfg: ModelConfig) -> Dict:
+    return {
+        "wq_a": ("embed", "lora"),
+        "q_a_norm": ("lora",),
+        "wq_b": ("lora", "heads"),
+        "wkv_a": ("embed", "lora"),
+        "kv_a_norm": ("lora",),
+        "wk_b": ("lora", "heads"),
+        "wv_b": ("lora", "heads"),
+        "wo": ("heads", "embed"),
+    }
+
+
+def _mla_q(cfg: ModelConfig, p: Dict, x: jax.Array, dt):
+    m = cfg.mla
+    H = cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt))
+    cq = rms_norm(cq, p["q_a_norm"])
+    q = jnp.einsum("bsr,rh->bsh", cq, p["wq_b"].astype(dt))
+    q = q.reshape(*x.shape[:2], H, qk_head)
+    return q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+
+def mla_full(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    causal: bool = True,
+) -> Tuple[jax.Array, Dict]:
+    """MLA prefill/training; cache holds the *compressed* latents."""
+    m = cfg.mla
+    dt = x.dtype
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(cfg, p, x, dt)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    c_kv = rms_norm(ckv_full[..., : m.kv_lora_rank], p["kv_a_norm"])
+    k_rope = ckv_full[..., m.kv_lora_rank:][:, :, None, :]       # [B,S,1,dr]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+
+    k_nope = jnp.einsum("bsr,rh->bsh", c_kv, p["wk_b"].astype(dt))
+    k_nope = k_nope.reshape(B, S, H, m.qk_nope_head_dim)
+    v = jnp.einsum("bsr,rh->bsh", c_kv, p["wv_b"].astype(dt))
+    v = v.reshape(B, S, H, m.v_head_dim)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    if cfg.attention_impl == "chunked":
+        out = _sdpa_chunked(q, k, v, scale, causal, cfg.sliding_window,
+                            cfg.attention_block)
+    else:
+        mask = causal_mask(S, S, cfg.sliding_window) if causal else None
+        out = _sdpa(q, k, v, mask, scale)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), p["wo"].astype(dt))
+    return y, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+
+
+def mla_decode(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,                       # [B, 1, D]
+    cache: Dict,                        # {"c_kv": [B,T,r], "k_rope": [B,T,dr]}
+    pos: jax.Array,                     # [B]
+) -> Tuple[jax.Array, Dict]:
+    """Absorbed-matmul MLA decode: attention runs in the compressed space —
+    the cache stays rank-sized (DeepSeek's KV-memory win) and per-step work
+    is O(T·(rank + rope)) per head instead of O(T·head_dim·expand)."""
+    m = cfg.mla
+    dt = x.dtype
+    B = x.shape[0]
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(cfg, p, x, dt)                     # [B,1,H,*]
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    c_new = rms_norm(ckv_full[..., : m.kv_lora_rank], p["kv_a_norm"])[:, 0]
+    kr_new = apply_rope(
+        ckv_full[..., m.kv_lora_rank:][:, :, None, :], pos[:, None],
+        cfg.rope_theta,
+    )[:, 0, 0]
+
+    b_idx = jnp.arange(B)
+    c_kv = cache["c_kv"].at[b_idx, pos].set(c_new)             # [B,T,r]
+    k_rope = cache["k_rope"].at[b_idx, pos].set(kr_new)        # [B,T,dr]
+
+    # absorb W_k_b into the query: q_c [B,H,r]
+    wk_b = p["wk_b"].astype(dt).reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk_b)
+    T = c_kv.shape[1]
+    logits = (
+        jnp.einsum("bhr,btr->bht", q_c, c_kv, preferred_element_type=jnp.float32)
+        + jnp.einsum("bhd,btd->bht", q_rope[:, 0],
+                     k_rope, preferred_element_type=jnp.float32)
+    ) * ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    mask = jnp.where(jnp.arange(T)[None, None, :] <= pos[:, None, None], 0.0, NEG_INF)
+    w = jax.nn.softmax(logits + mask, axis=-1).astype(dt)
+    ctx = jnp.einsum("bht,btr->bhr", w, c_kv)                  # [B,H,r]
+    wv_b = p["wv_b"].astype(dt).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, wv_b)                # [B,H,dv]
+    y = jnp.einsum("bh,hd->bd", out.reshape(B, -1), p["wo"].astype(dt))
+    return y[:, None, :], {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,179 @@
+"""Shared layer primitives: norms, RoPE/M-RoPE, MLPs, embeddings."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import KeyGen, embed_init, normal_init, ones_init, zeros_init
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_rms_norm(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm_axes() -> Dict:
+    return {"scale": ("embed",)}
+
+
+def init_layer_norm(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm_axes() -> Dict:
+    return {"scale": ("embed",), "bias": ("embed",)}
+
+
+# ----------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """[head_dim/2] inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate ``x [..., S, H, D]`` by ``positions [..., S]`` (standard RoPE)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                 # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, int, int] = (1, 1, 2)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    ``positions3 [..., 3, S]`` carries (temporal, height, width) position ids;
+    the head dim's frequency bands are partitioned among the three in the
+    ratio ``sections`` (t:h:w = 1:1:2 by default, matching Qwen2-VL).  Text
+    tokens carry identical ids in all three channels, reducing to RoPE.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    inv = rope_freqs(d, theta)                       # [half]
+    total = sum(sections)
+    bounds = []
+    acc = 0
+    for s in sections:
+        acc += int(half * s / total)
+        bounds.append(acc)
+    bounds[-1] = half
+    band = jnp.zeros((half,), jnp.int32)
+    band = band.at[bounds[0]:bounds[1]].set(1)
+    band = band.at[bounds[1]:].set(2)
+    # pick the position channel per frequency band:
+    # positions3 [..., 3, S] -> [..., S, 3] -> gather bands -> [..., S, half]
+    p = jnp.moveaxis(positions3.astype(jnp.float32), -2, -1)
+    pos = jnp.take(p, band, axis=-1)
+    ang = pos * inv                                  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings [n, d]."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+
+def init_swiglu(d_model: int, d_ff: int, dtype, kg: KeyGen) -> Dict:
+    return {
+        "gate": normal_init(kg(), (d_model, d_ff), dtype),
+        "up": normal_init(kg(), (d_model, d_ff), dtype),
+        "down": normal_init(kg(), (d_ff, d_model), dtype),
+    }
+
+
+def swiglu_axes() -> Dict:
+    return {
+        "gate": ("embed", "mlp"),
+        "up": ("embed", "mlp"),
+        "down": ("mlp", "embed"),
+    }
+
+
+def swiglu_apply(p: Dict, x: jax.Array, compute_dtype) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["gate"].astype(compute_dtype))
+    u = jnp.einsum("...d,df->...f", x, p["up"].astype(compute_dtype))
+    h = jax.nn.silu(h) * u
+    return jnp.einsum("...f,fd->...d", h, p["down"].astype(compute_dtype))
+
+
+def init_gelu_mlp(d_model: int, d_ff: int, dtype, kg: KeyGen) -> Dict:
+    return {
+        "fc1": normal_init(kg(), (d_model, d_ff), dtype),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "fc2": normal_init(kg(), (d_ff, d_model), dtype),
+        "b2": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp_axes() -> Dict:
+    return {"fc1": ("embed", "mlp"), "b1": ("mlp",),
+            "fc2": ("mlp", "embed"), "b2": ("embed",)}
+
+
+def gelu_mlp_apply(p: Dict, x: jax.Array, compute_dtype) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["fc1"].astype(compute_dtype))
+    h = jax.nn.gelu(h + p["b1"].astype(compute_dtype), approximate=True)
+    return jnp.einsum("...f,fd->...d", h, p["fc2"].astype(compute_dtype)) + \
+        p["b2"].astype(compute_dtype)
+
+
+# ----------------------------------------------------------------------
+# embeddings / unembedding
+# ----------------------------------------------------------------------
+
+def init_embedding(vocab: int, d_model: int, dtype, kg: KeyGen) -> Dict:
+    return {"table": embed_init(kg(), (vocab, d_model), dtype)}
+
+
+def embedding_axes() -> Dict:
+    return {"table": ("vocab", "embed")}
+
+
+def embed_apply(p: Dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.take(p["table"].astype(compute_dtype), tokens, axis=0)
+
+
+def unembed_apply(p: Dict, x: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", x, p["table"].astype(compute_dtype))

@@ -1,0 +1,360 @@
+"""Unified model interface: init / axes / train forward / prefill / decode.
+
+``build_model(cfg)`` returns an :class:`LM` (decoder stacks, incl. VLM stub
+inputs) or :class:`EncDecModel` (whisper).  All methods are pure functions of
+(params, inputs, caches) so they jit/pjit directly; cache pytrees are explicit
+and fixed-shape (scatter-updated at the position index), which is what lets
+``serve_step`` lower for the decode shapes with donated buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_apply
+from repro.models.params import KeyGen
+from repro.models.sharding import constrain
+
+
+# ----------------------------------------------------------------------
+# cache construction
+# ----------------------------------------------------------------------
+
+def _attn_cache(cfg: ModelConfig, n: Optional[int], B: int, T: int):
+    """KV (or MLA latent) cache for one run of n layers (n=None: unstacked)."""
+    lead = () if n is None else (n,)
+    if cfg.mla:
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros(lead + (B, T, m.kv_lora_rank), cfg.dtype),
+            "k_rope": jnp.zeros(lead + (B, T, m.qk_rope_head_dim), cfg.dtype),
+        }
+    return {
+        "k": jnp.zeros(lead + (B, T, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        "v": jnp.zeros(lead + (B, T, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+    }
+
+
+def _attn_cache_axes(cfg: ModelConfig, stacked: bool):
+    lead = ("layers",) if stacked else ()
+    if cfg.mla:
+        return {"c_kv": lead + ("batch", "seq", None),
+                "k_rope": lead + ("batch", "seq", None)}
+    return {"k": lead + ("batch", "seq", "kv_heads", None),
+            "v": lead + ("batch", "seq", "kv_heads", None)}
+
+
+def _ssm_cache(cfg: ModelConfig, n: Optional[int], B: int):
+    s = cfg.ssm
+    d_inner, H, N = __import__("repro.models.ssm", fromlist=["ssm_dims"]).ssm_dims(cfg)
+    lead = () if n is None else (n,)
+    conv_ch = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros(lead + (B, s.conv_width - 1, conv_ch), cfg.dtype),
+        "ssm": jnp.zeros(lead + (B, H, s.head_dim, N), jnp.float32),
+    }
+
+
+def _ssm_cache_axes(cfg: ModelConfig, stacked: bool):
+    lead = ("layers",) if stacked else ()
+    return {"conv": lead + ("batch", None, "mlp"),
+            "ssm": lead + ("batch", "heads", None, None)}
+
+
+def _rwkv_cache(cfg: ModelConfig, n: Optional[int], B: int):
+    from repro.models.rwkv import rwkv_dims
+    H, N = rwkv_dims(cfg)
+    lead = () if n is None else (n,)
+    return {
+        "time": {
+            "S": jnp.zeros(lead + (B, H, N, N), jnp.float32),
+            "x_prev": jnp.zeros(lead + (B, cfg.d_model), cfg.dtype),
+        },
+        "channel": {"x_prev": jnp.zeros(lead + (B, cfg.d_model), cfg.dtype)},
+    }
+
+
+def _rwkv_cache_axes(cfg: ModelConfig, stacked: bool):
+    lead = ("layers",) if stacked else ()
+    return {
+        "time": {"S": lead + ("batch", "heads", None, None),
+                 "x_prev": lead + ("batch", "embed_act")},
+        "channel": {"x_prev": lead + ("batch", "embed_act")},
+    }
+
+
+def init_cache(cfg: ModelConfig, B: int, T: int) -> List[Any]:
+    """Fixed-capacity decode caches, one entry per run."""
+    caches: List[Any] = []
+    for run in tf.build_runs(cfg):
+        n = run.n if (cfg.scan_layers and run.n > 1) else None
+        if run.kind in ("attn",):
+            if n is None:
+                caches.append([_attn_cache(cfg, None, B, T) for _ in range(run.n)])
+            else:
+                caches.append(_attn_cache(cfg, n, B, T))
+        elif run.kind == "attn_shared":
+            caches.append(_attn_cache(cfg, None, B, T))
+        elif run.kind == "ssm":
+            if n is None:
+                caches.append([_ssm_cache(cfg, None, B) for _ in range(run.n)])
+            else:
+                caches.append(_ssm_cache(cfg, n, B))
+        elif run.kind == "rwkv":
+            if n is None:
+                caches.append([_rwkv_cache(cfg, None, B) for _ in range(run.n)])
+            else:
+                caches.append(_rwkv_cache(cfg, n, B))
+    return caches
+
+
+def _pad_attn_cache(cfg: ModelConfig, cache: Dict, T: int) -> Dict:
+    """Pad a prefill KV/latent cache out to serving capacity T (seq axis)."""
+    def pad(x, axis):
+        cur = x.shape[axis]
+        if cur >= T:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, T - cur)
+        return jnp.pad(x, widths)
+
+    if cfg.mla:
+        return {"c_kv": pad(cache["c_kv"], -2),
+                "k_rope": pad(cache["k_rope"], -2)}
+    return {"k": pad(cache["k"], -3), "v": pad(cache["v"], -3)}
+
+
+def pad_caches(cfg: ModelConfig, caches: List[Any], T: int) -> List[Any]:
+    """Grow attention caches from prompt length to decode capacity T.
+    SSM/RWKV states are fixed-size and pass through."""
+    out: List[Any] = []
+    for run, cache in zip(tf.build_runs(cfg), caches):
+        if run.kind in ("attn", "attn_shared"):
+            if isinstance(cache, list):
+                out.append([_pad_attn_cache(cfg, c, T) for c in cache])
+            else:
+                out.append(_pad_attn_cache(cfg, cache, T))
+        else:
+            out.append(cache)
+    return out
+
+
+def cache_axes(cfg: ModelConfig) -> List[Any]:
+    axes: List[Any] = []
+    for run in tf.build_runs(cfg):
+        stacked = cfg.scan_layers and run.n > 1
+        if run.kind == "attn":
+            a = _attn_cache_axes(cfg, stacked)
+        elif run.kind == "attn_shared":
+            a = _attn_cache_axes(cfg, False)
+        elif run.kind == "ssm":
+            a = _ssm_cache_axes(cfg, stacked)
+        else:
+            a = _rwkv_cache_axes(cfg, stacked)
+        axes.append(a if stacked or run.kind == "attn_shared"
+                    else [a for _ in range(run.n)])
+    return axes
+
+
+# ----------------------------------------------------------------------
+# decoder-only LM
+# ----------------------------------------------------------------------
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- params -------------------------------------------------------
+
+    def init(self, key: jax.Array) -> Dict:
+        return tf.init_stack(self.cfg, key)
+
+    def logical_axes(self) -> Dict:
+        return tf.stack_axes(self.cfg)
+
+    # -- training forward ----------------------------------------------
+
+    def forward_train(
+        self,
+        params: Dict,
+        tokens: Optional[jax.Array] = None,     # [B, S] int32
+        embeds: Optional[jax.Array] = None,     # [B, S, D] (VLM stub path)
+        positions: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """-> (logits [B,S,V], aux_loss)."""
+        cfg = self.cfg
+        if embeds is None:
+            x = embed_apply(params["embed"], tokens, cfg.dtype)
+        else:
+            x = embeds.astype(cfg.dtype)
+        B, S = x.shape[:2]
+        if positions is None:
+            base = jnp.arange(S, dtype=jnp.int32)[None, :]
+            if cfg.mrope:
+                positions = jnp.broadcast_to(base[:, None, :], (B, 3, S))
+            else:
+                positions = jnp.broadcast_to(base, (B, S))
+        x = constrain(x, ("batch", "seq", "embed_act"))
+        h, aux, _ = tf.stack_full(cfg, params, x, positions)
+        logits = tf.lm_logits(cfg, params, h)
+        return logits, aux
+
+    def mtp_logits(self, params: Dict, hidden: jax.Array,
+                   next_tokens: jax.Array) -> jax.Array:
+        """DeepSeek MTP head: predict token t+2 from (h_t, emb(token t+1))."""
+        cfg = self.cfg
+        emb = embed_apply(params["embed"], next_tokens, cfg.dtype)
+        h = jnp.concatenate([hidden, emb], axis=-1)
+        h = jnp.einsum("bsd,dk->bsk", h, params["mtp"]["proj"].astype(cfg.dtype))
+        B, S = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        h, _, _ = tf.block_full(
+            cfg, "attn", "moe" if cfg.moe is not None else "dense",
+            params["mtp"]["block"], h, positions, None)
+        from repro.models.layers import rms_norm
+        h = rms_norm(h, params["mtp"]["norm"]["scale"])
+        return tf.lm_logits(cfg, params, h)
+
+    def forward_hidden(self, params, tokens):
+        cfg = self.cfg
+        x = embed_apply(params["embed"], tokens, cfg.dtype)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        h, aux, _ = tf.stack_full(cfg, params, x, positions)
+        return h, aux
+
+    # -- serving ---------------------------------------------------------
+
+    def prefill(
+        self,
+        params: Dict,
+        tokens: Optional[jax.Array] = None,
+        embeds: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, List[Any]]:
+        """-> (last-token logits [B,V], caches).
+
+        Attention caches come back sized to the prompt; pad to serving
+        capacity with :func:`pad_caches` before decoding.
+        """
+        cfg = self.cfg
+        if embeds is None:
+            x = embed_apply(params["embed"], tokens, cfg.dtype)
+        else:
+            x = embeds.astype(cfg.dtype)
+        B, S = x.shape[:2]
+        base = jnp.arange(S, dtype=jnp.int32)[None, :]
+        if cfg.mrope:
+            positions = jnp.broadcast_to(base[:, None, :], (B, 3, S))
+        else:
+            positions = jnp.broadcast_to(base, (B, S))
+        h, _, caches = tf.stack_full(cfg, params, x, positions,
+                                     collect_cache=True)
+        logits = tf.lm_logits(cfg, params, h[:, -1:, :])[:, 0]
+        return logits, caches
+
+    def decode_step(
+        self,
+        params: Dict,
+        token: jax.Array,                # [B] int32
+        pos: jax.Array,                  # [B] int32 position of `token`
+        caches: List[Any],
+    ) -> Tuple[jax.Array, List[Any]]:
+        cfg = self.cfg
+        x = embed_apply(params["embed"], token[:, None], cfg.dtype)
+        x, new_caches = tf.stack_decode(cfg, params, x, pos, caches)
+        logits = tf.lm_logits(cfg, params, x)[:, 0]
+        return logits, new_caches
+
+    def init_cache(self, B: int, T: int) -> List[Any]:
+        return init_cache(self.cfg, B, T)
+
+    def cache_axes(self) -> List[Any]:
+        return cache_axes(self.cfg)
+
+
+# ----------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ----------------------------------------------------------------------
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key: jax.Array) -> Dict:
+        return encdec_mod.init_encdec(self.cfg, key)
+
+    def logical_axes(self) -> Dict:
+        return encdec_mod.encdec_axes(self.cfg)
+
+    def forward_train(self, params: Dict, frames: jax.Array,
+                      tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        enc = encdec_mod.encode(self.cfg, params, frames)
+        logits, _ = encdec_mod.decode_full(self.cfg, params, tokens, enc)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def prefill(self, params: Dict, frames: jax.Array,
+                tokens: jax.Array) -> Tuple[jax.Array, Any]:
+        enc = encdec_mod.encode(self.cfg, params, frames)
+        logits, (caches, kv) = encdec_mod.decode_full(
+            self.cfg, params, tokens, enc, collect_cache=True)
+        return logits[:, -1], (caches, kv)
+
+    def decode_step(self, params: Dict, token: jax.Array, pos: jax.Array,
+                    state: Any) -> Tuple[jax.Array, Any]:
+        caches, kv = state
+        logits, new_caches = encdec_mod.decode_step(
+            self.cfg, params, token[:, None], pos, caches, kv)
+        return logits[:, 0], (new_caches, kv)
+
+    def init_cache(self, B: int, T: int) -> Any:
+        cfg = self.cfg
+        self_cache = _attn_cache(cfg, cfg.n_layers, B, T)
+        H = cfg.n_heads
+        kv = {
+            "k": jnp.zeros((cfg.n_layers, B, cfg.encoder.n_frames, H,
+                            cfg.head_dim), cfg.dtype),
+            "v": jnp.zeros((cfg.n_layers, B, cfg.encoder.n_frames, H,
+                            cfg.head_dim), cfg.dtype),
+        }
+        return (self_cache, kv)
+
+
+def build_model(cfg: ModelConfig):
+    return EncDecModel(cfg) if cfg.is_encdec else LM(cfg)
+
+
+# ----------------------------------------------------------------------
+# parameter counting (no allocation — eval_shape)
+# ----------------------------------------------------------------------
+
+def count_params_from_shapes(cfg: ModelConfig) -> int:
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Params activated per token: MoE counts top_k + shared experts only."""
+    total = count_params_from_shapes(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    n_moe_layers = sum(
+        1 for i, k in enumerate(cfg.layer_kinds())
+        if k == "attn" and i >= m.first_k_dense
+    )
+    per_expert = 3 * d * f
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    if cfg.mtp_depth > 0:
+        inactive += (m.n_experts - m.top_k) * per_expert  # the MTP block
+    return total - inactive

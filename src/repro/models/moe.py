@@ -1,0 +1,247 @@
+"""Mixture-of-Experts: top-k routing with capacity-based sorted dispatch.
+
+Covers mixtral-8x7b (8 experts, top-2, softmax gate) and deepseek-v3-671b
+(256 routed + 1 shared expert, top-8, sigmoid gate with normalized weights,
+first-3-layers dense).
+
+TPU adaptation: token->expert dispatch uses the *sort-by-expert* scheme
+(cumsum positions + scatter into an ``[E, capacity, D]`` buffer) instead of a
+one-hot dispatch einsum — dispatch cost becomes memory movement, not
+``O(T·E·C·D)`` MXU flops, and the expert matmuls stay dense ``[E,C,D]x[E,D,F]``
+einsums that shard cleanly: experts over the ``model`` axis when ``E`` divides
+it (deepseek: 256 % 16 == 0), else the expert FFN dim shards instead (mixtral:
+8 experts, d_ff 14336 % 16 == 0) — resolved automatically by
+:func:`repro.models.params.resolve_spec`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.params import KeyGen, normal_init
+
+
+def init_moe(cfg: ModelConfig, kg: KeyGen) -> Dict:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    dt = cfg.param_dtype
+    p = {
+        "router": normal_init(kg(), (d, E), dt, scale=0.02),
+        "gate": normal_init(kg(), (E, d, f), dt, fan_in=d),
+        "up": normal_init(kg(), (E, d, f), dt, fan_in=d),
+        "down": normal_init(kg(), (E, f, d), dt, fan_in=f),
+    }
+    if m.n_shared_experts:
+        fs = f * m.n_shared_experts
+        p["shared"] = {
+            "gate": normal_init(kg(), (d, fs), dt),
+            "up": normal_init(kg(), (d, fs), dt),
+            "down": normal_init(kg(), (fs, d), dt),
+        }
+    return p
+
+
+def moe_axes(cfg: ModelConfig) -> Dict:
+    ax = {
+        "router": ("embed", None),
+        "gate": ("experts", "embed", "expert_mlp"),
+        "up": ("experts", "embed", "expert_mlp"),
+        "down": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.moe.n_shared_experts:
+        ax["shared"] = {
+            "gate": ("embed", "mlp"),
+            "up": ("embed", "mlp"),
+            "down": ("mlp", "embed"),
+        }
+    return ax
+
+
+def _route(m: MoEConfig, logits: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (weights [T,k], experts [T,k], aux_loss).  Softmax-gate for mixtral;
+    deepseek-v3 uses sigmoid scores with weight normalization."""
+    if m.n_experts > 64:  # deepseek-style sigmoid routing
+        scores = jax.nn.sigmoid(logits.astype(jnp.float32))
+        w, e = jax.lax.top_k(scores, m.top_k)
+        w = w / (w.sum(axis=-1, keepdims=True) + 1e-9)
+        probs = scores / (scores.sum(-1, keepdims=True) + 1e-9)
+    else:
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        w, e = jax.lax.top_k(probs, m.top_k)
+        w = w / (w.sum(axis=-1, keepdims=True) + 1e-9)
+    # load-balance aux loss (Switch-style): E * Σ_e f_e · P_e
+    T = logits.shape[0]
+    f_e = jnp.zeros((m.n_experts,), jnp.float32).at[e.reshape(-1)].add(1.0)
+    f_e = f_e / (T * m.top_k)
+    p_e = probs.mean(axis=0)
+    aux = m.n_experts * jnp.sum(f_e * p_e)
+    return w.astype(jnp.float32), e, aux
+
+
+def _dispatch_group(m: MoEConfig, xt, w, e, cap, p, compute_dtype):
+    """Scatter->expert-matmul->gather for ONE token group.  xt [T,D]."""
+    T, D = xt.shape
+    k, E = m.top_k, m.n_experts
+    flat_e = e.reshape(-1)                             # [T*k]
+    flat_w = w.reshape(-1)
+    # position of each (token, slot) within its expert, in token order
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # [T*k, E]
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)             # exclusive
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap                                   # dropped beyond capacity
+    dest = flat_e * cap + jnp.where(keep, pos, 0)
+
+    buf = jnp.zeros((E * cap, D), compute_dtype)
+    src = jnp.repeat(xt, k, axis=0)                    # token for each slot
+    buf = buf.at[dest].add(jnp.where(keep[:, None], src, 0))
+
+    eb = buf.reshape(E, cap, D)
+    h = jnp.einsum("ecd,edf->ecf", eb, p["gate"].astype(compute_dtype))
+    u = jnp.einsum("ecd,edf->ecf", eb, p["up"].astype(compute_dtype))
+    h = jax.nn.silu(h) * u
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(compute_dtype))
+
+    gathered = out_e.reshape(E * cap, D)[dest]         # [T*k, D]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    return (gathered * flat_w[:, None].astype(compute_dtype)
+            ).reshape(T, k, D).sum(1)
+
+
+def _moe_shard_local(cfg, p, x, compute_dtype):
+    """Dispatch inside ``shard_map`` manual over the batch axes: the
+    scatter/gather *cannot* leave the shard, so the only collectives left
+    are the expert einsums' model-axis traffic.  Capacity is per shard
+    (GShard groups == device shards).  Falls back to the global path when
+    no sharding policy is installed (CPU tests)."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.models.sharding import current_policy
+
+    m = cfg.moe
+    pol = current_policy()
+    batch_axes = tuple(a for a in ("pod", "data")
+                       if pol is not None and a in pol.mesh.shape
+                       and pol.mesh.shape[a] > 1)
+    if pol is None or not batch_axes or x.shape[0] % int(
+            __import__("numpy").prod([pol.mesh.shape[a]
+                                      for a in batch_axes])) != 0:
+        cfg1 = cfg  # fall back: single global group
+        import dataclasses as _dc
+        cfg1 = _dc.replace(cfg, moe=_dc.replace(m, n_groups=1))
+        return moe_apply(cfg1, p, x, compute_dtype)
+
+    def body(x_loc, router, gate, up, down, *shared):
+        B_loc, S, D = x_loc.shape
+        T_loc = B_loc * S
+        xt = x_loc.reshape(T_loc, D)
+        logits = jnp.einsum("td,de->te", xt, router.astype(compute_dtype))
+        w, e, aux = _route(m, logits)
+        cap = max(int(m.capacity_factor * T_loc * m.top_k / m.n_experts), 1)
+        cap = -(-cap // 8) * 8
+        pp = {"gate": gate, "up": up, "down": down}
+        y = _dispatch_group(m, xt, w, e, cap, pp, compute_dtype)
+        if shared:
+            sp = {"gate": shared[0], "up": shared[1], "down": shared[2]}
+            h = jax.nn.silu(jnp.einsum("td,df->tf", xt,
+                                       sp["gate"].astype(compute_dtype)))
+            h = h * jnp.einsum("td,df->tf", xt, sp["up"].astype(compute_dtype))
+            y = y + jnp.einsum("tf,fd->td", h, sp["down"].astype(compute_dtype))
+        # aux is shard-local; mean over the manual axes
+        for ax in batch_axes:
+            aux = jax.lax.pmean(aux, ax)
+        return y.reshape(B_loc, S, D), aux
+
+    args = [x, p["router"], p["gate"], p["up"], p["down"]]
+    if m.n_shared_experts:
+        args += [p["shared"]["gate"], p["shared"]["up"], p["shared"]["down"]]
+    in_specs = tuple([P(batch_axes)] + [P()] * (len(args) - 1))
+    out = shard_map(
+        body, mesh=pol.mesh, in_specs=in_specs,
+        out_specs=(P(batch_axes), P()),
+        axis_names=set(batch_axes), check_vma=False,
+    )(*args)
+    return out
+
+
+def moe_apply(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,                      # [B, S, D]
+    compute_dtype,
+) -> Tuple[jax.Array, jax.Array]:
+    """-> (output [B,S,D], aux_loss scalar).
+
+    With ``n_groups > 1`` (GShard-style), tokens split into groups with
+    independent capacity; aligning groups to the batch sharding keeps every
+    scatter/gather shard-local and turns the dispatch collectives into the
+    single expert all-to-all XLA derives from the grouped einsum — the
+    collective-bound fix measured in EXPERIMENTS.md §Perf (mixtral cell).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    if m.n_groups == -1:
+        return _moe_shard_local(cfg, p, x, compute_dtype)
+    xt = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(compute_dtype))
+    w, e, aux = _route(m, logits)                      # [T,k]
+
+    k = m.top_k
+    E = m.n_experts
+    G = m.n_groups if T % m.n_groups == 0 else 1
+    cap = max(int(m.capacity_factor * (T // G) * k / E), 1)
+    cap = -(-cap // 8) * 8                             # lane-friendly
+
+    if G == 1:
+        combined = _dispatch_group(m, xt, w, e, cap, p, compute_dtype)
+    else:
+        from repro.models.sharding import constrain
+        Tg = T // G
+        xg = constrain(xt.reshape(G, Tg, D), ("batch", None, "embed_act"))
+        flat_e = e.reshape(G, Tg * k)
+        flat_w = w.reshape(G, Tg * k)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # [G,Tg*k,E]
+        pos_in_e = jnp.cumsum(onehot, axis=1) - onehot
+        pos = jnp.take_along_axis(pos_in_e, flat_e[..., None],
+                                  axis=2)[..., 0]             # [G,Tg*k]
+        keep = pos < cap
+        dest = flat_e * cap + jnp.where(keep, pos, 0)
+
+        # pin every scatter operand to the group sharding BEFORE the
+        # scatter: otherwise XLA runs it replicated and pays a full
+        # all-reduce of the 20+GB buffer per layer (measured; §Perf)
+        dest = constrain(dest, ("batch", None))
+        keep = constrain(keep, ("batch", None))
+        src = constrain(jnp.repeat(xg, k, axis=1),
+                        ("batch", None, "embed_act"))         # [G,Tg*k,D]
+        g_idx = jnp.arange(G)[:, None]
+        buf = constrain(jnp.zeros((G, E * cap, D), compute_dtype),
+                        ("batch", None, "embed_act"))
+        buf = buf.at[g_idx, dest].add(jnp.where(keep[..., None], src, 0))
+        buf = constrain(buf, ("batch", None, "embed_act"))
+
+        eb = buf.reshape(G, E, cap, D)
+        h = jnp.einsum("gecd,edf->gecf", eb, p["gate"].astype(compute_dtype))
+        u = jnp.einsum("gecd,edf->gecf", eb, p["up"].astype(compute_dtype))
+        h = jax.nn.silu(h) * u
+        out_e = jnp.einsum("gecf,efd->gecd", h,
+                           p["down"].astype(compute_dtype))
+        out_e = constrain(out_e.reshape(G, E * cap, D),
+                          ("batch", None, "embed_act"))
+
+        gathered = out_e[g_idx, dest]                         # [G,Tg*k,D]
+        gathered = jnp.where(keep[..., None], gathered, 0)
+        combined = (gathered * flat_w[..., None].astype(compute_dtype)
+                    ).reshape(G, Tg, k, D).sum(2).reshape(T, D)
+    y = combined.reshape(B, S, D)
+
+    if m.n_shared_experts:
+        sp = p["shared"]
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sp["gate"].astype(compute_dtype)))
+        h = h * jnp.einsum("bsd,df->bsf", x, sp["up"].astype(compute_dtype))
+        y = y + jnp.einsum("bsf,fd->bsd", h, sp["down"].astype(compute_dtype))
+    return y, aux

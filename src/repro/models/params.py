@@ -1,0 +1,159 @@
+"""Parameter initialization + logical-axis sharding resolution.
+
+Every parameter is created together with a tuple of *logical axis names*
+(one per dim, e.g. ``("embed", "heads")``).  A rules table maps logical names
+to mesh axes (MaxText-style), and :func:`resolve_spec` turns (shape, logical
+axes, rules, mesh) into a concrete ``PartitionSpec`` — **dropping any mesh
+axis that does not divide the dimension** (e.g. 8 KV heads cannot shard over
+a 16-way model axis, so they stay replicated; mixtral's 8 experts shard their
+FFN dim over the model axis instead).  This single resolution point is what
+lets every assigned architecture reuse one sharding system without
+per-arch special cases.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxes = Tuple[Optional[str], ...]
+
+# ----------------------------------------------------------------------
+# rules: logical axis -> candidate mesh axes, in priority order
+# ----------------------------------------------------------------------
+
+def sharding_rules(fsdp: bool = True, expert_parallel: bool = True) -> Dict[str, Tuple[str, ...]]:
+    """The default mapping (see DESIGN.md §5).
+
+    - ``model`` carries tensor parallelism (heads / mlp / vocab / experts);
+    - ``data`` carries FSDP parameter sharding (the "embed" dim of every
+      weight) in addition to batch data-parallelism;
+    - ``pod`` carries pure DP (gradient sync over DCN) and joins FSDP for
+      the very largest weights only via the "embed_pod" logical name.
+    """
+    rules = {
+        "batch": ("pod", "data"),
+        "seq": (),
+        "embed_act": (),   # hidden dim of activations (→ "model" enables SP)
+        "vocab": ("model",),
+        "embed": ("data",) if fsdp else (),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "qk_dim": (),
+        "mlp": ("model",),
+        "experts": ("model",) if expert_parallel else (),
+        "expert_mlp": ("model",) if not expert_parallel else ("model",),
+        "lora": (),
+        "state": (),
+        "conv": (),
+        "frames": (),
+        "layers": (),
+        None: (),
+    }
+    return rules
+
+
+def resolve_spec(
+    shape: Sequence[int],
+    axes: Optional[LogicalAxes],
+    rules: Mapping[Optional[str], Tuple[str, ...]],
+    mesh_shape: Mapping[str, int],
+) -> P:
+    """Logical axes -> PartitionSpec with divisibility + axis-reuse checks."""
+    if axes is None:
+        axes = (None,) * len(shape)
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} rank != shape {shape}")
+    used: set = set()
+    parts = []
+    for dim, lname in zip(shape, axes):
+        assigned: list = []
+        factor = 1
+        for maxis in rules.get(lname, ()):
+            if maxis not in mesh_shape or maxis in used:
+                continue
+            size = mesh_shape[maxis]
+            if size > 1 and dim % (factor * size) == 0:
+                assigned.append(maxis)
+                used.add(maxis)
+                factor *= size
+        if not assigned:
+            parts.append(None)
+        elif len(assigned) == 1:
+            parts.append(assigned[0])
+        else:
+            parts.append(tuple(assigned))
+    # trim trailing Nones for tidy specs
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def resolve_tree(
+    params: Any,
+    logical: Any,
+    rules: Mapping[Optional[str], Tuple[str, ...]],
+    mesh: Mesh,
+) -> Any:
+    """Zip a params tree with its logical-axes tree into PartitionSpecs.
+
+    Structure mismatch between the two trees raises — this is the guard that
+    keeps ``init`` and ``logical_axes`` definitions in sync.
+    """
+    mesh_shape = dict(mesh.shape)
+
+    def one(p, ax):
+        return resolve_spec(np.shape(p), ax, rules, mesh_shape)
+
+    return jax.tree.map(one, params, logical, is_leaf=lambda x: x is None or (
+        isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+    ))
+
+
+def named_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ----------------------------------------------------------------------
+# initializers (params always carry their own dtype; compute casts later)
+# ----------------------------------------------------------------------
+
+def normal_init(key, shape, dtype, scale: Optional[float] = None,
+                fan_in: Optional[int] = None):
+    fi = fan_in if fan_in is not None else (shape[-2] if len(shape) >= 2 else shape[-1])
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fi, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def zeros_init(key, shape, dtype, **_):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype, **_):
+    return jnp.ones(shape, dtype)
+
+
+def embed_init(key, shape, dtype, **_):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Splits a PRNG key on demand, by name, deterministically."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+        self._n = 0
+
+    def __call__(self) -> jax.Array:
+        self._n += 1
+        return jax.random.fold_in(self._key, self._n)

@@ -1,0 +1,192 @@
+"""RWKV-6 "Finch" — attention-free time mixing with data-dependent decay.
+
+Per head (size N) the WKV state S ∈ R^{N×N} evolves as
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+with the decay ``w_t = exp(-exp(w0 + lora(x̃_t)))`` *data-dependent* (the
+Finch contribution) and token-shift interpolations (ddlerp) feeding every
+projection.  Training scans over time (O(1) memory in L); decode carries
+``(S, last_x)`` — constant-size state, which is why rwkv6 runs the
+``long_500k`` cell that quadratic attention cannot.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import KeyGen, normal_init
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    N = cfg.rwkv.head_dim
+    H = cfg.d_model // N
+    return H, N
+
+
+def init_rwkv_time(cfg: ModelConfig, kg: KeyGen) -> Dict:
+    d = cfg.d_model
+    r = cfg.rwkv
+    dt = cfg.param_dtype
+    H, N = rwkv_dims(cfg)
+    return {
+        "mu_x": jnp.full((d,), 0.5, dt),
+        "mix_w1": normal_init(kg(), (d, 5 * r.gate_lora), dt, scale=1e-2),
+        "mix_w2": normal_init(kg(), (5, r.gate_lora, d), dt, scale=1e-2),
+        "mu": jnp.full((5, d), 0.5, dt),
+        "wr": normal_init(kg(), (d, d), dt),
+        "wk": normal_init(kg(), (d, d), dt),
+        "wv": normal_init(kg(), (d, d), dt),
+        "wg": normal_init(kg(), (d, d), dt),
+        "wo": normal_init(kg(), (d, d), dt),
+        "w0": jnp.full((d,), -6.0, dt),            # slow initial decay
+        "decay_w1": normal_init(kg(), (d, r.decay_lora), dt, scale=1e-2),
+        "decay_w2": normal_init(kg(), (r.decay_lora, d), dt, scale=1e-2),
+        "u": normal_init(kg(), (d,), dt, scale=0.5, fan_in=1),
+        "ln_scale": jnp.ones((d,), dt),            # per-head group norm
+        "ln_bias": jnp.zeros((d,), dt),
+    }
+
+
+def rwkv_time_axes(cfg: ModelConfig) -> Dict:
+    return {
+        "mu_x": ("embed",), "mix_w1": ("embed", None), "mix_w2": (None, None, "embed"),
+        "mu": (None, "embed"),
+        "wr": ("embed", "mlp"), "wk": ("embed", "mlp"), "wv": ("embed", "mlp"),
+        "wg": ("embed", "mlp"), "wo": ("mlp", "embed"),
+        "w0": ("embed",), "decay_w1": ("embed", None), "decay_w2": (None, "embed"),
+        "u": ("embed",), "ln_scale": ("embed",), "ln_bias": ("embed",),
+    }
+
+
+def init_rwkv_channel(cfg: ModelConfig, kg: KeyGen) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.param_dtype
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "wk": normal_init(kg(), (d, f), dt),
+        "wv": normal_init(kg(), (f, d), dt),
+        "wr": normal_init(kg(), (d, d), dt),
+    }
+
+
+def rwkv_channel_axes(cfg: ModelConfig) -> Dict:
+    return {"mu_k": ("embed",), "mu_r": ("embed",),
+            "wk": ("embed", "mlp"), "wv": ("mlp", "embed"),
+            "wr": ("embed", "mlp")}
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} along time; ``prev`` [B,D] seeds position 0 (decode/chunking)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p: Dict, x: jax.Array, x_prev: jax.Array, dt_c):
+    """Data-dependent token-shift mixes for (w,k,v,r,g)."""
+    xx = x_prev - x
+    xxx = x + xx * p["mu_x"].astype(dt_c)
+    # [B,L,5*G] -> [5,B,L,G] -> lora out [5,B,L,D]
+    h = jnp.tanh(jnp.einsum("bld,dg->blg", xxx, p["mix_w1"].astype(dt_c)))
+    G = h.shape[-1] // 5
+    h5 = h.reshape(*h.shape[:-1], 5, G)
+    mix = jnp.einsum("blcg,cgd->cbld", h5, p["mix_w2"].astype(dt_c))
+    outs = []
+    for i, _ in enumerate(MIX_NAMES):
+        mu_i = p["mu"][i].astype(dt_c)
+        outs.append(x + xx * (mu_i + mix[i]))
+    return outs  # w, k, v, r, g inputs
+
+
+def _group_norm(y: jax.Array, scale: jax.Array, bias: jax.Array, H: int):
+    """Per-head layer norm over the head dim ([..., H, N] flattened)."""
+    B, L, D = y.shape
+    N = D // H
+    yh = y.reshape(B, L, H, N).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    out = yh.reshape(B, L, D) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(y.dtype)
+
+
+def rwkv_time_full(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,                       # [B, L, D]
+    state: Optional[Dict] = None,       # {"S": [B,H,N,N], "x_prev": [B,D]}
+) -> Tuple[jax.Array, Dict]:
+    dt_c = x.dtype
+    H, N = rwkv_dims(cfg)
+    B, L, D = x.shape
+    x_prev = None if state is None else state["x_prev"]
+    xw, xk, xv, xr, xg = _ddlerp(p, x, _shift(x, x_prev), dt_c)
+
+    r = jnp.einsum("bld,dk->blk", xr, p["wr"].astype(dt_c))
+    k = jnp.einsum("bld,dk->blk", xk, p["wk"].astype(dt_c))
+    v = jnp.einsum("bld,dk->blk", xv, p["wv"].astype(dt_c))
+    g = jax.nn.silu(jnp.einsum("bld,dk->blk", xg, p["wg"].astype(dt_c)))
+    w = jnp.exp(-jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + jnp.einsum("blg,gd->bld",
+                     jnp.tanh(jnp.einsum("bld,dg->blg", xw,
+                                         p["decay_w1"].astype(dt_c))),
+                     p["decay_w2"].astype(dt_c)).astype(jnp.float32)
+    ))                                               # [B,L,D] in (0,1)
+
+    rh = r.reshape(B, L, H, N).astype(jnp.float32)
+    kh = k.reshape(B, L, H, N).astype(jnp.float32)
+    vh = v.reshape(B, L, H, N).astype(jnp.float32)
+    wh = w.reshape(B, L, H, N)
+    uh = p["u"].astype(jnp.float32).reshape(H, N)
+
+    s0 = (jnp.zeros((B, H, N, N), jnp.float32) if state is None
+          else state["S"].astype(jnp.float32))
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                     # [B,H,N] each
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)   # [B,H,N,N]
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       S + uh[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (rh, kh, vh, wh))
+    S_fin, ys = jax.lax.scan(step, s0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, D).astype(dt_c)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"], H) * g
+    out = jnp.einsum("bld,dk->blk", y, p["wo"].astype(dt_c))
+    return out, {"S": S_fin, "x_prev": x[:, -1, :]}
+
+
+def rwkv_time_decode(cfg: ModelConfig, p: Dict, x: jax.Array,
+                     state: Dict) -> Tuple[jax.Array, Dict]:
+    """Single-token step — same math, no scan."""
+    return rwkv_time_full(cfg, p, x, state)
+
+
+def rwkv_channel_full(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,
+    state: Optional[Dict] = None,       # {"x_prev": [B,D]}
+) -> Tuple[jax.Array, Dict]:
+    dt_c = x.dtype
+    x_prev = None if state is None else state["x_prev"]
+    xs = _shift(x, x_prev)
+    xk = x + (xs - x) * p["mu_k"].astype(dt_c)
+    xr = x + (xs - x) * p["mu_r"].astype(dt_c)
+    k = jnp.einsum("bld,df->blf", xk, p["wk"].astype(dt_c))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("blf,fd->bld", k, p["wv"].astype(dt_c))
+    r = jax.nn.sigmoid(jnp.einsum("bld,dk->blk", xr, p["wr"].astype(dt_c)))
+    return r * kv, {"x_prev": x[:, -1, :]}

@@ -1,0 +1,92 @@
+"""Activation-sharding policy — logical constraints inside model code.
+
+Model code calls ``constrain(x, ("batch", "seq", "embed"))`` at block
+boundaries; outside any policy this is a no-op (CPU smoke tests), under a
+:class:`ShardingPolicy` (installed by the launcher/dry-run) it becomes a
+``with_sharding_constraint`` resolved through the same rules table as the
+parameters — so flipping e.g. sequence parallelism on is a one-line rules
+change, not a model edit.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import resolve_spec
+
+_POLICY: contextvars.ContextVar[Optional["ShardingPolicy"]] = \
+    contextvars.ContextVar("cologrid_sharding_policy", default=None)
+
+
+class ShardingPolicy:
+    def __init__(self, mesh: Mesh, rules: Mapping[Optional[str], Tuple[str, ...]]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def spec_for(self, shape: Sequence[int], names: Sequence[Optional[str]]) -> P:
+        return resolve_spec(shape, tuple(names), self.rules, dict(self.mesh.shape))
+
+    def constrain(self, x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+        spec = self.spec_for(x.shape, names)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    token = _POLICY.set(policy)
+    try:
+        yield
+    finally:
+        _POLICY.reset(token)
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return _POLICY.get()
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Apply the active policy's constraint, or pass through."""
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    return pol.constrain(x, names)
+
+
+def _is_axes_leaf(x):
+    return x is None or (isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x))
+
+
+def compute_view(params, axes_tree):
+    """FSDP storage -> compute layout: re-constrain a param subtree with the
+    data/pod (storage) axes dropped, i.e. an explicit just-in-time weight
+    all-gather.
+
+    Without this, XLA SPMD contracts einsums over the data-sharded "embed"
+    dim and emits partial-sum all-reduces of the (much larger) activations —
+    measured at ~60 GB/layer on mixtral train_4k (EXPERIMENTS.md §Perf).
+    Gathering the weights (~0.2 GB/layer) is the production-FSDP semantics.
+    """
+    pol = _POLICY.get()
+    if pol is None:
+        return params
+    compute_rules = {
+        k: tuple(a for a in v if a not in ("data", "pod"))
+        for k, v in pol.rules.items()
+    }
+
+    def one(w, ax):
+        if ax is None:
+            return w
+        from repro.models.params import resolve_spec
+        sp = resolve_spec(w.shape, tuple(ax), compute_rules,
+                          dict(pol.mesh.shape))
+        return jax.lax.with_sharding_constraint(
+            w, NamedSharding(pol.mesh, sp))
+
+    return jax.tree.map(one, params, axes_tree, is_leaf=_is_axes_leaf)

@@ -1,0 +1,237 @@
+"""Mamba2 (SSD) mixer — used by zamba2 and as the hybrid SSM block.
+
+The state-space recurrence per head h with scalar decay:
+
+    s_t = a_t · s_{t-1} + dt_t · B_t ⊗ x_t          s ∈ R^{P×N}
+    y_t = C_t · s_t  (+ D ⊙ x_t)
+
+with ``a_t = exp(dt_t · A)`` (A < 0 learned per head, dt data-dependent via
+softplus).  Training/prefill uses the chunked SSD form (intra-chunk matmuls +
+inter-chunk state scan) — O(L·Q) matmul work with MXU-shaped operands, which
+is also the structure the Pallas kernel tiles for VMEM.  Decode keeps the
+O(1)-per-token recurrent form.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import KeyGen, normal_init
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.d_state
+
+
+def init_ssm(cfg: ModelConfig, kg: KeyGen) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, N = ssm_dims(cfg)
+    dt = cfg.param_dtype
+    conv_ch = d_inner + 2 * N            # x, B, C go through the conv
+    return {
+        # in_proj -> [z, xBC, dt]
+        "in_proj": normal_init(kg(), (d, 2 * d_inner + 2 * N + H), dt),
+        "conv_w": normal_init(kg(), (s.conv_width, conv_ch), dt,
+                              fan_in=s.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt),  # A = -exp
+        "dt_bias": jnp.zeros((H,), dt),
+        "d_skip": jnp.ones((H,), dt),
+        "norm": jnp.ones((d_inner,), dt),
+        "out_proj": normal_init(kg(), (d_inner, d), dt, fan_in=d_inner),
+    }
+
+
+def ssm_axes(cfg: ModelConfig) -> Dict:
+    return {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": ("conv", None),
+        "conv_b": (None,),
+        "a_log": (None,),
+        "dt_bias": (None,),
+        "d_skip": (None,),
+        "norm": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_inner, H, N = ssm_dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: 2 * d_inner + 2 * N]
+    dt_raw = zxbcdt[..., 2 * d_inner + 2 * N:]
+    return z, xBC, dt_raw
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along time.  x [B,L,C], w [W,C].
+
+    Returns (out [B,L,C], new_state [B,W-1,C])."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xBC], axis=1)          # [B, L+W-1, C]
+    out = sum(
+        xp[:, i: i + xBC.shape[1], :] * w[i][None, None, :] for i in range(W)
+    ) + b[None, None, :]
+    new_state = xp[:, -(W - 1):, :] if W > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked_ref(
+    x: jax.Array,      # [B, L, H, P]  (dt already folded in)
+    a: jax.Array,      # [B, L, H]     per-step decay in (0,1)
+    Bm: jax.Array,     # [B, L, N]
+    Cm: jax.Array,     # [B, L, N]
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (pure-jnp oracle; the Pallas kernel mirrors this).
+
+    Returns (y [B,L,H,P], final_state [B,H,P,N]).
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    pad = -L % Q
+    if pad:
+        # identity-pad the tail: decay 1 and zero input leave the state
+        # untouched; the padded outputs are sliced away below
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    ac = a.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    la = jnp.log(jnp.maximum(ac.astype(jnp.float32), 1e-20))
+    cum = jnp.cumsum(la, axis=2)                       # [B,nc,Q,H] inclusive
+    # intra-chunk decay matrix Lmat[i,j] = prod a_{j+1..i} for j<=i.
+    # Mask BEFORE exp: the i<j entries have positive exponents that overflow
+    # in the backward pass if computed then discarded (inf·0 -> NaN grads).
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    i_ge_j = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = jnp.where(i_ge_j[None, None, :, :, None], seg, -jnp.inf)
+    Lmat = jnp.exp(seg)
+
+    # diagonal (intra-chunk) output: y_ij = C_i·B_j L_ij x_j
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    ydiag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, Lmat,
+                       xc.astype(jnp.float32))
+
+    # per-chunk input to the carried state: S_c = Σ_j (decay j..end) B_j x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)    # [B,nc,Q,H]
+    Schunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_to_end,
+                        Bc.astype(jnp.float32), xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # [B,nc,H]
+
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(s, inp):
+        s_in, dec = inp                                # [B,H,P,N], [B,H]
+        out_prev = s
+        s = s * dec[:, :, None, None] + s_in
+        return s, out_prev
+
+    Schunk_t = jnp.moveaxis(Schunk, 1, 0)              # [nc,B,H,P,N]
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)            # [nc,B,H]
+    final, prev_states = jax.lax.scan(body, s0, (Schunk_t, dec_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # [B,nc,H,P,N]
+
+    # off-diagonal: contribution of the carried state entering each chunk
+    decay_in = jnp.exp(cum)                            # decay 1..i within chunk
+    yoff = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                      Cc.astype(jnp.float32), decay_in, prev_states)
+
+    y = (ydiag + yoff).reshape(Bsz, Lp, H, P)[:, :L]
+    return y, final
+
+
+def ssm_full(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,                       # [B, L, D]
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Training/prefill pass; returns output and final recurrent state."""
+    s = cfg.ssm
+    dt_c = x.dtype
+    d_inner, H, N = ssm_dims(cfg)
+    zxbcdt = jnp.einsum("bld,dk->blk", x, p["in_proj"].astype(dt_c))
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"].astype(dt_c),
+                                 p["conv_b"].astype(dt_c), conv_state)
+    xs = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner: d_inner + N]
+    Cm = xBC[..., d_inner + N:]
+
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))  # [B,L,H]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                # [H]
+    a = jnp.exp(dt_v * A[None, None, :])                        # decay
+    xh = xs.reshape(*xs.shape[:2], H, s.head_dim)
+    xin = xh.astype(jnp.float32) * dt_v[..., None]
+
+    ssm_state = None if state is None else state["ssm"]
+    y, final = ssd_chunked_ref(xin, a, Bm, Cm, min(s.chunk, xs.shape[1]),
+                               ssm_state)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(*xs.shape[:2], d_inner).astype(dt_c)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bli,id->bld", y, p["out_proj"].astype(dt_c))
+    return out, {"conv": new_conv, "ssm": final.astype(jnp.float32)}
+
+
+def ssm_decode(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,                       # [B, 1, D]
+    state: Dict,                        # {"conv": [B,W-1,C], "ssm": [B,H,P,N]}
+) -> Tuple[jax.Array, Dict]:
+    """O(1) single-token recurrence."""
+    s = cfg.ssm
+    dt_c = x.dtype
+    d_inner, H, N = ssm_dims(cfg)
+    zxbcdt = jnp.einsum("bld,dk->blk", x, p["in_proj"].astype(dt_c))
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"].astype(dt_c),
+                                 p["conv_b"].astype(dt_c), state["conv"])
+    xs = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner: d_inner + N][:, 0]           # [B,N]
+    Cm = xBC[..., d_inner + N:][:, 0]
+
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))[:, 0]  # [B,H]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt_v * A[None, :])                      # [B,H]
+    xh = xs.reshape(xs.shape[0], H, s.head_dim).astype(jnp.float32)
+    xin = xh * dt_v[..., None]                          # [B,H,P]
+
+    s_new = (state["ssm"] * a[:, :, None, None]
+             + jnp.einsum("bhp,bn->bhpn", xin, Bm.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), s_new)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(xs.shape[0], 1, d_inner).astype(dt_c)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bli,id->bld", y, p["out_proj"].astype(dt_c))
+    return out, {"conv": new_conv, "ssm": s_new}

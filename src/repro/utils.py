@@ -1,0 +1,44 @@
+"""Small shared utilities (mesh construction, tree sizing, rng)."""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` pinned to Auto axis types (portable across JAX 0.8/0.9)."""
+    return jax.make_mesh(
+        tuple(shape),
+        tuple(axis_names),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+    )
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of all array leaves in a pytree (by shape/dtype, not
+    device residency)."""
+    return sum(
+        int(np.prod(x.shape, dtype=np.int64)) * x.dtype.itemsize
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "shape") and hasattr(x, "dtype")
+    )
+
+
+def tree_param_count(tree) -> int:
+    return sum(
+        int(np.prod(x.shape, dtype=np.int64))
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "shape")
+    )
+
+
+def fold_seed(seed: int, *names: str) -> jax.Array:
+    """Deterministic named rng derivation."""
+    key = jax.random.key(seed)
+    for n in names:
+        key = jax.random.fold_in(key, int(np.uint32(abs(hash(n)) & 0xFFFFFFFF)))
+    return key

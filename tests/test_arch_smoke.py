@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: reduced config of the same family runs one
+forward + one train step on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, all_configs, get_config
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import make_train_state, make_train_step
+from repro.train.loss import encdec_loss
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params, opt_state = make_train_state(cfg, model, jax.random.key(0))
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+
+    if cfg.is_encdec:
+        frames = jax.random.normal(
+            jax.random.key(2), (B, cfg.encoder.n_frames, cfg.d_model),
+            cfg.dtype)
+        logits, aux = model.forward_train(params, frames, tokens)
+        assert logits.shape == (B, S, cfg.vocab)
+        assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+        def loss_fn(p, toks):
+            return encdec_loss(cfg, model, p, frames, toks)
+        step = jax.jit(make_train_step(cfg, model, AdamWConfig(lr=1e-3),
+                                       loss_fn=loss_fn))
+    else:
+        logits, aux = model.forward_train(params, tokens)
+        assert logits.shape == (B, S, cfg.vocab)
+        assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+        assert not bool(jnp.isnan(aux))
+        step = jax.jit(make_train_step(cfg, model, AdamWConfig(lr=1e-3)))
+
+    p2, o2, metrics = step(params, opt_state, tokens, 0)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    delta = float(jnp.abs(
+        p2["embed"]["table"] - params["embed"]["table"]).max())
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_structure(arch):
+    """Full configs build runs/shapes consistently (no allocation)."""
+    cfg = get_config(arch, reduced=False)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    assert n_params > 1e8, f"{arch}: suspiciously small ({n_params})"
+    # axes tree must mirror the params tree exactly (resolver contract)
+    axes = model.logical_axes()
+    jax.tree.map(
+        lambda s, a: None, shapes, axes,
+        is_leaf=lambda x: x is None or (
+            isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x)),
+    )
+
+
+EXPECTED_PARAMS = {
+    # ±12% of the nameplate count (our stacks omit minor vendor details)
+    "llama3_405b": 405e9,
+    "llama3p2_1b": 1.24e9,
+    "qwen2p5_14b": 14.8e9,
+    "qwen3_8b": 8.2e9,
+    "mixtral_8x7b": 46.7e9,
+    "deepseek_v3_671b": 671e9,
+    "whisper_large_v3": 1.54e9,
+    "rwkv6_3b": 3.1e9,
+    "qwen2_vl_7b": 7.6e9,   # LM backbone only (vision tower is the stub)
+    "zamba2_1p2b": 1.2e9,
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_near_nameplate(arch):
+    cfg = get_config(arch, reduced=False)
+    n = cfg.param_count()
+    want = EXPECTED_PARAMS[arch]
+    assert 0.80 * want < n < 1.25 * want, (
+        f"{arch}: {n/1e9:.2f}B vs nameplate {want/1e9:.2f}B")
+
+
+def test_long_context_eligibility():
+    eligible = {a for a in ARCH_IDS
+                if get_config(a).runs_long_context}
+    assert eligible == {"zamba2_1p2b", "mixtral_8x7b", "rwkv6_3b"}
+
+
+def test_moe_active_params():
+    cfg = get_config("mixtral_8x7b")
+    active = cfg.active_param_count()
+    total = cfg.param_count()
+    # top-2 of 8 experts: active ≈ 2/8 of expert params + attn/embed
+    assert active < 0.45 * total
+    ds = get_config("deepseek_v3_671b")
+    assert ds.active_param_count() < 0.12 * ds.param_count()

@@ -1,0 +1,106 @@
+"""Unit tests for the allocation strategies and the offline rebalancer."""
+
+import numpy as np
+import pytest
+
+from repro.core.balancer import (
+    NodeSpec,
+    allocation_imbalance,
+    balanced_allocation,
+    central_allocation,
+    greedy_allocation,
+    node_loads,
+    powers_from_observations,
+    rebalance,
+)
+
+
+def hetero_nodes():
+    # the paper's shape: slow 12-core and fast 32-core machines
+    slow = [NodeSpec(i, cores=12, mips=1.0) for i in range(8)]
+    fast = [NodeSpec(8 + i, cores=32, mips=1.6) for i in range(4)]
+    return slow + fast
+
+
+def many_regions(n=240, seed=0):
+    rng = np.random.default_rng(seed)
+    return {i: int(b) for i, b in enumerate(rng.integers(6e6, 20e6, n))}
+
+
+class TestGreedy:
+    def test_proportional_to_power(self):
+        nodes = hetero_nodes()
+        rb = many_regions()
+        alloc = greedy_allocation(rb, nodes)
+        loads = node_loads(alloc, rb, nodes)
+        total_b = sum(rb.values())
+        total_p = sum(n.power for n in nodes)
+        for n in nodes:
+            target = total_b * n.power / total_p
+            # within one max-region of the proportional target
+            assert abs(loads[n.node_id] - target) <= max(rb.values())
+
+    def test_beats_balanced_on_hetero(self):
+        nodes = hetero_nodes()
+        rb = many_regions()
+        g = allocation_imbalance(greedy_allocation(rb, nodes), rb, nodes)
+        b = allocation_imbalance(balanced_allocation(rb, nodes), rb, nodes)
+        assert g < b
+        assert g < 0.05
+
+    def test_homogeneous_equals_balanced_quality(self):
+        nodes = [NodeSpec(i, cores=4, mips=1.0) for i in range(8)]
+        rb = {i: 10**7 for i in range(64)}  # uniform regions
+        g = allocation_imbalance(greedy_allocation(rb, nodes), rb, nodes)
+        b = allocation_imbalance(balanced_allocation(rb, nodes), rb, nodes)
+        assert g == pytest.approx(0.0, abs=1e-9)
+        assert b == pytest.approx(0.0, abs=1e-9)
+
+    def test_all_regions_assigned_to_live_nodes(self):
+        nodes = hetero_nodes()
+        rb = many_regions(17)
+        for fn in (greedy_allocation, balanced_allocation, central_allocation):
+            alloc = fn(rb, nodes)
+            assert set(alloc) == set(rb)
+            assert set(alloc.values()) <= {n.node_id for n in nodes}
+
+
+class TestRebalance:
+    def test_fixes_balanced_start(self):
+        nodes = hetero_nodes()
+        rb = many_regions()
+        start = balanced_allocation(rb, nodes)
+        imb0 = allocation_imbalance(start, rb, nodes)
+        out, moved = rebalance(start, rb, nodes, tolerance=0.05)
+        imb1 = allocation_imbalance(out, rb, nodes)
+        assert imb1 < imb0
+        assert imb1 < 0.10
+        assert 0 < len(moved) < len(rb)  # moved some, not everything
+
+    def test_noop_when_already_proportional(self):
+        nodes = hetero_nodes()
+        rb = many_regions()
+        good = greedy_allocation(rb, nodes)
+        out, moved = rebalance(good, rb, nodes, tolerance=0.20)
+        assert len(moved) <= len(rb) // 20  # near-zero churn from a good start
+
+    def test_orphan_adoption_on_failure(self):
+        nodes = hetero_nodes()
+        rb = many_regions()
+        alloc = greedy_allocation(rb, nodes)
+        survivors = [n for n in nodes if n.node_id not in (0, 9)]
+        out, moved = rebalance(alloc, rb, survivors)
+        live = {n.node_id for n in survivors}
+        assert set(out.values()) <= live
+        orphans = [r for r, nid in alloc.items() if nid in (0, 9)]
+        assert set(orphans) <= set(moved)
+        assert allocation_imbalance(out, rb, survivors) < 0.15
+
+
+class TestObservedPowers:
+    def test_straggler_deweighted(self):
+        nodes = [NodeSpec(0, cores=1, mips=1.0), NodeSpec(1, cores=1, mips=1.0)]
+        # node 1 keeps taking 4x longer per round
+        obs = {0: [1.0, 1.0, 1.0], 1: [4.0, 4.0, 4.0]}
+        updated = powers_from_observations(obs, nodes)
+        assert updated[0].power > 3 * updated[1].power

@@ -1,0 +1,105 @@
+"""Tests for the paper's eq. (1)-(8) chunk-size model."""
+
+import math
+
+import pytest
+
+from repro.core.chunk_model import (
+    ChunkModel,
+    ChunkModelParams,
+    PAPER_PARAMS,
+    TPU_V5E_PARAMS,
+    tpu_chunk_params,
+)
+
+
+class TestPaperReproduction:
+    """Validates the model against the paper's own claims (§2.4.3, §3.2)."""
+
+    def test_eta_window_matches_paper(self):
+        lo, hi = ChunkModel(PAPER_PARAMS).eta_bounds()
+        # paper assesses eta in [30, 160]: the upper bound is exact
+        # (mem/SizeBig = 160); the lower bound the paper rounds up from
+        # max(#img*SizeSmall/mem, #img/core) = max(9.7, 23.0) = 23.
+        assert hi == 160
+        assert lo == math.ceil(5153 / 224) == 24
+
+    def test_optimal_eta_in_paper_band(self):
+        eta, _ = ChunkModel(PAPER_PARAMS).optimal_eta(metric="wall")
+        assert 50 <= eta <= 62  # paper: optimum observed at 50-60
+
+    def test_resource_time_flat_beyond_80(self):
+        # paper: "when chunk size more than 80, the resource time becomes
+        # similar" — the curve must flatten: relative change < 5% from 80->160
+        cm = ChunkModel(PAPER_PARAMS)
+        r80 = cm.resource_time(80)["total"]
+        r160 = cm.resource_time(160)["total"]
+        assert abs(r160 - r80) / r80 < 0.05
+
+    def test_wall_time_u_shape(self):
+        cm = ChunkModel(PAPER_PARAMS)
+        lo, hi = cm.eta_bounds()
+        eta_star, t_star = cm.optimal_eta()
+        assert cm.wall_time(lo)["total"] > t_star
+        assert cm.wall_time(hi)["total"] > t_star
+
+
+class TestModelStructure:
+    def test_map_term_linear_in_eta(self):
+        cm = ChunkModel(PAPER_PARAMS)
+        m1 = cm.wall_time(40)["map"]
+        m2 = cm.wall_time(80)["map"]
+        m3 = cm.wall_time(120)["map"]
+        assert (m3 - m2) == pytest.approx(m2 - m1, rel=1e-6)
+
+    def test_components_nonnegative(self):
+        cm = ChunkModel(PAPER_PARAMS)
+        for eta in (24, 50, 100, 160):
+            for part, v in cm.wall_time(eta).items():
+                assert v >= 0, (eta, part)
+            for part, v in cm.resource_time(eta).items():
+                assert v >= 0, (eta, part)
+
+    def test_empty_window_raises(self):
+        p = ChunkModelParams(
+            n_img=10_000, size_big=1e9, size_small=1e9, size_gen=1e6,
+            bandwidth=1e8, v_disc_r=1e8, v_disc_w=1e8,
+            mem=1e9, core=2,   # mem/SizeBig = 1 < #img/core = 5000
+        )
+        with pytest.raises(ValueError):
+            ChunkModel(p).eta_bounds()
+
+    def test_resource_time_counts_all_images(self):
+        # RT map term must scale with #img, not with the longest task
+        p1 = PAPER_PARAMS
+        import dataclasses
+        p2 = dataclasses.replace(p1, n_img=2 * p1.n_img, core=2 * p1.core)
+        r1 = ChunkModel(p1).resource_time(60)["map"]
+        r2 = ChunkModel(p2).resource_time(60)["map"]
+        assert r2 == pytest.approx(2 * r1, rel=0.01)
+
+
+class TestTPUTranslation:
+    def test_valid_window_and_optimum(self):
+        cm = ChunkModel(TPU_V5E_PARAMS)
+        lo, hi = cm.eta_bounds()
+        assert lo >= 1 and hi > lo
+        eta, t = cm.optimal_eta()
+        assert lo <= eta <= hi
+        assert t > 0
+
+    def test_colocated_map_has_no_network_term(self):
+        # beta = 0 -> resource map time independent of bandwidth
+        import dataclasses
+        p = tpu_chunk_params(n_img=1000, row_bytes=1e6, n_devices=64)
+        slow = dataclasses.replace(p, bandwidth=p.bandwidth / 100)
+        eta = 16
+        assert ChunkModel(p).resource_time(eta)["map"] == pytest.approx(
+            ChunkModel(slow).resource_time(eta)["map"]
+        )
+
+    def test_tpu_optimum_far_smaller_wall_than_paper(self):
+        # sanity: HBM-speed grid finishes orders of magnitude faster
+        t_paper = ChunkModel(PAPER_PARAMS).optimal_eta()[1]
+        t_tpu = ChunkModel(TPU_V5E_PARAMS).optimal_eta()[1]
+        assert t_tpu < t_paper / 100

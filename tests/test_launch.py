@@ -1,0 +1,158 @@
+"""Launch-layer tests: spec resolution, shapes, HLO parsing, probe math."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.roofline import (
+    collective_bytes_from_hlo,
+    derive_terms,
+)
+from repro.launch.shapes import SHAPES, cell_applicable, input_specs
+from repro.models.config import ModelConfig
+from repro.models.params import resolve_spec, sharding_rules
+from repro.utils import make_mesh
+
+
+class TestResolveSpec:
+    MESH = {"pod": 2, "data": 16, "model": 16}
+
+    def test_divisible_dims_shard(self):
+        rules = sharding_rules()
+        spec = resolve_spec((16384, 53248), ("embed", "mlp"), rules, self.MESH)
+        assert spec == P("data", "model")
+
+    def test_non_divisible_dim_replicates(self):
+        rules = sharding_rules()
+        # 8 kv heads cannot shard over 16-way model
+        spec = resolve_spec((8, 128), ("kv_heads", None), rules, self.MESH)
+        assert spec == P()
+
+    def test_batch_one_replicates(self):
+        rules = sharding_rules()
+        assert resolve_spec((1,), ("batch",), rules, self.MESH) == P()
+        # batch 128 takes pod then data (128 % 32 == 0)
+        spec = resolve_spec((128,), ("batch",), rules, self.MESH)
+        assert spec == P(("pod", "data"))
+
+    def test_axis_never_reused(self):
+        rules = {"a": ("model",), "b": ("model",)}
+        spec = resolve_spec((16, 16), ("a", "b"), rules, self.MESH)
+        assert spec == P("model")  # second dim must not reuse model
+
+    def test_size_one_axis_skipped(self):
+        spec = resolve_spec((64,), ("batch",), sharding_rules(),
+                            {"pod": 1, "data": 8, "model": 2})
+        assert spec == P("data")
+
+
+class TestShapes:
+    def test_all_cells_defined(self):
+        assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                               "long_500k"}
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_input_specs_no_allocation(self, arch):
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, _ = cell_applicable(cfg, shape)
+            if not ok:
+                continue
+            specs = input_specs(cfg, shape)
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct), (arch, shape)
+
+    def test_long_context_skips(self):
+        skips = [a for a in ARCH_IDS
+                 if not cell_applicable(get_config(a), "long_500k")[0]]
+        assert len(skips) == 7  # 33 runnable + 7 documented skips = 40 cells
+
+    def test_decode_specs_have_caches(self):
+        cfg = get_config("llama3p2_1b")
+        specs = input_specs(cfg, "decode_32k")
+        assert "caches" in specs and "token" in specs and "pos" in specs
+        k = jax.tree.leaves(specs["caches"])[0]
+        assert 32768 in k.shape
+
+
+class TestHLOParsing:
+    HLO = """
+  %ar = f32[128,1024]{1,0} all-reduce(f32[128,1024] %x), replica_groups={}
+  %ag.1 = bf16[8,256]{1,0} all-gather(bf16[1,256] %y), dimensions={0}
+  %rs = f32[16]{0} reduce-scatter(f32[256] %z), dimensions={0}
+  %cp = u32[4]{0} collective-permute(u32[4] %w), source_target_pairs={{0,1}}
+  %a2a = bf16[32,32]{1,0} all-to-all(bf16[32,32] %v), dimensions={0}
+  %dot = f32[128,128]{1,0} dot(f32[128,64] %a, f32[64,128] %b)
+"""
+
+    def test_collective_bytes(self):
+        out = collective_bytes_from_hlo(self.HLO)
+        assert out["count"] == 5
+        by = out["by_op"]
+        assert by["all-reduce"] == 128 * 1024 * 4 * 2.0   # ring factor 2
+        assert by["all-gather"] == 8 * 256 * 2
+        assert by["reduce-scatter"] == 16 * 4
+        assert by["collective-permute"] == 4 * 4
+        assert by["all-to-all"] == 32 * 32 * 2
+        # dot must not be counted
+        assert out["wire_bytes"] == sum(by.values())
+
+    def test_start_variant_counted(self):
+        hlo = "%s = f32[64]{0} all-reduce-start(f32[64] %x)"
+        out = collective_bytes_from_hlo(hlo)
+        assert out["count"] == 1
+        assert out["wire_bytes"] == 64 * 4 * 2
+
+
+class TestRooflineTerms:
+    def test_dominant_selection(self):
+        t = derive_terms(flops=197e12, bytes_accessed=1.0, wire_bytes=1.0)
+        assert t.dominant == "compute"
+        assert t.compute_s == pytest.approx(1.0)
+        t = derive_terms(flops=1.0, bytes_accessed=819e9, wire_bytes=1.0)
+        assert t.dominant == "memory"
+        t = derive_terms(flops=1.0, bytes_accessed=1.0, wire_bytes=50e9)
+        assert t.dominant == "collective"
+        assert 0 < t.compute_fraction() <= 1.0
+
+
+class TestProbeCorrection:
+    """Probe-corrected totals must match a fully-unrolled compile."""
+
+    def test_corrected_matches_unrolled(self):
+        from repro.launch.dryrun import compile_cell
+        from repro.launch.probes import corrected, make_probe_plan
+        from repro.launch.shapes import ShapeSpec
+        import repro.launch.shapes as shapes_mod
+
+        cfg = ModelConfig(
+            name="probecheck", family="dense", n_layers=6, d_model=64,
+            n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+            remat_policy="none", dtype=jnp.float32, param_dtype=jnp.float32,
+        )
+        mesh = make_mesh((1, 1), ("data", "model"))
+        # a tiny ad-hoc shape so the test is fast
+        shapes_mod.SHAPES["tiny_train"] = ShapeSpec("tiny_train", 32, 4,
+                                                    "train")
+        try:
+            scanned = compile_cell(cfg, "tiny_train", mesh, "train")
+            unrolled = compile_cell(
+                dataclasses.replace(cfg, scan_layers=False),
+                "tiny_train", mesh, "train")
+            a_cfg, bs_plan = make_probe_plan(cfg)
+            a = compile_cell(a_cfg, "tiny_train", mesh, "train")
+            bs = [(pb, compile_cell(pb.cfg, "tiny_train", mesh, "train"))
+                  for pb in bs_plan]
+            corr = corrected(a, bs)
+            # scanned undercounts; corrected must match unrolled within 5%
+            assert scanned["flops"] < unrolled["flops"]
+            assert corr["flops"] == pytest.approx(unrolled["flops"], rel=0.05)
+            assert corr["bytes"] == pytest.approx(unrolled["bytes"], rel=0.15)
+        finally:
+            del shapes_mod.SHAPES["tiny_train"]

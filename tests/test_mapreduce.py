@@ -1,0 +1,176 @@
+"""MapReduce engine + stats programs (single-device mesh; the 8-device path
+is covered by test_multidevice.py in a subprocess)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.balancer import NodeSpec
+from repro.core.mapreduce import MapReduceEngine
+from repro.core.placement import Placement
+from repro.core.query import (
+    age_sex_predicate,
+    indexed_query,
+    mask_to_device_layout,
+    naive_query,
+)
+from repro.core.regions import HierarchicalSplitPolicy
+from repro.core.stats import (
+    HistogramProgram,
+    MeanProgram,
+    MomentsProgram,
+    VarianceProgram,
+)
+from repro.core.table import ColumnSpec, make_mip_table, make_naive_table
+from repro.utils import make_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((jax.device_count(),), ("data",))
+
+
+@pytest.fixture(scope="module")
+def population():
+    rng = np.random.default_rng(42)
+    n = 257  # deliberately not a chunk multiple
+    data = rng.normal(size=(n, 6, 5)).astype(np.float32)
+    ages = rng.uniform(4, 80, n).astype(np.float32)
+    sexes = rng.integers(0, 2, n).astype(np.int8)
+    sizes = rng.integers(6_000_000, 20_000_001, n)
+    t = make_mip_table(
+        payload_shape=(6, 5),
+        extra_index_columns=[
+            ColumnSpec("age", (), np.float32),
+            ColumnSpec("sex", (), np.int8),
+        ],
+        split_policy=HierarchicalSplitPolicy(max_region_bytes=300_000_000),
+    )
+    t.upload(
+        [f"img{i:05d}" for i in range(n)],
+        {"img": {"data": data},
+         "idx": {"size": sizes, "age": ages, "sex": sexes}},
+    )
+    return t, data, ages, sexes
+
+
+def layout(mesh, table, chunk=16, strategy="greedy"):
+    D = mesh.shape["data"]
+    nodes = [NodeSpec(i, cores=1, mips=1.0) for i in range(D)]
+    pl = Placement.from_strategy(table, nodes, strategy)
+    vals, valid = pl.put_column(mesh, "img", "data", chunk_size=chunk)
+    return pl, vals, valid
+
+
+class TestPrograms:
+    def test_mean_matches_numpy(self, mesh, population):
+        t, data, *_ = population
+        _, vals, valid = layout(mesh, t)
+        res, stats = MapReduceEngine(mesh).run(MeanProgram(), vals, valid, 16)
+        np.testing.assert_allclose(np.asarray(res), data.mean(0), atol=1e-5)
+        assert stats.local_rows_read == len(data)
+
+    def test_variance_matches_numpy(self, mesh, population):
+        t, data, *_ = population
+        _, vals, valid = layout(mesh, t)
+        res, _ = MapReduceEngine(mesh).run(VarianceProgram(), vals, valid, 16)
+        np.testing.assert_allclose(np.asarray(res["var"]), data.var(0), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(res["mean"]), data.mean(0), atol=1e-5)
+        assert int(res["count"]) == len(data)
+
+    def test_moments_match_scipy_formulas(self, mesh, population):
+        t, data, *_ = population
+        _, vals, valid = layout(mesh, t)
+        res, _ = MapReduceEngine(mesh).run(MomentsProgram(), vals, valid, 16)
+        m = data.mean(0)
+        np.testing.assert_allclose(np.asarray(res["mean"]), m, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res["var"]), data.var(0), atol=1e-4)
+        sk = ((data - m) ** 3).mean(0) / data.std(0) ** 3
+        np.testing.assert_allclose(np.asarray(res["skew"]), sk, atol=1e-3)
+
+    def test_histogram_matches_numpy(self, mesh, population):
+        t, data, *_ = population
+        _, vals, valid = layout(mesh, t)
+        prog = HistogramProgram(lo=-4.0, hi=4.0, bins=32)
+        res, _ = MapReduceEngine(mesh).run(prog, vals, valid, 16)
+        ref, _ = np.histogram(data, bins=32, range=(-4.0, 4.0))
+        # clipping differs at the extreme edges only
+        assert abs(float(np.asarray(res).sum()) - data.size) < 1e-3
+        np.testing.assert_allclose(np.asarray(res)[1:-1], ref[1:-1], atol=1)
+
+
+class TestChunkInvariance:
+    @pytest.mark.parametrize("eta", [1, 7, 16, 64, 300])
+    def test_mean_invariant_to_eta(self, mesh, population, eta):
+        t, data, *_ = population
+        _, vals, valid = layout(mesh, t, chunk=eta)
+        res, stats = MapReduceEngine(mesh).run(MeanProgram(), vals, valid, eta)
+        np.testing.assert_allclose(np.asarray(res), data.mean(0), atol=1e-4)
+        assert stats.chunk_size == eta
+
+    def test_rounds_decrease_with_eta(self, mesh, population):
+        t, *_ = population
+        _, vals, valid = layout(mesh, t, chunk=1)
+        eng = MapReduceEngine(mesh)
+        _, s1 = eng.run(MeanProgram(), vals, valid, 1)
+        _, s8 = eng.run(MeanProgram(), vals, valid, 8)
+        assert s8.rounds < s1.rounds
+        assert s8.chunks < s1.chunks
+
+
+class TestQueryIntegration:
+    def test_indexed_and_naive_same_mask(self, population):
+        t, data, ages, sexes = population
+        naive = make_naive_table(
+            payload_shape=(6, 5),
+            extra_index_columns=[
+                ColumnSpec("age", (), np.float32),
+                ColumnSpec("sex", (), np.int8),
+            ],
+        )
+        naive.upload(
+            [f"img{i:05d}" for i in range(len(data))],
+            {"img": {"data": data, "size": t.column("idx", "size"),
+                     "age": ages, "sex": sexes}},
+        )
+        pred = age_sex_predicate(20, 40, sex=1)
+        m1, s1 = indexed_query(t, pred, ["age", "sex"])
+        m2, s2 = naive_query(naive, pred, ["age", "sex"])
+        np.testing.assert_array_equal(m1, m2)
+        # the whole point of the scheme: indexed touches no payload bytes
+        assert s1.payload_bytes_traversed == 0
+        assert s2.payload_bytes_traversed > 1000 * s1.index_bytes_scanned
+
+    def test_subset_average(self, mesh, population):
+        t, data, ages, sexes = population
+        pl, vals, valid = layout(mesh, t)
+        mask, _ = indexed_query(t, age_sex_predicate(20, 40, 1), ["age", "sex"])
+        row_ids, vl = pl.device_layout(chunk_size=16)
+        dm = mask_to_device_layout(mask, row_ids, vl)
+        res, stats = MapReduceEngine(mesh).run(
+            MeanProgram(), vals, valid, 16,
+            row_mask=jax.device_put(dm, pl.data_sharding(mesh)),
+        )
+        ref = data[mask].mean(0)
+        np.testing.assert_allclose(np.asarray(res), ref, atol=1e-5)
+        assert stats.local_rows_read == int(mask.sum())
+
+
+class TestPlacementLayout:
+    def test_all_rows_covered_exactly_once(self, mesh, population):
+        t, *_ = population
+        pl, _, _ = layout(mesh, t)
+        row_ids, valid = pl.device_layout(chunk_size=16)
+        seen = row_ids[valid]
+        assert len(seen) == t.num_rows
+        assert len(np.unique(seen)) == t.num_rows
+
+    def test_capacity_too_small_raises(self, mesh, population):
+        t, *_ = population
+        D = mesh.shape["data"]
+        nodes = [NodeSpec(i) for i in range(D)]
+        pl = Placement.from_strategy(t, nodes, "greedy")
+        with pytest.raises(ValueError):
+            pl.device_layout(capacity=1)

@@ -1,0 +1,131 @@
+"""Multi-device integration: runs the colocation path on 8 fake CPU devices.
+
+The main pytest process must keep the single real device (smoke tests and
+benches depend on it), so these run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_snippet(body: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_colocated_mapreduce_8dev():
+    out = run_snippet("""
+        import numpy as np, jax
+        from repro.core.table import make_mip_table, ColumnSpec
+        from repro.core.balancer import NodeSpec
+        from repro.core.placement import Placement
+        from repro.core.mapreduce import MapReduceEngine
+        from repro.core.stats import MeanProgram, VarianceProgram
+        from repro.core.query import indexed_query, age_sex_predicate, mask_to_device_layout
+        from repro.core.regions import HierarchicalSplitPolicy
+        from repro.utils import make_mesh
+
+        assert jax.device_count() == 8
+        rng = np.random.default_rng(0)
+        n = 300
+        t = make_mip_table(
+            payload_shape=(8, 8),
+            extra_index_columns=[ColumnSpec('age', (), np.float32),
+                                 ColumnSpec('sex', (), np.int8)],
+            split_policy=HierarchicalSplitPolicy(max_region_bytes=12 * 10_000_000))
+        data = rng.normal(size=(n, 8, 8)).astype(np.float32)
+        ages = rng.uniform(4, 80, n).astype(np.float32)
+        sexes = rng.integers(0, 2, n).astype(np.int8)
+        t.upload([f'img{i:05d}' for i in range(n)],
+                 {'img': {'data': data},
+                  'idx': {'size': rng.integers(6_000_000, 20_000_001, n),
+                          'age': ages, 'sex': sexes}})
+
+        mesh = make_mesh((8,), ('data',))
+        nodes = [NodeSpec(i, cores=1, mips=1.0 + 0.2 * (i % 3)) for i in range(8)]
+        pl = Placement.from_strategy(t, nodes, 'greedy')
+        vals, valid = pl.put_column(mesh, 'img', 'data', chunk_size=16)
+
+        # colocation: each device shard holds exactly its placement's rows
+        counts = pl.node_row_counts()
+        per_dev = np.asarray(valid).sum(axis=1)
+        for d in range(8):
+            assert per_dev[d] == counts[d], (d, per_dev[d], counts[d])
+
+        eng = MapReduceEngine(mesh)
+        res, st = eng.run(MeanProgram(), vals, valid, chunk_size=16)
+        assert np.allclose(np.asarray(res), data.mean(0), atol=1e-5)
+        assert st.local_rows_read == n
+
+        resv, _ = eng.run(VarianceProgram(), vals, valid, chunk_size=16)
+        assert np.allclose(np.asarray(resv['var']), data.var(0), atol=1e-4)
+
+        mask, qs = indexed_query(t, age_sex_predicate(20, 40, 1), ['age', 'sex'])
+        row_ids, vl = pl.device_layout(chunk_size=16)
+        dm = mask_to_device_layout(mask, row_ids, vl)
+        sub, _ = eng.run(MeanProgram(), vals, valid, chunk_size=16,
+                         row_mask=jax.device_put(dm, pl.data_sharding(mesh)))
+        assert np.allclose(np.asarray(sub), data[mask].mean(0), atol=1e-5)
+        assert qs.payload_bytes_traversed == 0
+        print('MULTIDEVICE_OK')
+    """)
+    assert "MULTIDEVICE_OK" in out
+
+
+@pytest.mark.slow
+def test_int8_pod_compressed_train_step_8dev():
+    """2 pods × 2 data × 2 model: the int8-DCN gradient sync must train
+    equivalently (within quantization error) to the plain step."""
+    out = run_snippet("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.models.config import ModelConfig
+        from repro.models.model import build_model
+        from repro.optim.adamw import AdamWConfig, adamw_init
+        from repro.train.step import (TrainStepConfig, make_train_step,
+                                      make_compressed_train_step)
+        from repro.utils import make_mesh
+
+        assert jax.device_count() == 8
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                          n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                          remat_policy="none",
+                          dtype=jnp.float32, param_dtype=jnp.float32)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        opt = adamw_init(params)
+        tokens = jax.random.randint(jax.random.key(1), (8, 17), 0, 64)
+
+        plain = jax.jit(make_train_step(cfg, model, AdamWConfig(lr=1e-3)))
+        comp = jax.jit(make_compressed_train_step(
+            cfg, model, AdamWConfig(lr=1e-3), mesh))
+
+        p1, o1, m1 = plain(params, opt, tokens, 0)
+        with mesh:
+            p2, o2, m2 = comp(params, opt, tokens, jnp.zeros((), jnp.int32))
+        l1, l2 = float(m1["loss"]), float(m2["loss"])
+        # pod-local losses get pmean'd; must agree with the global loss
+        assert abs(l1 - l2) < 5e-2, (l1, l2)
+        # parameter updates agree within int8 quantization error
+        d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), p1, p2)
+        worst = max(jax.tree.leaves(d))
+        assert worst < 5e-3, worst
+        print("COMPRESSED_OK", l1, l2, worst)
+    """)
+    assert "COMPRESSED_OK" in out

@@ -1,0 +1,225 @@
+"""Hypothesis property tests on ColoGrid's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.core.balancer import (
+    NodeSpec,
+    allocation_imbalance,
+    balanced_allocation,
+    greedy_allocation,
+    node_loads,
+    rebalance,
+)
+from repro.core.chunk_model import ChunkModel, PAPER_PARAMS
+from repro.core.mapreduce import MapReduceEngine
+from repro.core.query import indexed_query, naive_query
+from repro.core.regions import ConstantSizeSplitPolicy, HierarchicalSplitPolicy, RegionSet
+from repro.core.stats import MeanProgram, VarianceProgram
+from repro.core.table import ColumnSpec, make_mip_table, make_naive_table
+from repro.utils import make_mesh
+
+# ----------------------------------------------------------------------
+# strategies
+# ----------------------------------------------------------------------
+
+region_bytes_st = st.dictionaries(
+    st.integers(0, 500),
+    st.integers(1, 20_000_000),
+    min_size=1,
+    max_size=60,
+)
+
+nodes_st = st.lists(
+    st.tuples(st.integers(1, 32), st.floats(0.25, 4.0)),
+    min_size=1,
+    max_size=12,
+).map(
+    lambda specs: [
+        NodeSpec(i, cores=c, mips=m) for i, (c, m) in enumerate(specs)
+    ]
+)
+
+
+# ----------------------------------------------------------------------
+# balancer invariants
+# ----------------------------------------------------------------------
+
+class TestBalancerProperties:
+    @given(rb=region_bytes_st, nodes=nodes_st)
+    @settings(max_examples=60, deadline=None)
+    def test_greedy_total_preserved_and_bounded(self, rb, nodes):
+        alloc = greedy_allocation(rb, nodes)
+        assert set(alloc) == set(rb)
+        loads = node_loads(alloc, rb, nodes)
+        assert sum(loads.values()) == sum(rb.values())
+        # greedy deviation from proportional is bounded by one region
+        total_p = sum(n.power for n in nodes)
+        for n in nodes:
+            target = sum(rb.values()) * n.power / total_p
+            assert loads[n.node_id] <= target + max(rb.values()) + 1e-6
+
+    @given(rb=region_bytes_st, nodes=nodes_st)
+    @settings(max_examples=60, deadline=None)
+    def test_rebalance_never_worse(self, rb, nodes):
+        start = balanced_allocation(rb, nodes)
+        out, _ = rebalance(start, rb, nodes)
+        assert allocation_imbalance(out, rb, nodes) <= (
+            allocation_imbalance(start, rb, nodes) + 1e-9
+        )
+
+    @given(rb=region_bytes_st, nodes=nodes_st, data=st.data())
+    @settings(max_examples=40, deadline=None)
+    def test_rebalance_adopts_all_orphans(self, rb, nodes, data):
+        alloc = greedy_allocation(rb, nodes)
+        if len(nodes) < 2:
+            return
+        dead = data.draw(st.sampled_from([n.node_id for n in nodes]))
+        survivors = [n for n in nodes if n.node_id != dead]
+        out, _ = rebalance(alloc, rb, survivors)
+        assert set(out) == set(rb)
+        assert dead not in set(out.values())
+
+
+# ----------------------------------------------------------------------
+# region split invariants
+# ----------------------------------------------------------------------
+
+class TestRegionProperties:
+    @given(
+        sizes=st.lists(st.integers(1, 100), min_size=1, max_size=200),
+        threshold=st.integers(10, 400),
+        hierarchical=st.booleans(),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_splits_tile_keyspace(self, sizes, threshold, hierarchical):
+        keys = np.array([f"k{i:05d}".encode() for i in range(len(sizes))],
+                        dtype="S64")
+        row_bytes = np.array(sizes, dtype=np.int64)
+        policy_cls = (HierarchicalSplitPolicy if hierarchical
+                      else ConstantSizeSplitPolicy)
+        rs = RegionSet(policy_cls(max_region_bytes=threshold))
+        rs.maybe_split(keys, row_bytes)
+        rs.check_invariants()
+        # rows are covered exactly once
+        covered = sum(r.num_rows(keys) for r in rs)
+        assert covered == len(sizes)
+        # every multi-row region is within threshold OR indivisible
+        for r in rs:
+            if r.num_rows(keys) >= 2:
+                assert r.num_bytes(keys, row_bytes) <= max(
+                    threshold, int(row_bytes.max()) * 2
+                )
+
+
+# ----------------------------------------------------------------------
+# chunk model invariants
+# ----------------------------------------------------------------------
+
+class TestChunkModelProperties:
+    @given(eta=st.integers(24, 160))
+    @settings(max_examples=60, deadline=None)
+    def test_wall_le_resource_at_scale(self, eta):
+        cm = ChunkModel(PAPER_PARAMS)
+        # resource time counts every node's busy time; with 224 cores it
+        # must dominate the single-critical-path wall time
+        assert cm.resource_time(eta)["total"] >= cm.wall_time(eta)["map"]
+
+    @given(eta=st.integers(24, 159))
+    @settings(max_examples=40, deadline=None)
+    def test_map_wall_monotone_in_eta(self, eta):
+        cm = ChunkModel(PAPER_PARAMS)
+        assert cm.wall_time(eta + 1)["map"] >= cm.wall_time(eta)["map"]
+
+
+# ----------------------------------------------------------------------
+# mapreduce: chunk-size invariance of results (the paper's key free param)
+# ----------------------------------------------------------------------
+
+class TestMapReduceProperties:
+    @given(
+        n=st.integers(3, 80),
+        eta=st.integers(1, 32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_mean_invariant_under_chunking(self, n, eta, seed):
+        rng = np.random.default_rng(seed)
+        data = rng.normal(size=(n, 3)).astype(np.float32)
+        mesh = make_mesh((jax.device_count(),), ("data",))
+        D = mesh.shape["data"]
+        cap = -(-n // D)
+        cap = -(-cap // eta) * eta
+        vals = np.zeros((D, cap, 3), np.float32)
+        valid = np.zeros((D, cap), bool)
+        flat = 0
+        for d in range(D):
+            take = min(cap, n - flat)
+            if take > 0:
+                vals[d, :take] = data[flat:flat + take]
+                valid[d, :take] = True
+                flat += take
+        assert flat == n
+        res, _ = MapReduceEngine(mesh).run(MeanProgram(), vals, valid, eta)
+        np.testing.assert_allclose(np.asarray(res), data.mean(0), atol=2e-4)
+
+    @given(seed=st.integers(0, 2**31 - 1), eta=st.integers(1, 16))
+    @settings(max_examples=15, deadline=None)
+    def test_variance_merge_associative(self, seed, eta):
+        rng = np.random.default_rng(seed)
+        data = rng.normal(size=(37, 2)).astype(np.float32) * 3 + 1
+        mesh = make_mesh((jax.device_count(),), ("data",))
+        D = mesh.shape["data"]
+        cap = -(-(-(-37 // D)) // eta) * eta
+        vals = np.zeros((D, cap, 2), np.float32)
+        valid = np.zeros((D, cap), bool)
+        flat = 0
+        for d in range(D):
+            take = min(cap, 37 - flat)
+            if take > 0:
+                vals[d, :take] = data[flat:flat + take]
+                valid[d, :take] = True
+                flat += take
+        res, _ = MapReduceEngine(mesh).run(VarianceProgram(), vals, valid, eta)
+        np.testing.assert_allclose(np.asarray(res["var"]), data.var(0),
+                                   rtol=1e-3, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# query equivalence: proposed and naive schemes agree on the answer
+# ----------------------------------------------------------------------
+
+class TestQueryProperties:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        lo=st.floats(0, 60),
+        width=st.floats(1, 40),
+        sex=st.sampled_from([None, 0, 1]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_schemes_agree(self, seed, lo, width, sex):
+        rng = np.random.default_rng(seed)
+        n = 64
+        data = rng.normal(size=(n, 2)).astype(np.float32)
+        ages = rng.uniform(0, 90, n).astype(np.float32)
+        sexes = rng.integers(0, 2, n).astype(np.int8)
+        sizes = rng.integers(6e6, 20e6, n)
+        keys = [f"i{j:04d}" for j in range(n)]
+        idx_cols = [ColumnSpec("age", (), np.float32),
+                    ColumnSpec("sex", (), np.int8)]
+        prop = make_mip_table(payload_shape=(2,), extra_index_columns=idx_cols)
+        prop.upload(keys, {"img": {"data": data},
+                           "idx": {"size": sizes, "age": ages, "sex": sexes}})
+        naive = make_naive_table(payload_shape=(2,), extra_index_columns=idx_cols)
+        naive.upload(keys, {"img": {"data": data, "size": sizes,
+                                    "age": ages, "sex": sexes}})
+
+        from repro.core.query import age_sex_predicate
+        pred = age_sex_predicate(lo, lo + width, sex)
+        m1, s1 = indexed_query(prop, pred, ["age", "sex"])
+        m2, s2 = naive_query(naive, pred, ["age", "sex"])
+        np.testing.assert_array_equal(m1, m2)
+        assert s1.payload_bytes_traversed == 0
+        assert s2.payload_bytes_traversed == int(naive.row_bytes().sum())

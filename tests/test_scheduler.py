@@ -1,0 +1,91 @@
+"""Grid scheduler: straggler mitigation, failure handling, elastic joins."""
+
+import numpy as np
+
+from repro.core.balancer import NodeSpec, allocation_imbalance
+from repro.core.placement import Placement
+from repro.core.regions import HierarchicalSplitPolicy
+from repro.core.scheduler import GridScheduler
+from repro.core.table import ColumnSpec, make_mip_table
+
+
+def build(n_rows=256, n_nodes=4, seed=0):
+    rng = np.random.default_rng(seed)
+    t = make_mip_table(
+        payload_shape=(2,),
+        split_policy=HierarchicalSplitPolicy(max_region_bytes=int(80e6)),
+    )
+    t.upload(
+        [f"r{i:05d}" for i in range(n_rows)],
+        {"img": {"data": rng.normal(size=(n_rows, 2)).astype(np.float32)},
+         "idx": {"size": rng.integers(6e6, 20e6, n_rows)}},
+    )
+    nodes = [NodeSpec(i, cores=1, mips=1.0) for i in range(n_nodes)]
+    pl = Placement.from_strategy(t, nodes, "greedy")
+    return t, pl
+
+
+class TestStragglerMitigation:
+    def test_sustained_straggler_triggers_rebalance(self):
+        t, pl = build()
+        sched = GridScheduler(pl, chunk_size=8, rebalance_threshold=0.2,
+                              min_rounds_between_rebalance=1)
+        ev = None
+        # node 3 is 4x slower every round
+        for _ in range(12):
+            times = {0: 1.0, 1: 1.0, 2: 1.0, 3: 4.0}
+            ev = sched.observe_round(times) or ev
+        assert ev is not None and ev.reason == "straggler"
+        # regions shifted away from node 3
+        loads = pl.node_bytes()
+        assert loads[3] < loads[0]
+
+    def test_no_rebalance_when_uniform(self):
+        t, pl = build()
+        sched = GridScheduler(pl, chunk_size=8, rebalance_threshold=0.2,
+                              min_rounds_between_rebalance=1)
+        for _ in range(6):
+            ev = sched.observe_round({i: 1.0 for i in range(4)})
+            assert ev is None
+
+
+class TestFailureHandling:
+    def test_failure_orphans_adopted(self):
+        t, pl = build()
+        rows_before = sum(pl.node_row_counts().values())
+        sched = GridScheduler(pl, chunk_size=8)
+        ev = sched.handle_failure([2])
+        assert ev.reason == "failure"
+        assert 2 not in {n.node_id for n in pl.nodes}
+        # no rows lost, none on the dead node
+        counts = pl.node_row_counts()
+        assert sum(counts.values()) == rows_before
+        assert set(counts) == {0, 1, 3}
+        live_ids = {n.node_id for n in pl.nodes}
+        assert set(pl.alloc.values()) <= live_ids
+
+    def test_elastic_join_takes_load(self):
+        t, pl = build(n_nodes=2)
+        sched = GridScheduler(pl, chunk_size=8)
+        before = max(pl.node_row_counts().values())
+        ev = sched.handle_join([NodeSpec(7, cores=1, mips=2.0)])
+        assert ev.reason == "elastic"
+        counts = pl.node_row_counts()
+        assert counts[7] > 0                      # newcomer got work
+        assert max(counts.values()) < before      # peak load dropped
+        # fast newcomer gets the largest share
+        assert counts[7] == max(counts.values())
+
+
+class TestPlanning:
+    def test_makespan_estimate_decreases_after_rebalance(self):
+        t, pl = build()
+        sched = GridScheduler(pl, chunk_size=8, rebalance_threshold=0.1,
+                              min_rounds_between_rebalance=1)
+        for _ in range(8):
+            sched.observe_round({0: 1.0, 1: 1.0, 2: 1.0, 3: 6.0})
+        imb = allocation_imbalance(
+            pl.alloc, t.region_bytes(),
+            sched._current_nodes(),
+        )
+        assert imb < 0.6  # proportional-ish under the observed powers

@@ -1,0 +1,140 @@
+"""Discrete-event simulator tests, incl. reproduction of paper orderings."""
+
+import numpy as np
+import pytest
+
+from repro.core.balancer import (
+    NodeSpec,
+    balanced_allocation,
+    greedy_allocation,
+)
+from repro.core.simulator import (
+    ClusterSim,
+    SimTask,
+    mapreduce_job_tasks,
+    paper_cluster,
+)
+
+
+class TestMechanics:
+    def test_single_task_timing(self):
+        node = NodeSpec(0, cores=1, mips=1.0,
+                        disk_read_bps=100e6, disk_write_bps=50e6)
+        sim = ClusterSim([node], bandwidth=70e6)
+        t = SimTask(0, input_bytes=100e6, output_bytes=50e6, work=5.0,
+                    home_node=0)
+        res = sim.run([t], "hadoop")
+        # 1s read + 5s compute + 1s write
+        assert res.wall_time == pytest.approx(7.0, rel=1e-6)
+        assert res.resource_time == pytest.approx(7.0, rel=1e-6)
+
+    def test_remote_read_uses_network(self):
+        nodes = [NodeSpec(0, cores=1), NodeSpec(1, cores=1)]
+        sim = ClusterSim(nodes, bandwidth=70e6, allow_steal=True)
+        # node 0 backlogged beyond one wave; node 1 steals, paying the network
+        tasks = [
+            SimTask(0, 0, 0, work=100.0, home_node=0),
+            SimTask(1, input_bytes=70e6, output_bytes=0, work=1.0, home_node=0),
+            SimTask(2, input_bytes=70e6, output_bytes=0, work=1.0, home_node=0),
+        ]
+        res = sim.run(tasks, "hadoop")
+        stolen = [t for t in res.tasks if t.exec_node == 1]
+        assert stolen and all(t.read_remote for t in stolen)
+        assert stolen[0].end - stolen[0].start == pytest.approx(2.0, rel=1e-6)
+
+    def test_no_steal_when_pinned(self):
+        nodes = [NodeSpec(0, cores=1), NodeSpec(1, cores=1)]
+        sim = ClusterSim(nodes, bandwidth=70e6)  # allow_steal defaults False
+        tasks = [SimTask(i, 0, 0, work=1.0, home_node=0) for i in range(4)]
+        res = sim.run(tasks, "hadoop")
+        assert all(t.exec_node == 0 for t in res.tasks)
+        assert res.wall_time == pytest.approx(4.0, rel=1e-6)
+
+    def test_network_fair_sharing(self):
+        nodes = [NodeSpec(i, cores=1) for i in range(4)]
+        sim = ClusterSim(nodes, bandwidth=100e6)
+        # 4 concurrent remote reads of 100MB share 100MB/s -> 4s each
+        tasks = [SimTask(i, 100e6, 0, 0.01, home_node=None) for i in range(4)]
+        res = sim.run(tasks, "sge")
+        assert res.wall_time == pytest.approx(4.0, rel=0.02)
+
+    def test_mips_scales_compute(self):
+        fast = NodeSpec(0, cores=1, mips=2.0)
+        sim = ClusterSim([fast], bandwidth=70e6)
+        res = sim.run([SimTask(0, 0, 0, work=10.0, home_node=0)], "hadoop")
+        assert res.wall_time == pytest.approx(5.0, rel=1e-6)
+
+    def test_core_slots_limit_concurrency(self):
+        node = NodeSpec(0, cores=2, mips=1.0)
+        sim = ClusterSim([node], bandwidth=70e6)
+        tasks = [SimTask(i, 0, 0, work=1.0, home_node=0) for i in range(4)]
+        res = sim.run(tasks, "hadoop")
+        assert res.wall_time == pytest.approx(2.0, rel=1e-6)
+        assert res.resource_time == pytest.approx(4.0, rel=1e-6)
+
+
+class TestPaperOrderings:
+    """Qualitative reproduction of Fig. 3: the orderings the paper reports."""
+
+    def _compression_tasks(self, alloc, region_of_task, extra_work):
+        # use case 1: 5153 single-image .gz jobs (15MB in, 9MB out), scaled 1/8
+        n = 644
+        return [
+            SimTask(
+                i,
+                input_bytes=15e6,
+                output_bytes=8.9e6,
+                work=3.0 + extra_work,
+                home_node=alloc[region_of_task(i)],
+            )
+            for i in range(n)
+        ]
+
+    @pytest.mark.parametrize("extra_work", [40.0, 100.0])
+    def test_balancer_beats_default_on_hetero(self, extra_work):
+        nodes = paper_cluster()
+        rng = np.random.default_rng(0)
+        n_regions = 96
+        region_bytes = {i: int(b) for i, b in
+                        enumerate(rng.integers(50e6, 150e6, n_regions))}
+        region_of_task = lambda i: i % n_regions
+        sim = ClusterSim(nodes, bandwidth=70e6)
+
+        t_bal = sim.run(self._compression_tasks(
+            balanced_allocation(region_bytes, nodes), region_of_task,
+            extra_work), "hadoop")
+        t_gre = sim.run(self._compression_tasks(
+            greedy_allocation(region_bytes, nodes), region_of_task,
+            extra_work), "hadoop")
+        # the paper reports ~1.5x; require a solid improvement
+        assert t_gre.wall_time < t_bal.wall_time
+        assert t_bal.wall_time / t_gre.wall_time > 1.2
+
+    def test_hadoop_beats_sge_on_read_intensive(self):
+        # use case 2 flavour: read-heavy, short compute -> SGE saturates net
+        nodes = paper_cluster()
+        rng = np.random.default_rng(1)
+        region_bytes = {i: int(b) for i, b in
+                        enumerate(rng.integers(50e6, 150e6, 96))}
+        alloc = greedy_allocation(region_bytes, nodes)
+        tasks = [
+            SimTask(i, input_bytes=13e6 * 55, output_bytes=21e6,
+                    work=0.4 * 55 + 5, home_node=alloc[i % 96])
+            for i in range(93)  # 5153/55 map tasks
+        ]
+        sim = ClusterSim(nodes, bandwidth=70e6)
+        h = sim.run(tasks, "hadoop")
+        s = sim.run(tasks, "sge")
+        assert s.wall_time > 2 * h.wall_time
+        assert s.resource_time > 2 * h.resource_time
+
+
+class TestMapReduceJobBuilder:
+    def test_task_count_and_sizes(self):
+        maps, red = mapreduce_job_tasks(
+            n_img=5153, eta=55, size_in=13e6, size_gen=21e6,
+            avg_fn=lambda e: 0.4 * e + 5, placement_of_chunk=lambda i: None,
+        )
+        assert len(maps) == 5153 // 55 + 1  # remainder chunk
+        assert maps[0].input_bytes == pytest.approx(55 * 13e6)
+        assert red.input_bytes == pytest.approx(len(maps) * 21e6)

@@ -1,0 +1,196 @@
+"""Substrate tests: optimizer, schedules, compression, checkpointing, data
+pipeline, and a small end-to-end training integration (loss must drop)."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager, latest_step
+from repro.data.pipeline import (
+    ColocatedTokenDataset,
+    synthetic_image_population,
+    synthetic_token_table,
+)
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.compression import int8_compress, int8_decompress
+from repro.optim.schedule import linear_warmup_cosine
+from repro.train.step import TrainStepConfig, make_train_state, make_train_step
+from repro.utils import make_mesh
+
+
+class TestAdamW:
+    def test_quadratic_converges(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip_norm=None)
+        params = {"w": jnp.array([3.0, -2.0])}
+        state = adamw_init(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}  # d/dw ||w||^2
+            params, state, _ = adamw_update(cfg, params, grads, state)
+        assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+    def test_weight_decay_mask(self):
+        cfg = AdamWConfig(lr=0.0, weight_decay=1.0, grad_clip_norm=None)
+        params = {"w": jnp.ones(3), "norm_scale": jnp.ones(3)}
+        state = adamw_init(params)
+        zero_g = jax.tree.map(jnp.zeros_like, params)
+        new, _, _ = adamw_update(cfg, params, zero_g, state)
+        # lr=0: nothing moves regardless — use lr>0 to see decay selectivity
+        cfg = AdamWConfig(lr=0.1, weight_decay=1.0, grad_clip_norm=None)
+        new, _, _ = adamw_update(cfg, params, zero_g, adamw_init(params))
+        assert float(new["w"][0]) < 1.0            # decayed
+        assert float(new["norm_scale"][0]) == 1.0  # masked (name contains norm)
+
+    def test_grad_clip(self):
+        cfg = AdamWConfig(lr=1e-3, grad_clip_norm=1.0)
+        params = {"w": jnp.zeros(4)}
+        g = {"w": jnp.full(4, 100.0)}
+        _, _, gnorm = adamw_update(cfg, params, g, adamw_init(params))
+        assert float(gnorm) == pytest.approx(200.0)  # pre-clip norm reported
+
+    def test_schedule(self):
+        s0 = linear_warmup_cosine(jnp.asarray(0), 10, 100)
+        s10 = linear_warmup_cosine(jnp.asarray(10), 10, 100)
+        s100 = linear_warmup_cosine(jnp.asarray(100), 10, 100)
+        assert float(s0) == 0.0
+        assert float(s10) == pytest.approx(1.0, abs=0.02)
+        assert float(s100) == pytest.approx(0.1, abs=0.02)
+
+
+class TestCompression:
+    def test_roundtrip_error_bound(self):
+        rng = np.random.default_rng(0)
+        tree = {"a": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32)),
+                "b": jnp.asarray(rng.normal(size=(7,)).astype(np.float32) * 10)}
+        q, s = int8_compress(tree)
+        out = int8_decompress(q, s)
+        for k in tree:
+            err = np.abs(np.asarray(out[k]) - np.asarray(tree[k])).max()
+            scale = float(np.abs(np.asarray(tree[k])).max())
+            assert err <= scale / 127 + 1e-6  # one quantization bucket
+
+    def test_int8_dtype_on_wire(self):
+        q, _ = int8_compress({"a": jnp.ones((8,), jnp.float32)})
+        assert q["a"].dtype == jnp.int8
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_retention(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        mgr = CheckpointManager(d, keep_last=2)
+        tree = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+                "opt": {"m": jnp.zeros((2, 3))}}
+        for step in (1, 2, 3, 4):
+            mgr.save(step, tree, metadata={"next_step": step}, async_=False)
+        assert mgr.latest_step() == 4
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(d)
+                       if n.startswith("step_"))
+        assert steps == [3, 4]  # retention
+
+        template = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+        restored, meta = mgr.restore(template)
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"]))
+        assert meta["next_step"] == 4
+
+    def test_async_save(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        mgr = CheckpointManager(d)
+        mgr.save(7, {"w": jnp.ones(3)}, async_=True)
+        mgr.wait()
+        assert latest_step(d) == 7
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        mgr = CheckpointManager(d)
+        mgr.save(1, {"w": jnp.ones(3)}, async_=False)
+        with pytest.raises(ValueError):
+            mgr.restore({"w": jnp.ones(4)})
+
+    def test_crash_safe_tmp_never_restored(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        mgr = CheckpointManager(d)
+        mgr.save(1, {"w": jnp.ones(3)}, async_=False)
+        os.makedirs(os.path.join(d, "step_000000009.tmp"))
+        assert latest_step(d) == 1  # tmp dirs are invisible
+
+
+class TestDataPipeline:
+    def test_colocated_batches(self):
+        table = synthetic_token_table(n_rows=64, seq_len=32, vocab=100)
+        mesh = make_mesh((jax.device_count(),), ("data",))
+        ds = ColocatedTokenDataset(table, mesh, global_batch=8)
+        b0 = ds.next_batch(0)
+        b0_again = ds.next_batch(0)
+        b1 = ds.next_batch(1)
+        assert b0.shape == (8, 32)
+        np.testing.assert_array_equal(np.asarray(b0), np.asarray(b0_again))
+        assert not np.array_equal(np.asarray(b0), np.asarray(b1))
+        assert int(jnp.max(b0)) < 100
+
+    def test_population_strata(self):
+        t = synthetic_image_population(payload_shape=(4, 4, 4), scale=0.05)
+        ages = t.column("idx", "age")
+        sexes = t.column("idx", "sex")
+        assert t.num_rows > 200
+        # all four strata populated for both sexes
+        for lo, hi in ((4, 20), (20, 40), (40, 60), (60, 98)):
+            sel = (ages >= lo) & (ages < hi)
+            assert (sexes[sel] == 0).sum() > 0
+            assert (sexes[sel] == 1).sum() > 0
+
+
+class TestTrainIntegration:
+    def test_loss_decreases_tiny_lm(self, tmp_path):
+        cfg = ModelConfig(
+            name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=2, d_ff=128, vocab=128, remat_policy="none",
+            dtype=jnp.float32, param_dtype=jnp.float32,
+        )
+        model = build_model(cfg)
+        params, opt_state = make_train_state(cfg, model, jax.random.key(0))
+        step = jax.jit(make_train_step(
+            cfg, model, AdamWConfig(lr=1e-3),
+            TrainStepConfig(num_microbatches=2)))
+        table = synthetic_token_table(n_rows=128, seq_len=33, vocab=128)
+        mesh = make_mesh((jax.device_count(),), ("data",))
+        ds = ColocatedTokenDataset(table, mesh, global_batch=8)
+
+        losses = []
+        for i in range(30):
+            batch = ds.next_batch(i)
+            params, opt_state, metrics = step(params, opt_state, batch, i)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.2, losses[:3] + losses[-3:]
+        assert np.isfinite(losses).all()
+
+    def test_resume_from_checkpoint(self, tmp_path):
+        from repro.train.trainer import Trainer, TrainerConfig
+        cfg = ModelConfig(
+            name="tiny", family="dense", n_layers=1, d_model=32, n_heads=2,
+            n_kv_heads=1, d_ff=64, vocab=64, remat_policy="none",
+            dtype=jnp.float32, param_dtype=jnp.float32,
+        )
+        model = build_model(cfg)
+        params, opt_state = make_train_state(cfg, model, jax.random.key(0))
+        step = jax.jit(make_train_step(cfg, model, AdamWConfig(lr=1e-3)))
+        table = synthetic_token_table(n_rows=32, seq_len=17, vocab=64)
+        mesh = make_mesh((jax.device_count(),), ("data",))
+        ds = ColocatedTokenDataset(table, mesh, global_batch=4)
+
+        tc = TrainerConfig(total_steps=6, log_every=100, checkpoint_every=3,
+                           checkpoint_dir=str(tmp_path / "ck"))
+        trainer = Trainer(step, ds, tc)
+        p1, o1, _ = trainer.run(params, opt_state)
+
+        # resume: a fresh trainer must pick up at step 6 (no-op run)
+        trainer2 = Trainer(step, ds, tc)
+        p2, o2, hist = trainer2.run(params, opt_state)
+        np.testing.assert_allclose(
+            np.asarray(p1["embed"]["table"]),
+            np.asarray(p2["embed"]["table"]), rtol=1e-6)

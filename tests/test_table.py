@@ -1,0 +1,165 @@
+"""Unit tests for the TensorTable columnar store (HBase analogue)."""
+
+import numpy as np
+import pytest
+
+from repro.core.regions import (
+    ConstantSizeSplitPolicy,
+    HierarchicalSplitPolicy,
+    RegionSet,
+)
+from repro.core.table import (
+    ColumnFamily,
+    ColumnSpec,
+    TensorTable,
+    make_mip_table,
+    make_naive_table,
+)
+
+
+def small_table(split_bytes=10**18):
+    return make_mip_table(
+        payload_shape=(4,),
+        extra_index_columns=[ColumnSpec("age", (), np.float32)],
+        split_policy=HierarchicalSplitPolicy(max_region_bytes=split_bytes),
+    )
+
+
+def upload_rows(t, keys, seed=0, sizes=None, ages=None):
+    rng = np.random.default_rng(seed)
+    n = len(keys)
+    payload = rng.normal(size=(n, 4)).astype(np.float32)
+    sizes = np.full(n, 10, dtype=np.int64) if sizes is None else np.asarray(sizes)
+    ages = rng.uniform(0, 90, n).astype(np.float32) if ages is None else ages
+    t.upload(keys, {"img": {"data": payload}, "idx": {"size": sizes, "age": ages}})
+    return payload
+
+
+class TestUploadRetrieve:
+    def test_roundtrip_sorted(self):
+        t = small_table()
+        payload = upload_rows(t, ["b", "a", "c"])
+        keys, vals = t.retrieve("img", "data")
+        assert [k.decode() for k in keys] == ["a", "b", "c"]
+        # values must follow the sorted key order
+        np.testing.assert_array_equal(vals[0], payload[1])
+        np.testing.assert_array_equal(vals[1], payload[0])
+        t.check_invariants()
+
+    def test_single_rowkey_and_range(self):
+        t = small_table()
+        upload_rows(t, [f"k{i:03d}" for i in range(20)])
+        keys, vals = t.retrieve("img", "data", rowkey="k007")
+        assert len(keys) == 1 and keys[0] == b"k007"
+        keys, _ = t.retrieve("img", "data", start="k005", stop="k010")
+        assert [k.decode() for k in keys] == [f"k{i:03d}" for i in range(5, 10)]
+
+    def test_skip_list(self):
+        t = small_table()
+        upload_rows(t, [f"k{i}" for i in range(5)])
+        keys, _ = t.retrieve("img", "data", skip=["k1", "k3"])
+        assert [k.decode() for k in keys] == ["k0", "k2", "k4"]
+
+    def test_duplicate_skipped_without_overwrite(self):
+        t = small_table()
+        upload_rows(t, ["a", "b"], seed=0)
+        before = t.retrieve("img", "data", rowkey="a")[1].copy()
+        n = t.upload(
+            ["a"],
+            {
+                "img": {"data": np.ones((1, 4), np.float32)},
+                "idx": {"size": np.array([10]), "age": np.array([1.0], np.float32)},
+            },
+            overwrite=False,
+        )
+        assert n == 0
+        np.testing.assert_array_equal(t.retrieve("img", "data", rowkey="a")[1], before)
+
+    def test_overwrite_updates(self):
+        t = small_table()
+        upload_rows(t, ["a", "b"])
+        n = t.upload(
+            ["a"],
+            {
+                "img": {"data": np.ones((1, 4), np.float32)},
+                "idx": {"size": np.array([10]), "age": np.array([1.0], np.float32)},
+            },
+            overwrite=True,
+        )
+        assert n == 1
+        np.testing.assert_array_equal(
+            t.retrieve("img", "data", rowkey="a")[1][0], np.ones(4, np.float32)
+        )
+        assert t.num_rows == 2
+
+    def test_schema_validation(self):
+        t = small_table()
+        with pytest.raises(ValueError):
+            t.upload(["a"], {"img": {"data": np.ones((1, 5), np.float32)},
+                             "idx": {"size": np.array([1]),
+                                     "age": np.array([1.0], np.float32)}})
+        with pytest.raises(ValueError):
+            t.upload(["a"], {"img": {"data": np.ones((1, 4), np.float32)}})
+
+    def test_delete(self):
+        t = small_table()
+        upload_rows(t, [f"k{i}" for i in range(10)])
+        removed = t.delete(start="k2", stop="k5")
+        assert removed == 3
+        assert t.num_rows == 7
+        t.check_invariants()
+
+
+class TestRegions:
+    def test_split_on_threshold(self):
+        t = small_table(split_bytes=50)
+        upload_rows(t, [f"k{i:02d}" for i in range(16)],
+                    sizes=np.full(16, 10, np.int64))
+        # 160 logical bytes, 50-byte threshold -> >= 4 regions
+        assert len(t.regions) >= 4
+        t.check_invariants()
+
+    def test_hierarchical_split_balances_bytes(self):
+        t = small_table(split_bytes=1000)
+        # one huge row then many small: hierarchical split puts the huge row
+        # alone-ish; byte imbalance between children stays bounded
+        sizes = np.array([900] + [20] * 20, dtype=np.int64)
+        upload_rows(t, [f"k{i:02d}" for i in range(21)], sizes=sizes)
+        rb = list(t.region_bytes().values())
+        assert len(rb) >= 2
+        assert max(rb) <= 1000  # no region exceeds a sane multiple of threshold
+
+    def test_presplit(self):
+        t = make_mip_table(
+            payload_shape=(4,),
+            extra_index_columns=[ColumnSpec("age", (), np.float32)],
+            presplit_keys=["k05", "k10"],
+        )
+        assert len(t.regions) == 3
+        upload_rows(t, [f"k{i:02d}" for i in range(15)])
+        counts = list(t.region_row_counts().values())
+        assert sorted(counts) == [5, 5, 5]
+
+    def test_region_set_invariants_after_many_splits(self):
+        rs = RegionSet(ConstantSizeSplitPolicy(max_region_bytes=25))
+        keys = np.array([f"r{i:04d}".encode() for i in range(64)], dtype="S64")
+        sizes = np.full(64, 10, np.int64)
+        rs.maybe_split(keys, sizes)
+        rs.check_invariants()
+        total = sum(r.num_rows(keys) for r in rs)
+        assert total == 64
+
+
+class TestByteAccounting:
+    def test_logical_vs_physical(self):
+        t = small_table()
+        upload_rows(t, ["a", "b"], sizes=np.array([7_000_000, 19_000_000]))
+        assert t.total_bytes() == 26_000_000
+        naive = make_naive_table(payload_shape=(4,))
+        n = 3
+        naive.upload(
+            [f"k{i}" for i in range(n)],
+            {"img": {"data": np.zeros((n, 4), np.float32),
+                     "size": np.full(n, 5, np.int64)}},
+        )
+        assert naive.total_bytes() == 15
