@@ -6,6 +6,7 @@ summary EXPERIMENTS.md quotes.  Run:  PYTHONPATH=src python -m benchmarks.run
 
 from __future__ import annotations
 
+import json
 import time
 
 
@@ -39,10 +40,16 @@ def main() -> None:
     print("\n--- [Fig. 6/Table 3] Use case 3: table scheme / rapid query ---")
     t0 = time.perf_counter()
     b3 = bench_table_scheme.run()
-    print(f"bench_table_scheme,{(time.perf_counter()-t0)*1e6:.0f},"
+    elapsed_us = (time.perf_counter() - t0) * 1e6
+    print(f"bench_table_scheme,{elapsed_us:.0f},"
           f"naive_over_proposed_small={b3['naive_over_proposed_small']:.1f}x;"
           f"paper=9x;sge_over_proposed_large="
           f"{b3['sge_over_proposed_large']:.1f}x;paper=3x")
+    # perf-trajectory artifact: one JSON per run, diffable across PRs
+    with open("BENCH_table_scheme.json", "w") as f:
+        json.dump({"bench": "table_scheme", "elapsed_us": round(elapsed_us),
+                   **b3}, f, indent=2, sort_keys=True)
+    print("wrote BENCH_table_scheme.json")
 
     print("\n--- Kernels (interpret-mode validation) ---")
     bench_kernels.run()

@@ -1,10 +1,12 @@
-"""Use case 2 end-to-end: population template via colocated MapReduce.
+"""Use case 2 end-to-end: population template via the GridSession facade.
 
 The paper's §2.2 pipeline on a real (CPU) mesh: synthetic T1 population in
-a TensorTable, greedy placement, chunk size η* from the eq. (1)-(8) model
-(TPU-translated constants), then the MapReduce engine averages the dataset
-with the Pallas streaming-stats kernel as the map fold — validated against
-the jnp oracle, with the byte accounting the colocation claim rests on.
+a TensorTable behind a :class:`GridSession`, greedy placement, chunk size η*
+from the eq. (1)-(8) model (TPU-translated constants), then ``session.run``
+averages the dataset with the Pallas streaming-stats kernel as the map fold —
+validated against the jnp oracle, with the byte accounting the colocation
+claim rests on.  The second ``run`` shows the compiled-plan cache: same
+program + same epoch = no new executable.
 
     PYTHONPATH=src python examples/population_stats.py --scale 0.05
 """
@@ -16,16 +18,11 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-import jax
-
-from repro.core.balancer import NodeSpec
 from repro.core.chunk_model import ChunkModel, tpu_chunk_params
-from repro.core.mapreduce import MapReduceEngine
-from repro.core.placement import Placement
-from repro.core.stats import MeanProgram, VarianceProgram
+from repro.core.grid import GridSession
+from repro.core.stats import VarianceProgram
 from repro.data.pipeline import synthetic_image_population
 from repro.kernels.streaming_stats.ops import KernelMeanProgram
-from repro.utils import make_mesh
 
 
 def main():
@@ -42,10 +39,8 @@ def main():
           f"{table.total_bytes()/1e9:.1f} GB logical "
           f"({len(table.regions)} regions)")
 
-    mesh = make_mesh((jax.device_count(),), ("data",))
-    D = mesh.shape["data"]
-    nodes = [NodeSpec(i, cores=1, mips=1.0) for i in range(D)]
-    pl = Placement.from_strategy(table, nodes, "greedy")
+    session = GridSession(table)
+    D = session.mesh.shape["data"]
 
     # chunk size from the TPU-translated model
     row_bytes = float(np.mean(table.row_bytes()))
@@ -63,10 +58,8 @@ def main():
         eta = max(min(hi, 512), 1)
         print(f"chunk model: {e}\n  -> multi-wave fallback, eta={eta}")
 
-    vals, valid = pl.put_column(mesh, "img", "data", chunk_size=eta)
-    engine = MapReduceEngine(mesh)
-
-    mean_k, stats = engine.run(KernelMeanProgram(), vals, valid, eta)
+    mean_k, report = session.run(KernelMeanProgram(), eta=eta)
+    stats = report.mapreduce
     mean_ref = table.column("img", "data").mean(axis=0)
     err = float(np.abs(np.asarray(mean_k) - mean_ref).max())
     print(f"\nkernel mean over {stats.local_rows_read} rows: "
@@ -77,10 +70,17 @@ def main():
           f"of payload — the colocation win)")
     print(f"  rounds={stats.rounds} chunks={stats.chunks} eta={eta}")
 
-    var, _ = engine.run(VarianceProgram(), vals, valid, eta)
+    compiles_before = session.engine.compile_count
+    _, report2 = session.run(KernelMeanProgram(), eta=eta)
+    print(f"repeat run: plan_cache_hit={report2.plan_cache_hit}, "
+          f"new compiles={session.engine.compile_count - compiles_before}")
+
+    var, _ = session.run(VarianceProgram(), eta=eta)
     verr = float(np.abs(np.asarray(var["var"])
                         - table.column("img", "data").var(axis=0)).max())
     print(f"variance (Chan parallel merge): max err = {verr:.2e}")
+    print()
+    print(session.describe())
 
 
 if __name__ == "__main__":

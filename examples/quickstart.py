@@ -17,7 +17,8 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
-from repro.data.pipeline import ColocatedTokenDataset, synthetic_token_table
+from repro.core.grid import GridSession
+from repro.data.pipeline import synthetic_token_table
 from repro.models.config import ModelConfig
 from repro.models.model import build_model
 from repro.optim.adamw import AdamWConfig
@@ -62,9 +63,11 @@ def main():
     mesh = make_mesh((jax.device_count(),), ("data",))
     table = synthetic_token_table(
         n_rows=2048, seq_len=p["seq"] + 1, vocab=p["vocab"])
+    session = GridSession(table, mesh=mesh)
     print(f"corpus: {table.num_rows} docs in {len(table.regions)} regions, "
-          f"{table.total_bytes()/1e6:.1f} MB")
-    ds = ColocatedTokenDataset(table, mesh, global_batch=p["batch"])
+          f"{table.total_bytes()/1e6:.1f} MB "
+          f"(imbalance {session.imbalance():.3f})")
+    ds = session.token_dataset(global_batch=p["batch"])
 
     schedule = lambda s: linear_warmup_cosine(s, 20, args.steps)
     step = jax.jit(make_train_step(
@@ -77,6 +80,10 @@ def main():
         checkpoint_dir=args.ckpt_dir))
     params, opt_state, history = trainer.run(params, opt_state)
 
+    if not history:
+        print(f"\nresumed checkpoint is already at/past --steps {args.steps}; "
+              f"nothing to train (pass a higher --steps or a fresh --ckpt-dir)")
+        return
     first, last = history[0]["loss"], history[-1]["loss"]
     print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
           f"({'OK' if last < first else 'NOT DECREASING'})")

@@ -15,6 +15,9 @@ The subpackage mirrors HadoopBase-MIP's backend (Bao et al., 2017):
 - :mod:`repro.core.query`       — index-family predicate pushdown vs naive scan.
 - :mod:`repro.core.simulator`   — discrete-event cluster simulator (Hadoop/SGE).
 - :mod:`repro.core.scheduler`   — grid scheduler: rounds, stragglers, failures.
+- :mod:`repro.core.grid`        — :class:`GridSession`, the five-verb facade
+  (upload / retrieve / remove / rebalance / run) with mutation epochs,
+  incremental placement, and a compiled-plan cache.
 """
 
 from repro.core.table import TensorTable, ColumnFamily, ColumnSpec
@@ -26,6 +29,7 @@ from repro.core.regions import (
 )
 from repro.core.balancer import (
     NodeSpec,
+    assign_new_regions,
     balanced_allocation,
     greedy_allocation,
     central_allocation,
@@ -47,11 +51,14 @@ from repro.core.stats import (
     HistogramProgram,
 )
 from repro.core.query import indexed_query, naive_query, QueryStats
+from repro.core.grid import GridSession, RunReport, SessionMetrics
 
 __all__ = [
+    "GridSession", "RunReport", "SessionMetrics",
     "TensorTable", "ColumnFamily", "ColumnSpec",
     "Region", "RegionSet", "ConstantSizeSplitPolicy", "HierarchicalSplitPolicy",
-    "NodeSpec", "balanced_allocation", "greedy_allocation", "central_allocation",
+    "NodeSpec", "assign_new_regions", "balanced_allocation",
+    "greedy_allocation", "central_allocation",
     "rebalance", "allocation_imbalance",
     "Placement",
     "ChunkModelParams", "ChunkModel", "PAPER_PARAMS", "TPU_V5E_PARAMS",

@@ -203,6 +203,39 @@ def rebalance(
     return alloc, moved
 
 
+def assign_new_regions(
+    current: Allocation,
+    region_bytes: Mapping[int, int],
+    nodes: Sequence[NodeSpec],
+) -> Allocation:
+    """Adopt regions absent from ``current`` without moving existing ones.
+
+    The incremental complement of :func:`rebalance`: each unassigned region
+    (largest-first) goes to the node with the largest remaining deficit vs
+    its #CPU×MIPS-proportional target, and every existing assignment stays
+    put — this is what keeps an incremental upload cheap between full
+    balancer runs.  Returns ONLY the new assignments.
+    """
+    new = [rid for rid in region_bytes if rid not in current]
+    if not new:
+        return {}
+    targets = _targets(float(sum(region_bytes.values())), nodes)
+    loads = {n.node_id: 0.0 for n in nodes}
+    for rid, nid in current.items():
+        if nid in loads and rid in region_bytes:
+            loads[nid] += region_bytes[rid]
+    heap: List[Tuple[float, int]] = [
+        (loads[n.node_id] - targets[n.node_id], n.node_id) for n in nodes
+    ]
+    heapq.heapify(heap)
+    out: Allocation = {}
+    for rid in sorted(new, key=lambda r: (-region_bytes[r], r)):
+        deficit, nid = heapq.heappop(heap)
+        out[rid] = nid
+        heapq.heappush(heap, (deficit + region_bytes[rid], nid))
+    return out
+
+
 def powers_from_observations(
     round_times: Mapping[int, Sequence[float]],
     nodes: Sequence[NodeSpec],

@@ -1,0 +1,470 @@
+"""GridSession — the paper's backend API behind one session object.
+
+The paper's contribution is an *interface* (Table 1): Upload, Retrieve,
+Remove, a heterogeneity-aware Load balancer, and MapReduce templates over
+colocated storage.  The repo implements each piece as a standalone module
+(:mod:`table`, :mod:`regions`, :mod:`balancer`, :mod:`placement`,
+:mod:`mapreduce`, :mod:`query`); ``GridSession`` owns the whole
+table → regions → balancer → placement → mapreduce → query lifecycle and
+exposes the five verbs:
+
+- :meth:`upload`    — batch insert with split handling and incremental
+  placement (split children inherit their parent's node, HBase-style);
+- :meth:`retrieve`  — the Table-1 selector read path;
+- :meth:`remove`    — row deletion with dirty-region invalidation;
+- :meth:`rebalance` — the paper's offline #CPU×MIPS balancer, applied to the
+  *current* allocation (minimum region moves);
+- :meth:`run` / :meth:`run_where` — MapReduce over the full table or a
+  predicate-pushdown subset.
+
+Three properties make mutation cheap and repeated compute fast:
+
+1. **Mutation epochs + dirty regions.**  Every mutation advances an epoch and
+   records which regions (hence which nodes) it touched.  Device layouts are
+   cached per column; a stale layout re-gathers payload *only for the dirty
+   nodes* and reuses every other device's block — an upload into one region
+   costs one device's gather, not a rebuild of the world.
+2. **Compiled-plan cache.**  Plans are keyed by ``(program, mesh shape, η,
+   table epoch)``.  A repeat ``run`` at the same epoch is a pure cache hit;
+   across epochs the bound data refreshes but the jitted ``shard_map``
+   executable (shape-keyed inside :class:`MapReduceEngine`) is reused, so no
+   recompile happens unless the layout's shape actually changed.
+3. **Predicate pushdown.**  ``run_where`` evaluates the predicate on the
+   index family only (§2.3), then gathers *just the selected payload rows*
+   per device — locality preserved because index and payload share rowkeys
+   and placement — and reports ``payload_bytes_moved`` covering only those
+   rows.  The mask path (materialize everything, fold a subset) is gone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import (
+    Any, Dict, FrozenSet, List, Mapping, Optional, Sequence, Set, Tuple,
+)
+
+import numpy as np
+
+import jax
+
+from repro.core.balancer import (
+    NodeSpec,
+    allocation_imbalance,
+    rebalance as rebalance_allocation,
+)
+from repro.core.mapreduce import MapReduceEngine, MapReduceProgram, MapReduceStats
+from repro.core.placement import Placement
+from repro.core.query import Predicate, QueryStats, indexed_query
+from repro.core.table import (
+    DATA_FAMILY,
+    INDEX_FAMILY,
+    RowKey,
+    TensorTable,
+    _as_key,
+)
+from repro.utils import make_mesh
+
+
+@dataclasses.dataclass
+class SessionMetrics:
+    """Observable counters for the session's incremental machinery."""
+
+    uploads: int = 0
+    removes: int = 0
+    rebalances: int = 0
+    epochs: int = 0                 # mutation epochs advanced
+    regions_dirtied: int = 0
+    plan_hits: int = 0              # run() served from the plan cache
+    plan_misses: int = 0
+    layout_full_builds: int = 0     # gather-everything rebuilds
+    layout_refreshes: int = 0       # incremental dirty-node refreshes
+    devices_regathered: int = 0     # device blocks whose payload was re-read
+    devices_reused: int = 0         # device blocks kept across a mutation
+    rows_gathered: int = 0          # payload rows copied into layouts
+    pushdown_rows_gathered: int = 0  # payload rows moved by run_where
+
+
+@dataclasses.dataclass(frozen=True)
+class RunReport:
+    """Accounting for one ``run``/``run_where`` call."""
+
+    epoch: int
+    eta: int
+    plan_cache_hit: bool
+    mapreduce: MapReduceStats
+    query: Optional[QueryStats] = None
+
+
+@dataclasses.dataclass
+class _Layout:
+    """One column materialized in colocated ``[D, C, ...]`` device layout."""
+
+    epoch: int
+    chunk: int
+    capacity: int
+    row_ids: np.ndarray        # [D, C] positional indices into the table
+    valid: np.ndarray          # [D, C] real-slot mask (host)
+    host_values: np.ndarray    # [D, C, ...] gathered payload (host cache)
+    values: Any                # device copy of host_values
+    dvalid: Any                # device copy of valid
+    last_used: int = 0         # epoch of the last run using this layout
+
+
+class GridSession:
+    """One object owning the grid lifecycle; the five-verb facade."""
+
+    #: layouts untouched for this many epochs are evicted — a stale layout
+    #: pins a full host payload copy AND the dirty-log floor, so a
+    #: long-lived mutating session must not keep it forever.
+    LAYOUT_TTL_EPOCHS = 64
+
+    def __init__(
+        self,
+        table: TensorTable,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        nodes: Optional[Sequence[NodeSpec]] = None,
+        strategy: str = "greedy",
+        data_axis: str = "data",
+        default_eta: int = 16,
+        payload_family: str = DATA_FAMILY,
+        payload_qualifier: str = "data",
+        index_family: str = INDEX_FAMILY,
+    ):
+        self.table = table
+        self.mesh = (mesh if mesh is not None
+                     else make_mesh((jax.device_count(),), (data_axis,)))
+        self.data_axis = data_axis
+        D = self.mesh.shape[data_axis]
+        if nodes is None:
+            nodes = [NodeSpec(i) for i in range(D)]
+        if len(nodes) != D:
+            raise ValueError(
+                f"{len(nodes)} nodes for mesh axis {data_axis!r} of size {D}")
+        self.default_eta = int(default_eta)
+        self.payload_family = payload_family
+        self.payload_qualifier = payload_qualifier
+        self.index_family = index_family
+
+        self.placement = Placement.from_strategy(table, nodes, strategy)
+        self.table.split_log.clear()  # from_strategy saw the current regions
+        self.engine = MapReduceEngine(self.mesh, data_axis)
+        self.metrics = SessionMetrics()
+
+        self._epoch = 0
+        # (epoch, dirty node ids) per mutation; consumed by layout refresh
+        self._dirty_log: List[Tuple[int, FrozenSet[int]]] = []
+        self._layouts: Dict[Tuple[str, str, int], _Layout] = {}
+        # (program, mesh shape, eta, column, epoch) -> layout key
+        self._plans: Dict[Tuple, Tuple[str, str, int]] = {}
+        self._node_index = {n.node_id: d for d, n in enumerate(nodes)}
+
+    # ------------------------------------------------------------------
+    # epoch / dirty tracking
+    # ------------------------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def _advance_epoch(self, dirty_rids: Set[int],
+                       extra_dirty_nodes: Set[int] = frozenset()) -> None:
+        self._epoch += 1
+        self.metrics.epochs += 1
+        self.metrics.regions_dirtied += len(dirty_rids)
+        owners = {
+            self.placement.alloc[rid]
+            for rid in dirty_rids if rid in self.placement.alloc
+        } | set(extra_dirty_nodes)
+        self._dirty_log.append((self._epoch, frozenset(owners)))
+        # plans are epoch-keyed; everything cached is now stale
+        self._plans.clear()
+        self._prune_caches()
+
+    def _prune_caches(self) -> None:
+        """Evict long-unused layouts, then drop dirty entries no survivor
+        can still consume — keeps a mutating session's memory bounded."""
+        self._layouts = {
+            k: l for k, l in self._layouts.items()
+            if self._epoch - l.last_used <= self.LAYOUT_TTL_EPOCHS
+        }
+        floor = min((l.epoch for l in self._layouts.values()),
+                    default=self._epoch)
+        self._dirty_log = [(e, ns) for e, ns in self._dirty_log if e > floor]
+
+    # ------------------------------------------------------------------
+    # the five verbs
+    # ------------------------------------------------------------------
+
+    def upload(
+        self,
+        rowkeys: Sequence[RowKey],
+        data: Mapping[str, Mapping[str, np.ndarray]],
+        on_duplicate: str = "skip",
+    ) -> int:
+        """Table-1 Upload: batch insert with incremental placement.
+
+        Splits triggered by the insert keep daughters on the parent's node
+        (rebalancing is an explicit :meth:`rebalance` call, as in the paper);
+        only the regions containing the uploaded keys are invalidated.
+        """
+        # under "skip", duplicates leave their rows untouched — only the keys
+        # actually written may dirty a region, so snapshot existence first
+        keys = np.array([_as_key(k) for k in rowkeys], dtype="S64")
+        if on_duplicate == "skip" and len(keys):
+            written_keys = keys[~self.table.existing_mask(rowkeys)]
+        else:
+            written_keys = keys
+        written = self.table.upload(rowkeys, data, on_duplicate=on_duplicate)
+        self.metrics.uploads += 1
+        if not written:
+            self.table.split_log.clear()
+            return 0
+        self.placement.apply_splits()
+        dirty = self.table.regions.regions_containing(
+            [bytes(k) for k in written_keys])
+        self._advance_epoch(dirty)
+        return written
+
+    def retrieve(
+        self,
+        family: str,
+        qualifier: str,
+        rowkey: Optional[RowKey] = None,
+        start: Optional[RowKey] = None,
+        stop: Optional[RowKey] = None,
+        skip: Optional[Sequence[RowKey]] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Table-1 Retrieve: ``(rowkeys, values)`` for the selector."""
+        return self.table.retrieve(family, qualifier, rowkey=rowkey,
+                                   start=start, stop=stop, skip=skip)
+
+    def remove(
+        self,
+        rowkey: Optional[RowKey] = None,
+        start: Optional[RowKey] = None,
+        stop: Optional[RowKey] = None,
+        skip: Optional[Sequence[RowKey]] = None,
+    ) -> int:
+        """Table-1 Remove: delete rows, invalidating only their regions."""
+        doomed = [bytes(k) for k in
+                  self.table.select_keys(rowkey, start, stop, skip)]
+        removed = self.table.delete(rowkey=rowkey, start=start, stop=stop,
+                                    skip=skip)
+        self.metrics.removes += 1
+        if removed:
+            self._advance_epoch(self.table.regions.regions_containing(doomed))
+        return removed
+
+    def rebalance(
+        self,
+        tolerance: float = 0.05,
+        nodes: Optional[Sequence[NodeSpec]] = None,
+    ) -> List[int]:
+        """The paper's offline balancer from the *current* allocation.
+
+        ``nodes`` swaps in refreshed specs (elastic rescale, straggler
+        deweighting via :func:`~repro.core.balancer.powers_from_observations`)
+        — node ids must be the existing ones.  Returns moved region ids.
+        """
+        if nodes is not None:
+            if {n.node_id for n in nodes} != set(self._node_index):
+                raise ValueError("rebalance nodes must keep the same node ids")
+            order = sorted(nodes, key=lambda n: self._node_index[n.node_id])
+            self.placement.nodes = tuple(order)
+        old = dict(self.placement.alloc)
+        new_alloc, moved = rebalance_allocation(
+            old, self.table.region_bytes(), self.placement.nodes, tolerance)
+        self.metrics.rebalances += 1
+        if moved:
+            self.placement.alloc.clear()
+            self.placement.alloc.update(new_alloc)
+            self.placement.version += 1
+            dirty_nodes = ({old[rid] for rid in moved if rid in old}
+                           | {new_alloc[rid] for rid in moved})
+            self._advance_epoch(set(moved), extra_dirty_nodes=dirty_nodes)
+        return moved
+
+    def run(
+        self,
+        program: MapReduceProgram,
+        eta: Optional[int] = None,
+        family: Optional[str] = None,
+        qualifier: Optional[str] = None,
+    ) -> Tuple[Any, RunReport]:
+        """MapReduce over the whole table, through the compiled-plan cache."""
+        family = family or self.payload_family
+        qualifier = qualifier or self.payload_qualifier
+        eta = int(eta or self.default_eta)
+        plan_key = (self._program_key(program), self._mesh_shape(), eta,
+                    family, qualifier, self._epoch)
+        hit = plan_key in self._plans
+        if hit:
+            self.metrics.plan_hits += 1
+            layout = self._layouts[self._plans[plan_key]]
+        else:
+            self.metrics.plan_misses += 1
+            layout = self._layout(family, qualifier, eta)
+            self._plans[plan_key] = (family, qualifier, eta)
+        result, mr = self.engine.run(program, layout.values, layout.dvalid,
+                                     eta)
+        return result, RunReport(epoch=self._epoch, eta=eta,
+                                 plan_cache_hit=hit, mapreduce=mr)
+
+    def run_where(
+        self,
+        predicate: Predicate,
+        program: MapReduceProgram,
+        index_qualifiers: Sequence[str],
+        eta: Optional[int] = None,
+        family: Optional[str] = None,
+        qualifier: Optional[str] = None,
+    ) -> Tuple[Any, RunReport]:
+        """Predicate-pushdown MapReduce (§2.3 unified with §2.2).
+
+        The predicate runs over the index family only; each device then
+        gathers *just its own selected* payload rows (compacted, locality
+        preserved), so the returned ``QueryStats.payload_bytes_moved`` covers
+        exactly the selected rows — never the full table.
+        """
+        family = family or self.payload_family
+        qualifier = qualifier or self.payload_qualifier
+        eta = int(eta or self.default_eta)
+        mask, qstats = indexed_query(self.table, predicate, index_qualifiers,
+                                     index_family=self.index_family)
+        per_dev = self._per_device_rows()
+        selected = [rows[mask[rows]] for rows in per_dev]
+        n_sel = int(sum(len(s) for s in selected))
+        need = max((len(s) for s in selected), default=0)
+        cap = max(eta, -(-max(need, 1) // eta) * eta)
+
+        col = self.table.column(family, qualifier)
+        D = len(per_dev)
+        host = np.zeros((D, cap) + col.shape[1:], col.dtype)
+        valid = np.zeros((D, cap), dtype=bool)
+        for d, rows in enumerate(selected):
+            host[d, : len(rows)] = col[rows]
+            valid[d, : len(rows)] = True
+        sh = Placement.data_sharding(self.mesh, self.data_axis)
+        values = jax.device_put(host, sh)
+        dvalid = jax.device_put(valid, sh)
+
+        result, mr = self.engine.run(program, values, dvalid, eta)
+        row_nbytes = self.table.column_spec(family, qualifier).row_nbytes
+        qstats = dataclasses.replace(
+            qstats, payload_bytes_moved=n_sel * row_nbytes)
+        self.metrics.pushdown_rows_gathered += n_sel
+        return result, RunReport(epoch=self._epoch, eta=eta,
+                                 plan_cache_hit=False, mapreduce=mr,
+                                 query=qstats)
+
+    # ------------------------------------------------------------------
+    # layouts (incremental placement materialization)
+    # ------------------------------------------------------------------
+
+    def _per_device_rows(self) -> List[np.ndarray]:
+        return [self.placement.rows_for_node(n.node_id)
+                for n in self.placement.nodes]
+
+    def _layout(self, family: str, qualifier: str, chunk: int) -> _Layout:
+        key = (family, qualifier, int(chunk))
+        lay = self._layouts.get(key)
+        if lay is not None and lay.epoch == self._epoch:
+            lay.last_used = self._epoch
+            return lay
+
+        per_dev = self._per_device_rows()
+        D = len(per_dev)
+        need = max((len(r) for r in per_dev), default=0)
+        cap_needed = max(chunk, -(-max(need, 1) // chunk) * chunk)
+        col = self.table.column(family, qualifier)
+
+        if lay is None or cap_needed > lay.capacity:
+            cap = cap_needed
+            row_ids = np.zeros((D, cap), dtype=np.int64)
+            valid = np.zeros((D, cap), dtype=bool)
+            host = np.zeros((D, cap) + col.shape[1:], col.dtype)
+            for d, rows in enumerate(per_dev):
+                row_ids[d, : len(rows)] = rows
+                valid[d, : len(rows)] = True
+                host[d, : len(rows)] = col[rows]
+            self.metrics.layout_full_builds += 1
+            self.metrics.devices_regathered += D
+            self.metrics.rows_gathered += int(sum(len(r) for r in per_dev))
+        else:
+            # incremental refresh: payload re-gathered ONLY for nodes dirtied
+            # since this layout's epoch; row indices are recomputed for all
+            # (cheap — positions shift under inserts) but clean devices keep
+            # their payload blocks byte-for-byte.
+            cap = lay.capacity
+            dirty_nodes: Set[int] = set()
+            for e, ns in self._dirty_log:
+                if e > lay.epoch:
+                    dirty_nodes |= set(ns)
+            dirty_devs = {self._node_index[nid] for nid in dirty_nodes
+                          if nid in self._node_index}
+            row_ids, valid, host = lay.row_ids, lay.valid, lay.host_values
+            for d, rows in enumerate(per_dev):
+                row_ids[d] = 0
+                valid[d] = False
+                row_ids[d, : len(rows)] = rows
+                valid[d, : len(rows)] = True
+                if d in dirty_devs:
+                    host[d] = 0
+                    host[d, : len(rows)] = col[rows]
+                    self.metrics.devices_regathered += 1
+                    self.metrics.rows_gathered += len(rows)
+                else:
+                    self.metrics.devices_reused += 1
+            self.metrics.layout_refreshes += 1
+
+        sh = Placement.data_sharding(self.mesh, self.data_axis)
+        lay = _Layout(
+            epoch=self._epoch, chunk=int(chunk), capacity=cap,
+            row_ids=row_ids, valid=valid, host_values=host,
+            values=jax.device_put(host, sh), dvalid=jax.device_put(valid, sh),
+            last_used=self._epoch,
+        )
+        self._layouts[key] = lay
+        return lay
+
+    # ------------------------------------------------------------------
+    # helpers / diagnostics
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _program_key(program: MapReduceProgram) -> Tuple[str, str]:
+        return (type(program).__name__, repr(program))
+
+    def _mesh_shape(self) -> Tuple[Tuple[str, int], ...]:
+        return tuple((a, self.mesh.shape[a]) for a in self.mesh.axis_names)
+
+    def imbalance(self) -> float:
+        """Max relative deviation of node work from #CPU×MIPS-proportional."""
+        return allocation_imbalance(
+            self.placement.alloc, self.table.region_bytes(),
+            self.placement.nodes)
+
+    def token_dataset(self, global_batch: int,
+                      batch_axes: Sequence[str] = ("data",), seed: int = 0):
+        """A :class:`ColocatedTokenDataset` sharing this session's placement
+        (training batches ride the same region→device map the verbs maintain).
+        """
+        from repro.data.pipeline import ColocatedTokenDataset
+        return ColocatedTokenDataset(
+            self.table, self.mesh, global_batch, data_axis=self.data_axis,
+            batch_axes=batch_axes, placement=self.placement, seed=seed)
+
+    def describe(self) -> str:
+        m = self.metrics
+        lines = [
+            f"GridSession(table={self.table.name!r}, epoch={self._epoch}, "
+            f"eta={self.default_eta}, imbalance={self.imbalance():.3f})",
+            self.placement.describe(),
+            f"  plans: {m.plan_hits} hits / {m.plan_misses} misses; "
+            f"engine compiles: {self.engine.compile_count}",
+            f"  layouts: {m.layout_full_builds} full builds, "
+            f"{m.layout_refreshes} refreshes "
+            f"({m.devices_regathered} regathered / {m.devices_reused} reused "
+            f"device blocks, {m.rows_gathered} rows gathered)",
+        ]
+        return "\n".join(lines)

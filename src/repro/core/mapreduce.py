@@ -33,8 +33,9 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils import shard_map_compat
 
 PyTree = Any
 
@@ -88,6 +89,9 @@ class MapReduceEngine:
         self.mesh = mesh
         self.data_axis = data_axis
         self._compiled = {}
+        # builds of new executables (the recompile oracle GridSession's plan
+        # cache is tested against): bumped only on an executable-cache miss.
+        self.compile_count = 0
 
     # ------------------------------------------------------------------
 
@@ -139,9 +143,9 @@ class MapReduceEngine:
         in_specs = (P(data_axis), P(data_axis))
         out_specs = jax.tree.map(lambda _: P(), program.zero(row_shape, dtype))
 
-        fn = shard_map(
+        fn = shard_map_compat(
             mapper, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
+            check=False,
         )
 
         def run(values, valid):
@@ -182,6 +186,7 @@ class MapReduceEngine:
         key = (type(program).__name__, repr(program), row_shape, str(dtype),
                chunk_size, C)
         if key not in self._compiled:
+            self.compile_count += 1
             self._compiled[key] = self._build(program, row_shape, dtype, chunk_size)
         result = self._compiled[key](values, mask)
 

@@ -25,6 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.balancer import (
     Allocation,
     NodeSpec,
+    assign_new_regions,
     balanced_allocation,
     central_allocation,
     greedy_allocation,
@@ -40,6 +41,9 @@ class Placement:
     table: TensorTable
     nodes: Tuple[NodeSpec, ...]
     alloc: Allocation  # region id -> node id
+    # bumped whenever ``alloc`` changes (splits adopted, rebalance applied);
+    # consumers caching derived row pools key on it.
+    version: int = 0
 
     # ------------------------------------------------------------------
     # constructors
@@ -77,9 +81,11 @@ class Placement:
                 self.alloc[right.rid] = nid
         self.table.split_log.clear()
         # adopt any regions still missing (e.g. created before this placement)
-        for r in self.table.regions:
-            if r.rid not in self.alloc:
-                self.alloc[r.rid] = self.nodes[0].node_id
+        # at the neediest node vs its #CPU×MIPS share — not blindly node 0
+        self.alloc.update(
+            assign_new_regions(self.alloc, self.table.region_bytes(), self.nodes)
+        )
+        self.version += 1
 
     def node_bytes(self) -> Dict[int, float]:
         return node_loads(self.alloc, self.table.region_bytes(), self.nodes)

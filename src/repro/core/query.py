@@ -42,6 +42,10 @@ class QueryStats:
     index_bytes_scanned: int      # small-column bytes read for the predicate
     payload_bytes_traversed: int  # payload bytes forced through the read path
     rows_selected: int
+    # payload bytes actually gathered into a compute layout; filled by the
+    # GridSession pushdown path (run_where), where it must cover ONLY the
+    # selected rows — the quantity the §2.3 scheme exists to minimize.
+    payload_bytes_moved: int = 0
 
     @property
     def total_bytes_scanned(self) -> int:

@@ -16,8 +16,9 @@ arrays owned by the table; they never hold data themselves.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import Iterable, Iterator, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -153,17 +154,21 @@ class RegionSet:
     def __iter__(self) -> Iterator[Region]:
         return iter(self._regions)
 
+    def regions_containing(self, keys: Iterable[bytes]) -> Set[int]:
+        """Region ids whose key ranges contain any of ``keys``.
+
+        The dirty-region primitive: a mutation touching ``keys`` invalidates
+        exactly these regions' placements, nothing else.
+        """
+        starts = [r.start for r in self._regions]
+        return {
+            self._regions[bisect.bisect_right(starts, k) - 1].rid
+            for k in keys
+        }
+
     def region_for(self, key: bytes) -> Region:
         starts = [r.start for r in self._regions]
-        # binary search over starts
-        lo, hi = 0, len(starts)
-        while lo < hi:
-            mid = (lo + hi) // 2
-            if starts[mid] <= key:
-                lo = mid + 1
-            else:
-                hi = mid
-        return self._regions[lo - 1]
+        return self._regions[bisect.bisect_right(starts, key) - 1]
 
     # -- mutation ----------------------------------------------------------
 

@@ -106,6 +106,9 @@ class TensorTable:
                 )
         # split events observed (parent, left, right) — consumed by Placement.
         self.split_log: List[Tuple[Region, Region, Region]] = []
+        # bumped on every row-changing upload/delete; cheap cache-invalidation
+        # signal for consumers holding positional indices (data pipeline).
+        self.mutation_count = 0
 
     # ------------------------------------------------------------------
     # schema / introspection
@@ -162,6 +165,17 @@ class TensorTable:
     # selectors
     # ------------------------------------------------------------------
 
+    def existing_mask(self, rowkeys: Sequence[RowKey]) -> np.ndarray:
+        """Bool per input key: is it already stored?  (The duplicate rule
+        ``upload`` applies — shared so callers never re-derive it.)"""
+        keys = np.array([_as_key(k) for k in rowkeys], dtype="S64")
+        exists = np.zeros(len(keys), dtype=bool)
+        pos = np.searchsorted(self._keys, keys, side="left")
+        in_range = pos < len(self._keys)
+        if in_range.any():
+            exists[in_range] = self._keys[pos[in_range]] == keys[in_range]
+        return exists
+
     def _select_positions(
         self,
         rowkey: Optional[RowKey] = None,
@@ -204,15 +218,33 @@ class TensorTable:
         rowkeys: Sequence[RowKey],
         data: Mapping[str, Mapping[str, np.ndarray]],
         overwrite: bool = False,
+        on_duplicate: Optional[str] = None,
     ) -> int:
-        """Insert (or update, when ``overwrite``) a batch of rows.
+        """Insert (or update) a batch of rows.
 
         ``data[family][qualifier]`` is an array of shape ``(len(rowkeys),
         *spec.shape)``.  Every declared column must be provided — the store is
-        columnar and dense.  Returns the number of rows written (duplicates
-        are skipped when ``overwrite`` is False, per the interface's
-        "avoid uploading duplicate data").
+        columnar and dense.  Returns the number of rows written.
+
+        Duplicate handling is uniform per row and independent of batch order
+        or rowkey sort order.  A rowkey that appears twice *within* one batch
+        always raises.  A rowkey already present in the table (uploaded by an
+        earlier call) is governed by ``on_duplicate``:
+
+        - ``"skip"`` (default): keep the stored row, don't write it — the
+          interface's "avoid uploading duplicate data"; skipped rows do not
+          count toward the return value;
+        - ``"overwrite"``: replace the stored row with this batch's values;
+        - ``"error"``: raise ``KeyError`` naming the duplicates, writing
+          nothing.
+
+        ``overwrite=True`` is the legacy spelling of
+        ``on_duplicate="overwrite"``.
         """
+        if on_duplicate is None:
+            on_duplicate = "overwrite" if overwrite else "skip"
+        if on_duplicate not in ("skip", "overwrite", "error"):
+            raise ValueError(f"unknown on_duplicate mode {on_duplicate!r}")
         if not len(rowkeys):
             return 0
         new_keys = np.array([_as_key(k) for k in rowkeys], dtype="S64")
@@ -238,21 +270,20 @@ class TensorTable:
 
         # split batch into updates (existing keys) and inserts
         pos = np.searchsorted(self._keys, new_keys, side="left")
-        exists = (pos < len(self._keys)) & (
-            self._keys[np.minimum(pos, max(len(self._keys) - 1, 0))] == new_keys
-            if len(self._keys)
-            else np.zeros(len(new_keys), dtype=bool)
-        )
+        exists = self.existing_mask(rowkeys)
 
         written = 0
         if exists.any():
-            if overwrite:
+            if on_duplicate == "error":
+                dups = [k.decode(errors="replace") for k in new_keys[exists]]
+                raise KeyError(f"rowkeys already uploaded: {dups}")
+            if on_duplicate == "overwrite":
                 upd = np.nonzero(exists)[0]
                 tgt = pos[upd]
                 for kq, arr in arrays.items():
                     self._data[kq][tgt] = arr[upd]
                 written += len(upd)
-            # else: silently skip duplicates (interface semantics)
+            # else "skip": keep the stored rows (interface semantics)
 
         ins = np.nonzero(~exists)[0]
         if len(ins):
@@ -269,7 +300,19 @@ class TensorTable:
 
         events = self.regions.maybe_split(self._keys, self.row_bytes())
         self.split_log.extend(events)
+        if written:
+            self.mutation_count += 1
         return written
+
+    def select_keys(
+        self,
+        rowkey: Optional[RowKey] = None,
+        start: Optional[RowKey] = None,
+        stop: Optional[RowKey] = None,
+        skip: Optional[Sequence[RowKey]] = None,
+    ) -> np.ndarray:
+        """Rowkeys matching the Table-1 selector (copy, sorted order)."""
+        return self._keys[self._select_positions(rowkey, start, stop, skip)].copy()
 
     def retrieve(
         self,
@@ -305,6 +348,7 @@ class TensorTable:
         self._keys = self._keys[keep]
         for kq in self._data:
             self._data[kq] = self._data[kq][keep]
+        self.mutation_count += 1
         return int((~keep).sum())
 
     # ------------------------------------------------------------------

@@ -136,6 +136,7 @@ class ColocatedTokenDataset:
         strategy: str = "greedy",
         nodes: Optional[Sequence[NodeSpec]] = None,
         seed: int = 0,
+        placement: Optional[Placement] = None,
     ):
         self.table = table
         self.mesh = mesh
@@ -147,17 +148,38 @@ class ColocatedTokenDataset:
             raise ValueError(f"global_batch {global_batch} % {D} != 0")
         self.per_shard = global_batch // D
         self.D = D
-        if nodes is None:
-            nodes = [NodeSpec(i, cores=1, mips=1.0) for i in range(D)]
-        self.placement = Placement.from_strategy(table, nodes, strategy)
+        if placement is not None:
+            # ride an existing region→device map (e.g. a GridSession's)
+            if len(placement.nodes) != D:
+                raise ValueError(
+                    f"placement has {len(placement.nodes)} nodes, need {D}")
+            self.placement = placement
+        else:
+            if nodes is None:
+                nodes = [NodeSpec(i, cores=1, mips=1.0) for i in range(D)]
+            self.placement = Placement.from_strategy(table, nodes, strategy)
         self._rng = np.random.default_rng(seed)
-        # per-shard row pools (positions into table's row order)
-        self._pools = [self.placement.rows_for_node(n.node_id) for n in nodes]
+        self._pools_version = None
+        self._compute_pools()
+        self.seq_len = table.column_spec("tok", "ids").shape[0]
+
+    def _compute_pools(self) -> None:
+        """Per-shard row pools (positions into the table's row order).
+
+        Cached by the (table mutations, placement version) pair: under a
+        shared (GridSession) placement the table mutates between steps and
+        positional indices shift; for an immutable table this is free.
+        """
+        version = (self.table.mutation_count, self.placement.version)
+        if version == self._pools_version:
+            return
+        self._pools = [self.placement.rows_for_node(n.node_id)
+                       for n in self.placement.nodes]
         for i, pool in enumerate(self._pools):
             if len(pool) == 0:
                 raise ValueError(f"node {i} received no rows; "
                                  "table too small for this mesh")
-        self.seq_len = table.column_spec("tok", "ids").shape[0]
+        self._pools_version = version
 
     def batch_sharding(self) -> NamedSharding:
         axes = self.batch_axes
@@ -166,6 +188,7 @@ class ColocatedTokenDataset:
 
     def next_batch(self, step: int) -> jax.Array:
         """Deterministic per-step batch: shard d draws from pool d."""
+        self._compute_pools()
         ids = np.empty((self.D, self.per_shard, self.seq_len), np.int32)
         col = self.table.column("tok", "ids")
         for d, pool in enumerate(self._pools):

@@ -117,9 +117,9 @@ def _moe_shard_local(cfg, p, x, compute_dtype):
     are the expert einsums' model-axis traffic.  Capacity is per shard
     (GShard groups == device shards).  Falls back to the global path when
     no sharding policy is installed (CPU tests)."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.models.sharding import current_policy
+    from repro.utils import shard_map_compat
 
     m = cfg.moe
     pol = current_policy()
@@ -159,10 +159,10 @@ def _moe_shard_local(cfg, p, x, compute_dtype):
     if m.n_shared_experts:
         args += [p["shared"]["gate"], p["shared"]["up"], p["shared"]["down"]]
     in_specs = tuple([P(batch_axes)] + [P()] * (len(args) - 1))
-    out = shard_map(
+    out = shard_map_compat(
         body, mesh=pol.mesh, in_specs=in_specs,
         out_specs=(P(batch_axes), P()),
-        axis_names=set(batch_axes), check_vma=False,
+        axis_names=set(batch_axes), check=False,
     )(*args)
     return out
 

@@ -137,8 +137,9 @@ def make_compressed_train_step(
     the loss is pod-local), quantizes, psums int32 over DCN, dequantizes and
     averages, then applies an identical AdamW update on every pod.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.utils import shard_map_compat
 
     def loss_fn(p, tokens):
         return lm_loss(cfg, model, p, tokens)
@@ -164,11 +165,11 @@ def make_compressed_train_step(
         metrics["grad_norm"] = gnorm
         return params, opt_state, metrics
 
-    return shard_map(
+    return shard_map_compat(
         pod_body,
         mesh=mesh,
         in_specs=(P(), P(), P("pod"), P()),
         out_specs=(P(), P(), P()),
         axis_names={"pod"},
-        check_vma=False,
+        check=False,
     )

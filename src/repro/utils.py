@@ -9,13 +9,51 @@ import numpy as np
 import jax
 
 
+def shard_map_compat(
+    f,
+    mesh: jax.sharding.Mesh,
+    in_specs,
+    out_specs,
+    axis_names=None,
+    check: bool = False,
+):
+    """``shard_map`` across JAX versions.
+
+    Newer JAX exposes ``jax.shard_map(..., axis_names=..., check_vma=...)``;
+    JAX 0.4.x ships it as ``jax.experimental.shard_map.shard_map(...,
+    auto=..., check_rep=...)`` where ``auto`` is the *complement* of the
+    manual axes.  ``axis_names=None`` means manual over every mesh axis.
+    """
+    try:
+        from jax import shard_map as _shard_map  # JAX >= 0.6
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return _shard_map(f, **kwargs)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _shard_map
+        # NOTE: partial-manual (`auto=`) on 0.4.x trips a fatal XLA sharding
+        # check on CPU, so the compat path runs fully manual: axes absent
+        # from the specs are replicated, which preserves results (collectives
+        # only name the manual axes) at some redundant compute.
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check)
+
+
 def make_mesh(shape: Sequence[int], axis_names: Sequence[str]) -> jax.sharding.Mesh:
-    """``jax.make_mesh`` pinned to Auto axis types (portable across JAX 0.8/0.9)."""
-    return jax.make_mesh(
-        tuple(shape),
-        tuple(axis_names),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
-    )
+    """``jax.make_mesh`` pinned to Auto axis types (portable across JAX 0.8/0.9).
+
+    JAX 0.4.x has neither ``AxisType`` nor the ``axis_types`` kwarg — there
+    every mesh axis is Auto already, so the plain call is equivalent.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            tuple(shape),
+            tuple(axis_names),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(tuple(shape), tuple(axis_names))
 
 
 def tree_size_bytes(tree) -> int:

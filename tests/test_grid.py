@@ -1,0 +1,202 @@
+"""GridSession: the five-verb facade, mutation epochs, plan cache,
+incremental placement.  (The >1-device incrementality path is covered in
+test_multidevice.py; here the mesh is whatever the main process has.)"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.balancer import NodeSpec, assign_new_regions
+from repro.core.grid import GridSession
+from repro.core.query import age_sex_predicate
+from repro.core.regions import HierarchicalSplitPolicy
+from repro.core.stats import MeanProgram, VarianceProgram
+from repro.core.table import ColumnSpec, make_mip_table
+
+
+def make_population(n=64, payload=(3, 4), seed=0, split_bytes=10**18):
+    rng = np.random.default_rng(seed)
+    t = make_mip_table(
+        payload_shape=payload,
+        extra_index_columns=[ColumnSpec("age", (), np.float32),
+                             ColumnSpec("sex", (), np.int8)],
+        split_policy=HierarchicalSplitPolicy(max_region_bytes=split_bytes),
+    )
+    t.upload(
+        [f"img{i:05d}" for i in range(n)],
+        {"img": {"data": rng.normal(size=(n,) + payload).astype(np.float32)},
+         "idx": {"size": rng.integers(6_000_000, 20_000_001, n),
+                 "age": rng.uniform(4, 80, n).astype(np.float32),
+                 "sex": rng.integers(0, 2, n).astype(np.int8)}},
+    )
+    return t
+
+
+def row_batch(keys, seed=1, payload=(3, 4)):
+    rng = np.random.default_rng(seed)
+    n = len(keys)
+    return {"img": {"data": rng.normal(size=(n,) + payload).astype(np.float32)},
+            "idx": {"size": rng.integers(6_000_000, 20_000_001, n),
+                    "age": rng.uniform(4, 80, n).astype(np.float32),
+                    "sex": rng.integers(0, 2, n).astype(np.int8)}}
+
+
+class TestVerbs:
+    def test_upload_retrieve_remove_roundtrip(self):
+        s = GridSession(make_population(32), default_eta=8)
+        assert s.epoch == 0
+        n = s.upload(["zz1", "zz2"], row_batch(["zz1", "zz2"]))
+        assert n == 2 and s.epoch == 1
+        keys, vals = s.retrieve("img", "data", rowkey="zz1")
+        assert keys[0] == b"zz1"
+        assert s.remove(rowkey="zz1") == 1
+        assert s.epoch == 2
+        assert len(s.retrieve("img", "data", rowkey="zz1")[0]) == 0
+
+    def test_run_matches_numpy_across_mutations(self):
+        t = make_population(48)
+        s = GridSession(t, default_eta=8)
+        res, rep = s.run(MeanProgram())
+        np.testing.assert_allclose(
+            np.asarray(res), t.column("img", "data").mean(0), atol=1e-5)
+        assert rep.epoch == 0 and not rep.plan_cache_hit
+
+        s.upload(["new1"], row_batch(["new1"]))
+        s.remove(rowkey="img00000")
+        res2, rep2 = s.run(MeanProgram())
+        np.testing.assert_allclose(
+            np.asarray(res2), t.column("img", "data").mean(0), atol=1e-5)
+        assert rep2.epoch == 2
+
+    def test_noop_mutations_do_not_advance_epoch(self):
+        s = GridSession(make_population(16), default_eta=8)
+        # duplicate skipped -> nothing written -> same epoch
+        assert s.upload(["img00003"], row_batch(["img00003"])) == 0
+        assert s.remove(rowkey="nope") == 0
+        assert s.epoch == 0
+
+    def test_rebalance_moves_toward_proportional(self):
+        t = make_population(96, split_bytes=40_000_000)  # many regions
+        nodes = [NodeSpec(0, cores=1, mips=1.0)]
+        D = jax.device_count()
+        if D == 1:
+            # single device: rebalance must be a no-op
+            s = GridSession(t, nodes=nodes)
+            assert s.rebalance() == []
+            return
+        s = GridSession(t, nodes=[NodeSpec(i, cores=1, mips=i + 1)
+                                  for i in range(D)])
+        moved = s.rebalance(tolerance=0.05)
+        assert isinstance(moved, list)
+        assert s.imbalance() < 1.0
+
+    def test_rebalance_rejects_new_node_ids(self):
+        s = GridSession(make_population(16))
+        with pytest.raises(ValueError):
+            s.rebalance(nodes=[NodeSpec(99)])
+
+
+class TestPlanCache:
+    def test_repeat_run_hits_cache_and_does_not_recompile(self):
+        s = GridSession(make_population(48), default_eta=8)
+        _, r1 = s.run(MeanProgram())
+        compiles = s.engine.compile_count
+        assert compiles >= 1 and not r1.plan_cache_hit
+        _, r2 = s.run(MeanProgram())
+        assert r2.plan_cache_hit
+        assert s.engine.compile_count == compiles  # acceptance criterion
+        assert s.metrics.plan_hits == 1
+
+    def test_mutation_invalidates_plan_but_reuses_executable(self):
+        t = make_population(48)
+        s = GridSession(t, default_eta=8)
+        s.run(MeanProgram())
+        compiles = s.engine.compile_count
+        # overwrite keeps row count (and layout shape) unchanged
+        s.upload(["img00001"], row_batch(["img00001"], seed=7),
+                 on_duplicate="overwrite")
+        res, rep = s.run(MeanProgram())
+        assert not rep.plan_cache_hit          # new epoch, new plan
+        assert s.engine.compile_count == compiles  # same shapes, no recompile
+        np.testing.assert_allclose(
+            np.asarray(res), t.column("img", "data").mean(0), atol=1e-5)
+
+    def test_distinct_programs_get_distinct_plans(self):
+        s = GridSession(make_population(32), default_eta=8)
+        s.run(MeanProgram())
+        _, r = s.run(VarianceProgram())
+        assert not r.plan_cache_hit
+        assert s.metrics.plan_misses == 2
+
+
+class TestIncrementalLayouts:
+    def test_overwrite_refreshes_instead_of_rebuilding(self):
+        s = GridSession(make_population(48), default_eta=8)
+        s.run(MeanProgram())
+        assert s.metrics.layout_full_builds == 1
+        s.upload(["img00002"], row_batch(["img00002"], seed=3),
+                 on_duplicate="overwrite")
+        s.run(MeanProgram())
+        assert s.metrics.layout_full_builds == 1
+        assert s.metrics.layout_refreshes == 1
+
+    def test_capacity_growth_forces_full_rebuild(self):
+        s = GridSession(make_population(16), default_eta=4)
+        s.run(MeanProgram())
+        # plenty of new rows: per-device need exceeds cached capacity
+        keys = [f"xx{i:04d}" for i in range(64)]
+        s.upload(keys, row_batch(keys))
+        s.run(MeanProgram())
+        assert s.metrics.layout_full_builds == 2
+
+    def test_dirty_regions_counted(self):
+        s = GridSession(make_population(32))
+        s.upload(["aa"], row_batch(["aa"]))
+        assert s.metrics.regions_dirtied >= 1
+
+    def test_skipped_duplicates_do_not_dirty_their_regions(self):
+        s = GridSession(make_population(64, split_bytes=40_000_000))
+        assert len(s.table.regions) > 1
+        # batch of existing keys (skipped) + ONE new key: only the new
+        # key's region may be invalidated
+        batch = [f"img{i:05d}" for i in range(32)] + ["zzz"]
+        assert s.upload(batch, row_batch(batch)) == 1
+        assert s.metrics.regions_dirtied == 1
+
+    def test_stale_layouts_evicted_and_log_bounded(self):
+        s = GridSession(make_population(16), default_eta=4)
+        s.run(MeanProgram())
+        s.run(MeanProgram(), eta=8)  # a second cached layout
+        for i in range(GridSession.LAYOUT_TTL_EPOCHS + 2):
+            k = f"n{i:03d}"
+            s.upload([k], row_batch([k], seed=i))
+        assert not s._layouts       # both idle past the TTL
+        assert not s._dirty_log     # nothing left to consume it
+        res, _ = s.run(MeanProgram())  # rebuilds cleanly
+        np.testing.assert_allclose(
+            np.asarray(res), s.table.column("img", "data").mean(0), atol=1e-5)
+
+
+class TestAdoption:
+    def test_assign_new_regions_prefers_neediest_node(self):
+        nodes = [NodeSpec(0, mips=1.0), NodeSpec(1, mips=1.0)]
+        current = {0: 0}  # node 0 already holds 100 bytes
+        out = assign_new_regions(current, {0: 100, 1: 10}, nodes)
+        assert out == {1: 1}  # node 1 has the larger deficit
+
+    def test_assign_new_regions_noop_when_complete(self):
+        nodes = [NodeSpec(0), NodeSpec(1)]
+        assert assign_new_regions({0: 0, 1: 1}, {0: 5, 1: 5}, nodes) == {}
+
+
+class TestTokenDataset:
+    def test_session_dataset_shares_placement(self):
+        from repro.data.pipeline import synthetic_token_table
+        table = synthetic_token_table(n_rows=64, seq_len=17, vocab=97)
+        s = GridSession(table, payload_family="tok",
+                        payload_qualifier="ids")
+        ds = s.token_dataset(global_batch=jax.device_count() * 2)
+        assert ds.placement is s.placement
+        batch = ds.next_batch(0)
+        assert batch.shape == (jax.device_count() * 2, 17)

@@ -7,6 +7,8 @@ parameterized sweeps keep CI time sane on one CPU core.
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -1,0 +1,144 @@
+"""Query byte accounting + pushdown correctness (§2.3 unified with §2.2).
+
+The table-scheme claims the seed only asserted by hand in examples:
+``indexed_query`` touches strictly fewer bytes than ``naive_query`` for the
+same predicate while returning the identical mask, and the GridSession
+pushdown path (``run_where``) equals filter-then-run for every stats
+program, at every chunk size η, moving only the selected rows' payload.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.grid import GridSession
+from repro.core.query import age_sex_predicate, indexed_query, naive_query
+from repro.core.regions import HierarchicalSplitPolicy
+from repro.core.stats import (
+    HistogramProgram,
+    MeanProgram,
+    MomentsProgram,
+    VarianceProgram,
+)
+from repro.core.table import ColumnSpec, make_mip_table, make_naive_table
+
+PAYLOAD = (5, 4)
+N = 119  # deliberately not a chunk multiple
+
+
+@pytest.fixture(scope="module")
+def tables():
+    rng = np.random.default_rng(7)
+    data = rng.normal(size=(N,) + PAYLOAD).astype(np.float32)
+    ages = rng.uniform(4, 80, N).astype(np.float32)
+    sexes = rng.integers(0, 2, N).astype(np.int8)
+    sizes = rng.integers(6_000_000, 20_000_001, N)
+    idx_cols = [ColumnSpec("age", (), np.float32),
+                ColumnSpec("sex", (), np.int8)]
+    prop = make_mip_table(
+        payload_shape=PAYLOAD, extra_index_columns=idx_cols,
+        split_policy=HierarchicalSplitPolicy(max_region_bytes=400_000_000))
+    prop.upload([f"img{i:05d}" for i in range(N)],
+                {"img": {"data": data},
+                 "idx": {"size": sizes, "age": ages, "sex": sexes}})
+    naive = make_naive_table(payload_shape=PAYLOAD,
+                             extra_index_columns=idx_cols)
+    naive.upload([f"img{i:05d}" for i in range(N)],
+                 {"img": {"data": data, "size": sizes,
+                          "age": ages, "sex": sexes}})
+    return prop, naive, data
+
+
+PREDICATES = [
+    ("female 20-40", age_sex_predicate(20, 40, 1)),
+    ("male >60", age_sex_predicate(60, None, 0)),
+    ("all", age_sex_predicate(None, None, None)),
+    ("empty", age_sex_predicate(200, 300, 1)),
+]
+
+
+class TestByteAccounting:
+    @pytest.mark.parametrize("name,pred", PREDICATES)
+    def test_identical_masks_fewer_bytes(self, tables, name, pred):
+        prop, naive, _ = tables
+        m_p, st_p = indexed_query(prop, pred, ["age", "sex"])
+        m_n, st_n = naive_query(naive, pred, ["age", "sex"])
+        np.testing.assert_array_equal(m_p, m_n)
+        assert st_p.payload_bytes_traversed == 0
+        assert st_n.payload_bytes_traversed > 0
+        assert st_p.total_bytes_scanned < st_n.total_bytes_scanned
+
+    def test_index_bytes_match_schema(self, tables):
+        prop, _, _ = tables
+        _, st = indexed_query(prop, age_sex_predicate(20, 40, 1),
+                              ["age", "sex"])
+        per_row = (prop.column_spec("idx", "age").row_nbytes
+                   + prop.column_spec("idx", "sex").row_nbytes)
+        assert st.index_bytes_scanned == N * per_row
+
+
+class TestPushdown:
+    @pytest.mark.parametrize("program,extract,atol", [
+        (MeanProgram(), lambda r: np.asarray(r), 1e-5),
+        (VarianceProgram(), lambda r: np.asarray(r["var"]), 1e-4),
+        (MomentsProgram(), lambda r: np.asarray(r["var"]), 1e-4),
+        (HistogramProgram(lo=-4.0, hi=4.0, bins=16),
+         lambda r: np.asarray(r), 0.5),
+    ])
+    def test_run_where_equals_filter_then_run(self, tables, program,
+                                              extract, atol):
+        prop, _, data = tables
+        pred = age_sex_predicate(20, 40, 1)
+        session = GridSession(prop, default_eta=8)
+        res, report = session.run_where(pred, program, ["age", "sex"])
+
+        mask, _ = indexed_query(prop, pred, ["age", "sex"])
+        sub = data[mask]
+        if isinstance(program, MeanProgram):
+            ref = sub.mean(0)
+        elif isinstance(program, (VarianceProgram, MomentsProgram)):
+            ref = sub.var(0)
+        else:
+            ref, _ = np.histogram(sub, bins=16, range=(-4.0, 4.0))
+            ref = ref.astype(np.float32)
+            # clipping differs at the extreme bins only
+            np.testing.assert_allclose(extract(res)[1:-1], ref[1:-1],
+                                       atol=atol)
+            assert report.mapreduce.local_rows_read == int(mask.sum())
+            return
+        np.testing.assert_allclose(extract(res), ref, atol=atol)
+        assert report.mapreduce.local_rows_read == int(mask.sum())
+
+    @pytest.mark.parametrize("eta", [1, 3, 8, 50, 200])
+    def test_eta_invariance_through_pushdown(self, tables, eta):
+        """η is a pure performance knob: the pushdown result must not move."""
+        prop, _, data = tables
+        pred = age_sex_predicate(20, 40, 1)
+        session = GridSession(prop)
+        res, report = session.run_where(pred, MeanProgram(), ["age", "sex"],
+                                        eta=eta)
+        mask, _ = indexed_query(prop, pred, ["age", "sex"])
+        np.testing.assert_allclose(np.asarray(res), data[mask].mean(0),
+                                   atol=1e-4)
+        assert report.eta == eta
+
+    @pytest.mark.parametrize("name,pred", PREDICATES)
+    def test_moves_only_selected_payload_bytes(self, tables, name, pred):
+        prop, _, _ = tables
+        session = GridSession(prop, default_eta=8)
+        _, report = session.run_where(pred, MeanProgram(), ["age", "sex"])
+        q = report.query
+        row_nbytes = prop.column_spec("img", "data").row_nbytes
+        assert q.payload_bytes_moved == q.rows_selected * row_nbytes
+        if q.rows_selected < N:
+            assert q.payload_bytes_moved < N * row_nbytes
+        # the index scan never touches payload
+        assert q.payload_bytes_traversed == 0
+
+    def test_empty_selection_runs(self, tables):
+        prop, _, _ = tables
+        session = GridSession(prop, default_eta=8)
+        res, report = session.run_where(
+            age_sex_predicate(200, 300, 1), MeanProgram(), ["age", "sex"])
+        assert report.query.rows_selected == 0
+        assert report.query.payload_bytes_moved == 0
+        assert np.all(np.isfinite(np.asarray(res)))

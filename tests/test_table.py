@@ -92,6 +92,78 @@ class TestUploadRetrieve:
         )
         assert t.num_rows == 2
 
+    def test_on_duplicate_error_raises_and_writes_nothing(self):
+        t = small_table()
+        upload_rows(t, ["a", "c"], seed=0)
+        before = t.retrieve("img", "data")[1].copy()
+        with pytest.raises(KeyError):
+            t.upload(
+                ["b", "a"],  # mixes an insert with a cross-batch duplicate
+                {
+                    "img": {"data": np.ones((2, 4), np.float32)},
+                    "idx": {"size": np.full(2, 10, np.int64),
+                            "age": np.ones(2, np.float32)},
+                },
+                on_duplicate="error",
+            )
+        assert t.num_rows == 2
+        np.testing.assert_array_equal(t.retrieve("img", "data")[1], before)
+
+    def test_cross_batch_duplicates_independent_of_batch_order(self):
+        """The documented contract: per-row handling never depends on where
+        the duplicate sits in the (possibly unsorted) batch."""
+        for batch in (["d", "c", "b", "a"], ["a", "b", "c", "d"],
+                      ["b", "d", "a", "c"]):
+            t = small_table()
+            upload_rows(t, ["b", "d"], seed=0)
+            kept = {k: t.retrieve("img", "data", rowkey=k)[1][0].copy()
+                    for k in ("b", "d")}
+            n = t.upload(
+                batch,
+                {
+                    "img": {"data": np.ones((4, 4), np.float32)},
+                    "idx": {"size": np.full(4, 10, np.int64),
+                            "age": np.ones(4, np.float32)},
+                },
+                on_duplicate="skip",
+            )
+            assert n == 2  # only the two inserts
+            assert [k.decode() for k in t.keys] == ["a", "b", "c", "d"]
+            for k in ("b", "d"):  # duplicates kept their first-uploaded value
+                np.testing.assert_array_equal(
+                    t.retrieve("img", "data", rowkey=k)[1][0], kept[k])
+            for k in ("a", "c"):  # inserts took the batch's value
+                np.testing.assert_array_equal(
+                    t.retrieve("img", "data", rowkey=k)[1][0],
+                    np.ones(4, np.float32))
+            t.check_invariants()
+
+    def test_on_duplicate_overwrite_takes_latest(self):
+        t = small_table()
+        upload_rows(t, ["b", "d"], seed=0)
+        t.upload(
+            ["d", "a"],
+            {
+                "img": {"data": np.full((2, 4), 9.0, np.float32)},
+                "idx": {"size": np.full(2, 10, np.int64),
+                        "age": np.ones(2, np.float32)},
+            },
+            on_duplicate="overwrite",
+        )
+        np.testing.assert_array_equal(
+            t.retrieve("img", "data", rowkey="d")[1][0],
+            np.full(4, 9.0, np.float32))
+        t.check_invariants()
+
+    def test_unknown_on_duplicate_mode(self):
+        t = small_table()
+        upload_rows(t, ["a"])
+        with pytest.raises(ValueError):
+            t.upload(["a"], {"img": {"data": np.ones((1, 4), np.float32)},
+                             "idx": {"size": np.array([10]),
+                                     "age": np.ones(1, np.float32)}},
+                     on_duplicate="bogus")
+
     def test_schema_validation(self):
         t = small_table()
         with pytest.raises(ValueError):
