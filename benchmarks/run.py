@@ -1,16 +1,56 @@
 """Benchmark harness — one entry per paper table/figure + roofline/kernels.
 
 Prints ``name,value,derived`` CSV lines per benchmark plus the validation
-summary EXPERIMENTS.md quotes.  Run:  PYTHONPATH=src python -m benchmarks.run
+summary EXPERIMENTS.md quotes, and writes one JSON artifact per bench so the
+perf trajectory is diffable across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI-fast subset
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
 
+def _write_artifact(name: str, payload: dict) -> None:
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump({"bench": name, **payload}, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+
+
+def run_query_pruning() -> None:
+    from benchmarks import bench_query_pruning
+
+    print("\n--- [PR 2] GridQuery region pruning: pruned vs naive scan ---")
+    t0 = time.perf_counter()
+    b = bench_query_pruning.run()
+    elapsed_us = (time.perf_counter() - t0) * 1e6
+    print(f"bench_query_pruning,{elapsed_us:.0f},"
+          f"regions_pruned={b['regions_pruned']}/{b['n_sites']};"
+          f"wall_vs_mask={b['wall_speedup_vs_mask_path']:.1f}x;"
+          f"sim_rt_x={b['sim_rt_speedup']:.1f}x")
+    _write_artifact("query_pruning", {"elapsed_us": round(elapsed_us), **b})
+
+
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="fast subset for CI: query-pruning bench only")
+    args = parser.parse_args()
+
+    print("=" * 72)
+    print("ColoGrid benchmarks (paper: HadoopBase-MIP backend, Bao et al. 2017)")
+    print("=" * 72)
+
+    if args.smoke:
+        run_query_pruning()
+        print("\nsmoke benchmarks complete")
+        return
+
     from benchmarks import (
         bench_balancer,
         bench_chunk_model,
@@ -18,10 +58,6 @@ def main() -> None:
         bench_roofline,
         bench_table_scheme,
     )
-
-    print("=" * 72)
-    print("ColoGrid benchmarks (paper: HadoopBase-MIP backend, Bao et al. 2017)")
-    print("=" * 72)
 
     print("\n--- [Fig. 3] Use case 1: heterogeneous cluster / load balancer ---")
     t0 = time.perf_counter()
@@ -45,11 +81,9 @@ def main() -> None:
           f"naive_over_proposed_small={b3['naive_over_proposed_small']:.1f}x;"
           f"paper=9x;sge_over_proposed_large="
           f"{b3['sge_over_proposed_large']:.1f}x;paper=3x")
-    # perf-trajectory artifact: one JSON per run, diffable across PRs
-    with open("BENCH_table_scheme.json", "w") as f:
-        json.dump({"bench": "table_scheme", "elapsed_us": round(elapsed_us),
-                   **b3}, f, indent=2, sort_keys=True)
-    print("wrote BENCH_table_scheme.json")
+    _write_artifact("table_scheme", {"elapsed_us": round(elapsed_us), **b3})
+
+    run_query_pruning()
 
     print("\n--- Kernels (interpret-mode validation) ---")
     bench_kernels.run()

@@ -1,11 +1,15 @@
-"""Use case 3 end-to-end: age/sex-specific templates via the table scheme.
+"""Use case 3 end-to-end: age/sex templates through GridQuery job plans.
 
-Runs the paper's Table-3 queries against BOTH table schemes.  The proposed
-scheme goes through ``GridSession.run_where`` — predicate pushdown: the index
-family answers the predicate, then each device gathers only ITS OWN selected
-payload rows, so ``payload_bytes_moved`` covers the subset and nothing else.
-The naive scheme answers the same predicate but drags every image's bytes
-through the read path (Fig. 1C).
+Runs the paper's Table-3 queries against BOTH table schemes — now through
+the lazy ``GridQuery`` builder::
+
+    session.scan(prefix=...).select(col).where(pred).map(prog).reduce()
+
+Nothing moves until ``.collect()``; the planner then (1) prunes regions a
+rowkey prefix/range cannot touch (``regions_pruned``), (2) gathers only the
+selected column's selected rows, and (3) fuses every mapped statistic into
+one shard_map pass.  The naive scheme answers the same predicates but drags
+every image's bytes through the read path (Fig. 1C).
 
     PYTHONPATH=src python examples/subset_query.py
 """
@@ -18,9 +22,29 @@ import numpy as np
 
 from repro.core.grid import GridSession
 from repro.core.query import age_sex_predicate, naive_query
-from repro.core.stats import MeanProgram
-from repro.core.table import ColumnSpec, make_naive_table
+from repro.core.stats import MeanProgram, VarianceProgram
+from repro.core.table import ColumnSpec, make_mip_table, make_naive_table
 from repro.data.pipeline import synthetic_image_population
+
+SITES = ("site-a/", "site-b/", "site-c/", "site-d/")
+
+
+def multi_site_table(pop):
+    """Re-key the population under per-site rowkey prefixes, presplit so
+    each site is (at least) its own region — the layout the paper's rowkey
+    scheme recommends, and what makes prefix scans prunable."""
+    t = make_mip_table(
+        payload_shape=pop.column("img", "data").shape[1:],
+        extra_index_columns=[ColumnSpec("age", (), np.float32),
+                             ColumnSpec("sex", (), np.int8)],
+        presplit_keys=list(SITES)[1:])
+    keys = [f"{SITES[i % len(SITES)]}{k.decode()}"
+            for i, k in enumerate(pop.keys)]
+    t.upload(keys, {"img": {"data": pop.column("img", "data")},
+                    "idx": {"size": pop.column("idx", "size"),
+                            "age": pop.column("idx", "age"),
+                            "sex": pop.column("idx", "sex")}})
+    return t
 
 
 def main():
@@ -39,11 +63,19 @@ def main():
 
     session = GridSession(pop, default_eta=16)
 
+    print("— Table-3 subset templates (predicate pushdown, fused stats) —")
     for label, lo, hi, sex in [("female 20-40", 20, 40, 1),
                                ("male >60", 60, None, 0),
                                ("all female", None, None, 1)]:
         pred = age_sex_predicate(lo, hi, sex)
-        avg, report = session.run_where(pred, MeanProgram(), ["age", "sex"])
+        # one plan, one gather, one compiled pass: mean AND variance fused
+        plan = (session.scan()
+                .select("img:data")
+                .where(pred, ["age", "sex"])
+                .map(MeanProgram())
+                .map(VarianceProgram())
+                .reduce())
+        (avg, var), report = plan.collect()
         st_p = report.query
         m_n, st_n = naive_query(naive, pred, ["age", "sex"])
 
@@ -59,7 +91,20 @@ def main():
         print(f"  naive scheme scanned    {st_n.total_bytes_scanned:>14,} B "
               f"({st_n.total_bytes_scanned/max(st_p.total_bytes_scanned,1):,.0f}x"
               f" more — full image traversal)")
-        print(f"  subset template err vs numpy: {err:.2e}\n")
+        print(f"  subset template err vs numpy: {err:.2e} "
+              f"(var also computed, same pass)\n")
+
+    print("— rowkey-prefix region pruning (multi-site layout) —")
+    sited = multi_site_table(pop)
+    site_session = GridSession(sited, default_eta=16)
+    plan = site_session.scan(prefix="site-b/").map(MeanProgram())
+    print(plan.explain())
+    _, report = plan.collect()
+    q = report.query
+    print(f"  regions: {q.regions_scanned} scanned, {q.regions_pruned} "
+          f"pruned (never touched)")
+    print(f"  rows selected {q.rows_selected}, payload moved "
+          f"{q.payload_bytes_moved:,} B — one site's worth, not the grid's\n")
 
     print(session.describe())
 

@@ -13,6 +13,8 @@ The subpackage mirrors HadoopBase-MIP's backend (Bao et al., 2017):
   model and the chunk-size (eta) optimizer.
 - :mod:`repro.core.stats`       — summary-statistic MapReduce programs.
 - :mod:`repro.core.query`       — index-family predicate pushdown vs naive scan.
+- :mod:`repro.core.plan`        — :class:`GridQuery`, lazy scan→filter→map→
+  reduce job plans with region pruning, projection pushdown, program fusion.
 - :mod:`repro.core.simulator`   — discrete-event cluster simulator (Hadoop/SGE).
 - :mod:`repro.core.scheduler`   — grid scheduler: rounds, stragglers, failures.
 - :mod:`repro.core.grid`        — :class:`GridSession`, the five-verb facade
@@ -49,8 +51,10 @@ from repro.core.stats import (
     VarianceProgram,
     MomentsProgram,
     HistogramProgram,
+    FusedProgram,
 )
 from repro.core.query import indexed_query, naive_query, QueryStats
+from repro.core.plan import GridQuery, prefix_range
 from repro.core.grid import GridSession, RunReport, SessionMetrics
 
 __all__ = [
@@ -64,5 +68,7 @@ __all__ = [
     "ChunkModelParams", "ChunkModel", "PAPER_PARAMS", "TPU_V5E_PARAMS",
     "MapReduceEngine", "MapReduceProgram",
     "MeanProgram", "VarianceProgram", "MomentsProgram", "HistogramProgram",
+    "FusedProgram",
     "indexed_query", "naive_query", "QueryStats",
+    "GridQuery", "prefix_range",
 ]

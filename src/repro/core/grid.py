@@ -13,9 +13,15 @@ exposes the five verbs:
 - :meth:`retrieve`  — the Table-1 selector read path;
 - :meth:`remove`    — row deletion with dirty-region invalidation;
 - :meth:`rebalance` — the paper's offline #CPU×MIPS balancer, applied to the
-  *current* allocation (minimum region moves);
-- :meth:`run` / :meth:`run_where` — MapReduce over the full table or a
-  predicate-pushdown subset.
+  *current* allocation (minimum region moves); ``auto=True`` derives node
+  powers from :meth:`observe_round` history through the wired
+  :class:`GridScheduler` / ``powers_from_observations`` loop;
+- :meth:`scan`      — the query surface: a lazy :class:`GridQuery` plan
+  (``scan(...).select(...).where(...).map(...).reduce()``) that prunes
+  regions, pushes the projection down, and fuses all mapped statistics into
+  one engine pass when ``.collect()``/``.stats()`` executes it;
+- :meth:`run` / :meth:`run_where` — thin wrappers over :meth:`scan` for the
+  full table and the predicate-pushdown subset.
 
 Three properties make mutation cheap and repeated compute fast:
 
@@ -29,11 +35,16 @@ Three properties make mutation cheap and repeated compute fast:
    across epochs the bound data refreshes but the jitted ``shard_map``
    executable (shape-keyed inside :class:`MapReduceEngine`) is reused, so no
    recompile happens unless the layout's shape actually changed.
-3. **Predicate pushdown.**  ``run_where`` evaluates the predicate on the
-   index family only (§2.3), then gathers *just the selected payload rows*
+3. **Predicate pushdown.**  ``where`` plans evaluate the predicate on the
+   index family only (§2.3), then gather *just the selected payload rows*
    per device — locality preserved because index and payload share rowkeys
-   and placement — and reports ``payload_bytes_moved`` covering only those
+   and placement — and report ``payload_bytes_moved`` covering only those
    rows.  The mask path (materialize everything, fold a subset) is gone.
+4. **Region pruning.**  A rowkey prefix/range scan intersects the
+   :class:`RegionSet` intervals *before* any bytes move (two bisects over
+   region start keys): non-matching regions are never scanned and their
+   device blocks never gathered.  ``QueryStats.regions_scanned`` /
+   ``regions_pruned`` make the efficacy observable.
 """
 
 from __future__ import annotations
@@ -50,11 +61,16 @@ import jax
 from repro.core.balancer import (
     NodeSpec,
     allocation_imbalance,
+    powers_from_observations,
     rebalance as rebalance_allocation,
 )
 from repro.core.mapreduce import MapReduceEngine, MapReduceProgram, MapReduceStats
 from repro.core.placement import Placement
+from repro.core.plan import GridQuery, prefix_range
 from repro.core.query import Predicate, QueryStats, indexed_query
+from repro.core.regions import Region
+from repro.core.scheduler import GridScheduler
+from repro.core.stats import FusedProgram
 from repro.core.table import (
     DATA_FAMILY,
     INDEX_FAMILY,
@@ -81,18 +97,59 @@ class SessionMetrics:
     devices_regathered: int = 0     # device blocks whose payload was re-read
     devices_reused: int = 0         # device blocks kept across a mutation
     rows_gathered: int = 0          # payload rows copied into layouts
-    pushdown_rows_gathered: int = 0  # payload rows moved by run_where
+    pushdown_rows_gathered: int = 0  # payload rows moved by pruned/where scans
+    scans: int = 0                  # GridQuery plans executed
+    payload_gathers: int = 0        # payload gather passes (full, refresh, pruned)
+    programs_fused: int = 0         # programs that shared a fused engine pass
 
 
 @dataclasses.dataclass(frozen=True)
 class RunReport:
-    """Accounting for one ``run``/``run_where`` call."""
+    """Accounting for one executed plan (``run``/``run_where``/``collect``)."""
 
     epoch: int
     eta: int
     plan_cache_hit: bool
-    mapreduce: MapReduceStats
+    mapreduce: Optional[MapReduceStats]   # None for pure retrieve plans
     query: Optional[QueryStats] = None
+
+
+class _SessionScheduler(GridScheduler):
+    """The session-owned scheduler is observation/planning only.
+
+    Node membership is pinned by the mesh (one device per node), and region
+    moves must flow through :meth:`GridSession.rebalance` so mutation epochs
+    invalidate cached layouts/plans — the fail/join verbs would mutate the
+    shared placement behind the session's back, leaving stale device maps.
+    """
+
+    def handle_failure(self, dead_node_ids):
+        raise NotImplementedError(
+            "the session-owned scheduler cannot change node membership: the "
+            "mesh pins one device per node; use GridSession.rebalance "
+            "(optionally with refreshed NodeSpecs) for region moves")
+
+    def handle_join(self, new_nodes):
+        raise NotImplementedError(
+            "the session-owned scheduler cannot change node membership: the "
+            "mesh pins one device per node; use GridSession.rebalance "
+            "(optionally with refreshed NodeSpecs) for region moves")
+
+
+@dataclasses.dataclass
+class _ScanPlan:
+    """A bound pruned-scan layout: the gathered device blocks of one
+    ``GridQuery`` plan, reusable until the next mutation epoch.
+
+    ``predicate`` pins the predicate object so its ``id()`` (part of the
+    plan signature) cannot be recycled while this entry lives; every cache
+    hit re-verifies identity.
+    """
+
+    predicate: Optional[Predicate]
+    values: Any                # device [D, C, ...] of the selected rows
+    dvalid: Any                # device [D, C] validity
+    qstats: QueryStats
 
 
 @dataclasses.dataclass
@@ -154,9 +211,16 @@ class GridSession:
         # (epoch, dirty node ids) per mutation; consumed by layout refresh
         self._dirty_log: List[Tuple[int, FrozenSet[int]]] = []
         self._layouts: Dict[Tuple[str, str, int], _Layout] = {}
-        # (program, mesh shape, eta, column, epoch) -> layout key
+        # (programs, mesh shape, eta, column, epoch) -> layout key
         self._plans: Dict[Tuple, Tuple[str, str, int]] = {}
+        # GridQuery plan signature -> bound pruned-scan layout
+        self._scan_plans: Dict[Tuple, _ScanPlan] = {}
         self._node_index = {n.node_id: d for d, n in enumerate(nodes)}
+        # observed per-node round times (observe_round) -> auto-rebalance
+        self._round_history: Dict[int, List[float]] = {
+            n.node_id: [] for n in nodes
+        }
+        self._scheduler: Optional[GridScheduler] = None
 
     # ------------------------------------------------------------------
     # epoch / dirty tracking
@@ -178,6 +242,7 @@ class GridSession:
         self._dirty_log.append((self._epoch, frozenset(owners)))
         # plans are epoch-keyed; everything cached is now stale
         self._plans.clear()
+        self._scan_plans.clear()
         self._prune_caches()
 
     def _prune_caches(self) -> None:
@@ -255,17 +320,63 @@ class GridSession:
             self._advance_epoch(self.table.regions.regions_containing(doomed))
         return removed
 
+    def observe_round(self, node_times: Mapping[int, float]) -> None:
+        """Feed measured per-node round times (the runtime re-measurement of
+        the paper's ``linux perf`` MIPS probe).
+
+        Observations accumulate in the session AND drive the wired
+        :class:`GridScheduler` (its EWMA powers back ``makespan_estimate``
+        and the round ledger); :meth:`rebalance` with ``auto=True`` then
+        derives node powers from this history via
+        :func:`~repro.core.balancer.powers_from_observations` — no
+        hand-supplied specs needed.
+        """
+        for nid, t in node_times.items():
+            if nid in self._round_history and t > 0:
+                hist = self._round_history[nid]
+                hist.append(float(t))
+                del hist[:-self.ROUND_HISTORY_CAP]
+        self.scheduler.observe_round(node_times)
+
+    #: round-time observations kept per node; the EWMA power fold saturates
+    #: long before this, and an unbounded log would grow with session age
+    ROUND_HISTORY_CAP = 64
+
+    @property
+    def scheduler(self) -> GridScheduler:
+        """The session's passive :class:`GridScheduler` (observation ledger,
+        makespan estimates).  Its auto-trigger threshold is infinite and its
+        membership verbs are disabled — region moves stay under the
+        session's explicit :meth:`rebalance`, which is what keeps
+        epochs/dirty-tracking consistent."""
+        if self._scheduler is None:
+            self._scheduler = _SessionScheduler(
+                self.placement, chunk_size=self.default_eta,
+                rebalance_threshold=float("inf"))
+        return self._scheduler
+
     def rebalance(
         self,
         tolerance: float = 0.05,
         nodes: Optional[Sequence[NodeSpec]] = None,
+        auto: bool = False,
     ) -> List[int]:
         """The paper's offline balancer from the *current* allocation.
 
         ``nodes`` swaps in refreshed specs (elastic rescale, straggler
         deweighting via :func:`~repro.core.balancer.powers_from_observations`)
-        — node ids must be the existing ones.  Returns moved region ids.
+        — node ids must be the existing ones.  ``auto=True`` derives those
+        specs from the round times fed to :meth:`observe_round` instead
+        (no observations yet -> powers unchanged).  Returns moved region ids.
         """
+        if auto:
+            if nodes is not None:
+                raise ValueError(
+                    "auto=True derives nodes from observe_round history; "
+                    "pass one or the other")
+            if any(self._round_history.values()):
+                nodes = powers_from_observations(
+                    self._round_history, self.placement.nodes)
         if nodes is not None:
             if {n.node_id for n in nodes} != set(self._node_index):
                 raise ValueError("rebalance nodes must keep the same node ids")
@@ -284,6 +395,35 @@ class GridSession:
             self._advance_epoch(set(moved), extra_dirty_nodes=dirty_nodes)
         return moved
 
+    # ------------------------------------------------------------------
+    # GridQuery: lazy scan -> filter -> map -> reduce plans
+    # ------------------------------------------------------------------
+
+    def scan(
+        self,
+        prefix: Optional[RowKey] = None,
+        start: Optional[RowKey] = None,
+        stop: Optional[RowKey] = None,
+    ) -> GridQuery:
+        """Open a lazy :class:`GridQuery` plan over a rowkey range.
+
+        ``prefix`` is sugar for the half-open range of keys sharing it
+        (mutually exclusive with ``start``/``stop``).  Nothing is scanned,
+        gathered, or compiled until ``.collect()``/``.stats()`` — the
+        planner prunes regions, pushes the projection down, and fuses every
+        ``.map`` program into one engine pass first.
+        """
+        if prefix is not None:
+            if start is not None or stop is not None:
+                raise ValueError("prefix is exclusive with start/stop")
+            p, (start_b, stop_b) = _as_key(prefix), prefix_range(prefix)
+            return GridQuery(self, start=start_b, stop=stop_b, prefix=p)
+        return GridQuery(
+            self,
+            start=None if start is None else _as_key(start),
+            stop=None if stop is None else _as_key(stop),
+        )
+
     def run(
         self,
         program: MapReduceProgram,
@@ -291,24 +431,11 @@ class GridSession:
         family: Optional[str] = None,
         qualifier: Optional[str] = None,
     ) -> Tuple[Any, RunReport]:
-        """MapReduce over the whole table, through the compiled-plan cache."""
-        family = family or self.payload_family
-        qualifier = qualifier or self.payload_qualifier
-        eta = int(eta or self.default_eta)
-        plan_key = (self._program_key(program), self._mesh_shape(), eta,
-                    family, qualifier, self._epoch)
-        hit = plan_key in self._plans
-        if hit:
-            self.metrics.plan_hits += 1
-            layout = self._layouts[self._plans[plan_key]]
-        else:
-            self.metrics.plan_misses += 1
-            layout = self._layout(family, qualifier, eta)
-            self._plans[plan_key] = (family, qualifier, eta)
-        result, mr = self.engine.run(program, layout.values, layout.dvalid,
-                                     eta)
-        return result, RunReport(epoch=self._epoch, eta=eta,
-                                 plan_cache_hit=hit, mapreduce=mr)
+        """MapReduce over the whole table — a full-range one-program plan."""
+        q = self.scan().select(
+            (family or self.payload_family,
+             qualifier or self.payload_qualifier)).map(program)
+        return q.collect(eta=eta)
 
     def run_where(
         self,
@@ -319,19 +446,134 @@ class GridSession:
         family: Optional[str] = None,
         qualifier: Optional[str] = None,
     ) -> Tuple[Any, RunReport]:
-        """Predicate-pushdown MapReduce (§2.3 unified with §2.2).
+        """Predicate-pushdown MapReduce (§2.3 unified with §2.2) — a
+        full-range ``.where`` plan.
 
         The predicate runs over the index family only; each device then
         gathers *just its own selected* payload rows (compacted, locality
         preserved), so the returned ``QueryStats.payload_bytes_moved`` covers
         exactly the selected rows — never the full table.
         """
-        family = family or self.payload_family
-        qualifier = qualifier or self.payload_qualifier
+        q = (self.scan()
+             .select((family or self.payload_family,
+                      qualifier or self.payload_qualifier))
+             .where(predicate, index_qualifiers)
+             .map(program))
+        return q.collect(eta=eta)
+
+    # ------------------------------------------------------------------
+    # the planner/executor behind GridQuery
+    # ------------------------------------------------------------------
+
+    #: bound pruned-scan layouts kept per epoch; oldest evicted beyond this
+    SCAN_PLAN_CAP = 32
+
+    def _execute_plan(
+        self, plan: GridQuery, eta: Optional[int] = None
+    ) -> Tuple[Any, RunReport]:
+        """Compile + execute a :class:`GridQuery` with all three pushdowns."""
         eta = int(eta or self.default_eta)
-        mask, qstats = indexed_query(self.table, predicate, index_qualifiers,
-                                     index_family=self.index_family)
-        per_dev = self._per_device_rows()
+        self.metrics.scans += 1
+        if not plan.programs:
+            return self._collect_rows(plan, eta)
+        program: MapReduceProgram
+        if len(plan.programs) == 1:
+            program = plan.programs[0]
+        else:
+            program = FusedProgram(plan.programs)
+            self.metrics.programs_fused += len(plan.programs)
+        if (plan.start is None and plan.stop is None
+                and plan.predicate is None):
+            return self._run_full(plan, program, eta)
+        return self._run_pruned(plan, program, eta)
+
+    def _run_full(
+        self, plan: GridQuery, program: MapReduceProgram, eta: int
+    ) -> Tuple[Any, RunReport]:
+        """Whole-table plans ride the incremental layout machinery: a repeat
+        run is a plan-cache hit; across epochs only dirty device blocks are
+        re-gathered."""
+        family, qualifier = plan.compute_column()
+        plan_key = (tuple(p.cache_key() for p in plan.programs),
+                    self._mesh_shape(), eta, family, qualifier, self._epoch)
+        hit = plan_key in self._plans
+        rows_before = self.metrics.rows_gathered
+        if hit:
+            self.metrics.plan_hits += 1
+            layout = self._layouts[self._plans[plan_key]]
+        else:
+            self.metrics.plan_misses += 1
+            layout = self._layout(family, qualifier, eta)
+            self._plans[plan_key] = (family, qualifier, eta)
+        result, mr = self.engine.run(program, layout.values, layout.dvalid,
+                                     eta)
+        n = self.table.num_rows
+        row_nbytes = self.table.column_spec(family, qualifier).row_nbytes
+        qstats = QueryStats(
+            rows_scanned=n, index_bytes_scanned=0, payload_bytes_traversed=0,
+            rows_selected=n,
+            payload_bytes_moved=(self.metrics.rows_gathered - rows_before)
+            * row_nbytes,
+            regions_scanned=len(self.table.regions), regions_pruned=0)
+        return result, RunReport(epoch=self._epoch, eta=eta,
+                                 plan_cache_hit=hit, mapreduce=mr,
+                                 query=qstats)
+
+    def _run_pruned(
+        self, plan: GridQuery, program: MapReduceProgram, eta: int
+    ) -> Tuple[Any, RunReport]:
+        """Range/predicate plans: prune regions first, then gather only the
+        selected rows of the surviving regions into a compact layout."""
+        sig = plan.plan_signature(eta)
+        entry = self._scan_plans.get(sig)
+        hit = entry is not None and entry.predicate is plan.predicate
+        if hit:
+            self.metrics.plan_hits += 1
+        else:
+            self.metrics.plan_misses += 1
+            entry = self._gather_pruned(plan, eta)
+            while len(self._scan_plans) >= self.SCAN_PLAN_CAP:
+                self._scan_plans.pop(next(iter(self._scan_plans)))
+            self._scan_plans[sig] = entry
+        result, mr = self.engine.run(program, entry.values, entry.dvalid, eta)
+        return result, RunReport(epoch=self._epoch, eta=eta,
+                                 plan_cache_hit=hit, mapreduce=mr,
+                                 query=entry.qstats)
+
+    def _scan_mask(
+        self, plan: GridQuery
+    ) -> Tuple[np.ndarray, QueryStats, Tuple[Region, ...], int, int]:
+        """Selected-row mask + accounting for a plan's scan stage, plus the
+        resolved ``(regions, lo, hi)`` so downstream stages consume the SAME
+        range resolution they were keyed on.
+
+        With a predicate this is :func:`indexed_query` over the scan range
+        (index family only); without one, every row in range is selected and
+        zero index bytes move.  Region stats always reflect the pruning.
+        """
+        regions = self.table.regions.prune(plan.start, plan.stop)
+        pruned_count = len(self.table.regions) - len(regions)
+        lo, hi = self.table.row_range(plan.start, plan.stop)
+        if plan.predicate is not None:
+            mask, qstats = indexed_query(
+                self.table, plan.predicate, plan.index_qualifiers,
+                index_family=self.index_family,
+                start=plan.start, stop=plan.stop)
+        else:
+            mask = np.zeros(self.table.num_rows, dtype=bool)
+            mask[lo:hi] = True
+            qstats = QueryStats(
+                rows_scanned=hi - lo, index_bytes_scanned=0,
+                payload_bytes_traversed=0, rows_selected=hi - lo,
+                regions_scanned=len(regions), regions_pruned=pruned_count)
+        return mask, qstats, regions, lo, hi
+
+    def _gather_pruned(self, plan: GridQuery, eta: int) -> _ScanPlan:
+        """One gather pass: per device, only ITS OWN selected rows from the
+        surviving regions — locality preserved, pruned regions untouched."""
+        family, qualifier = plan.compute_column()
+        mask, qstats, regions, lo, hi = self._scan_mask(plan)
+        per_dev = self._per_device_rows_pruned(regions, lo, hi)
         selected = [rows[mask[rows]] for rows in per_dev]
         n_sel = int(sum(len(s) for s in selected))
         need = max((len(s) for s in selected), default=0)
@@ -345,17 +587,33 @@ class GridSession:
             host[d, : len(rows)] = col[rows]
             valid[d, : len(rows)] = True
         sh = Placement.data_sharding(self.mesh, self.data_axis)
-        values = jax.device_put(host, sh)
-        dvalid = jax.device_put(valid, sh)
-
-        result, mr = self.engine.run(program, values, dvalid, eta)
         row_nbytes = self.table.column_spec(family, qualifier).row_nbytes
         qstats = dataclasses.replace(
             qstats, payload_bytes_moved=n_sel * row_nbytes)
         self.metrics.pushdown_rows_gathered += n_sel
-        return result, RunReport(epoch=self._epoch, eta=eta,
-                                 plan_cache_hit=False, mapreduce=mr,
-                                 query=qstats)
+        self.metrics.payload_gathers += 1
+        return _ScanPlan(predicate=plan.predicate,
+                         values=jax.device_put(host, sh),
+                         dvalid=jax.device_put(valid, sh), qstats=qstats)
+
+    def _collect_rows(
+        self, plan: GridQuery, eta: int
+    ) -> Tuple[Tuple[np.ndarray, Dict[str, np.ndarray]], RunReport]:
+        """Program-less plans are pruned retrieves: host-side rowkeys plus
+        every selected column's values, charging only the selected rows."""
+        mask, qstats, _, _, _ = self._scan_mask(plan)
+        sel = np.nonzero(mask)[0]
+        cols = {
+            f"{f}:{q}": self.table.column(f, q)[sel].copy()
+            for f, q in plan.resolved_columns()
+        }
+        per_row = sum(self.table.column_spec(f, q).row_nbytes
+                      for f, q in plan.resolved_columns())
+        qstats = dataclasses.replace(
+            qstats, payload_bytes_moved=len(sel) * per_row)
+        report = RunReport(epoch=self._epoch, eta=eta, plan_cache_hit=False,
+                           mapreduce=None, query=qstats)
+        return (self.table.keys[sel].copy(), cols), report
 
     # ------------------------------------------------------------------
     # layouts (incremental placement materialization)
@@ -364,6 +622,25 @@ class GridSession:
     def _per_device_rows(self) -> List[np.ndarray]:
         return [self.placement.rows_for_node(n.node_id)
                 for n in self.placement.nodes]
+
+    def _per_device_rows_pruned(
+        self, regions: Sequence[Region], lo: int, hi: int
+    ) -> List[np.ndarray]:
+        """Per-device positional rows restricted to the surviving regions,
+        clipped to the scan range — O(|pruned regions|), never a walk over
+        regions the scan excluded."""
+        keys = self.table.keys
+        per: List[List[np.ndarray]] = [[] for _ in self.placement.nodes]
+        for region in regions:
+            d = self._node_index.get(self.placement.alloc.get(region.rid))
+            if d is None:
+                continue
+            s = region.row_slice(keys)
+            a, b = max(s.start, lo), min(s.stop, hi)
+            if a < b:
+                per[d].append(np.arange(a, b, dtype=np.int64))
+        return [np.sort(np.concatenate(p)) if p
+                else np.empty((0,), dtype=np.int64) for p in per]
 
     def _layout(self, family: str, qualifier: str, chunk: int) -> _Layout:
         key = (family, qualifier, int(chunk))
@@ -388,6 +665,7 @@ class GridSession:
                 valid[d, : len(rows)] = True
                 host[d, : len(rows)] = col[rows]
             self.metrics.layout_full_builds += 1
+            self.metrics.payload_gathers += 1
             self.metrics.devices_regathered += D
             self.metrics.rows_gathered += int(sum(len(r) for r in per_dev))
         else:
@@ -416,6 +694,8 @@ class GridSession:
                 else:
                     self.metrics.devices_reused += 1
             self.metrics.layout_refreshes += 1
+            if dirty_devs:
+                self.metrics.payload_gathers += 1
 
         sh = Placement.data_sharding(self.mesh, self.data_axis)
         lay = _Layout(
@@ -430,10 +710,6 @@ class GridSession:
     # ------------------------------------------------------------------
     # helpers / diagnostics
     # ------------------------------------------------------------------
-
-    @staticmethod
-    def _program_key(program: MapReduceProgram) -> Tuple[str, str]:
-        return (type(program).__name__, repr(program))
 
     def _mesh_shape(self) -> Tuple[Tuple[str, int], ...]:
         return tuple((a, self.mesh.shape[a]) for a in self.mesh.axis_names)
@@ -466,5 +742,8 @@ class GridSession:
             f"{m.layout_refreshes} refreshes "
             f"({m.devices_regathered} regathered / {m.devices_reused} reused "
             f"device blocks, {m.rows_gathered} rows gathered)",
+            f"  queries: {m.scans} plans executed, {m.programs_fused} "
+            f"programs fused, {m.payload_gathers} payload gather passes "
+            f"({m.pushdown_rows_gathered} pushdown rows)",
         ]
         return "\n".join(lines)

@@ -56,6 +56,15 @@ class MapReduceProgram:
 
     additive: bool = False
 
+    def cache_key(self) -> Tuple[str, str]:
+        """Stable identity for executable/plan caches.
+
+        Default: type name + repr — correct for the frozen-dataclass
+        programs in :mod:`repro.core.stats` (repr encodes every parameter).
+        Programs with unhashable/unstable reprs should override.
+        """
+        return (type(self).__name__, repr(self))
+
     def zero(self, row_shape: Tuple[int, ...], dtype) -> PyTree:
         raise NotImplementedError
 
@@ -183,8 +192,7 @@ class MapReduceEngine:
 
         row_shape = tuple(values.shape[2:])
         dtype = values.dtype
-        key = (type(program).__name__, repr(program), row_shape, str(dtype),
-               chunk_size, C)
+        key = (program.cache_key(), row_shape, str(dtype), chunk_size, C)
         if key not in self._compiled:
             self.compile_count += 1
             self._compiled[key] = self._build(program, row_shape, dtype, chunk_size)

@@ -1,0 +1,222 @@
+"""GridQuery — lazy scan→filter→map→reduce job plans over the grid.
+
+The paper's criterion (3) is a rowkey/table scheme for *rapid* NoSQL query;
+eager one-shot calls (``indexed_query``, ``GridSession.run_where``) could push
+the predicate into the gather but still visited every region.  ``GridQuery``
+makes the query a *plan*: nothing is scanned, gathered, or compiled until
+``.collect()``/``.stats()``, which gives the planner room for three pushdowns
+before any bytes move:
+
+1. **Region pruning** — a rowkey prefix/range resolves against the region
+   start keys (:meth:`RegionSet.prune`, two bisects), so regions outside the
+   scan range are never scanned and their device blocks never gathered.
+   ``QueryStats.regions_scanned``/``regions_pruned`` report the efficacy.
+2. **Projection pushdown** — only the selected column enters the device
+   layout; index families are read exclusively by the predicate.
+3. **Program fusion** — every ``.map(program)`` statistic joins one
+   :class:`~repro.core.stats.FusedProgram`, so mean+variance+histogram run in
+   a single ``shard_map`` pass over a single gather, sharing one compiled
+   executable and one plan-cache entry.
+
+Build plans through :meth:`GridSession.scan`::
+
+    q = (session.scan(prefix=b"site-a/")
+                .select("img:data")
+                .where(age_sex_predicate(20, 40, 1), ["age", "sex"])
+                .map(MeanProgram())
+                .map(VarianceProgram())
+                .reduce())
+    (mean, var), report = q.collect()
+    print(report.query.regions_pruned, "regions never touched")
+
+Builder methods are pure — each returns a new plan, so a scan can be reused
+as the base of several queries.  Results are memoized per (η, epoch): a
+repeated ``.collect()`` at an unchanged table is a pure plan-cache hit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import (
+    TYPE_CHECKING, Any, Dict, Optional, Sequence, Tuple, Union,
+)
+
+from repro.core.mapreduce import MapReduceProgram
+from repro.core.query import Predicate
+from repro.core.table import RowKey, _as_key
+
+if TYPE_CHECKING:  # import cycle: grid builds plans, plans execute on grid
+    from repro.core.grid import GridSession, RunReport
+
+
+def prefix_range(prefix: RowKey) -> Tuple[bytes, Optional[bytes]]:
+    """The half-open rowkey range ``[start, stop)`` matching a key prefix.
+
+    ``stop`` is the prefix with its last non-``0xff`` byte incremented
+    (trailing ``0xff`` bytes stripped first — ``b"a\\xff"`` rolls over to
+    ``b"b"``); an empty or all-``0xff`` prefix has no upper bound (None,
+    the keyspace's +inf sentinel).
+    """
+    p = _as_key(prefix)
+    trimmed = p.rstrip(b"\xff")
+    if not trimmed:
+        return p, None
+    stop = trimmed[:-1] + bytes([trimmed[-1] + 1])
+    return p, stop
+
+
+ColumnRef = Union[str, Tuple[str, str]]
+
+
+def _parse_column(col: ColumnRef) -> Tuple[str, str]:
+    """Accept ``"family:qualifier"`` or ``(family, qualifier)``."""
+    if isinstance(col, str):
+        fam, sep, qual = col.partition(":")
+        if not sep or not fam or not qual:
+            raise ValueError(
+                f"column {col!r} must be 'family:qualifier' or a tuple")
+        return fam, qual
+    fam, qual = col
+    return str(fam), str(qual)
+
+
+@dataclasses.dataclass
+class GridQuery:
+    """One lazy scan→select→where→map→reduce plan bound to a session.
+
+    Immutable by convention: builder methods return a *new* plan (the memo
+    is dropped), so plans compose and fork freely.  Execution happens only
+    in :meth:`collect`/:meth:`stats`, via the session's planner, which owns
+    the pushdowns and the compiled-plan cache.
+    """
+
+    session: "GridSession"
+    start: Optional[bytes] = None          # scan range, half-open
+    stop: Optional[bytes] = None
+    prefix: Optional[bytes] = None         # provenance only; folded into range
+    columns: Tuple[Tuple[str, str], ...] = ()   # projection; () = payload col
+    predicate: Optional[Predicate] = None
+    index_qualifiers: Tuple[str, ...] = ()
+    programs: Tuple[MapReduceProgram, ...] = ()
+    # (eta, epoch) -> (results, report); dropped by every builder call
+    _memo: Dict[Tuple[int, int], Tuple[Any, "RunReport"]] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    # ------------------------------------------------------------------
+    # builders (each returns a fresh plan)
+    # ------------------------------------------------------------------
+
+    def _fork(self, **changes) -> "GridQuery":
+        changes.setdefault("_memo", {})
+        return dataclasses.replace(self, **changes)
+
+    def select(self, *columns: ColumnRef) -> "GridQuery":
+        """Projection pushdown: only these columns enter the layout.
+
+        Compute plans (any ``.map``) require exactly one selected column —
+        the one the programs fold over; plain ``.collect()`` retrieves every
+        selected column.  Default (no ``select``) is the session's payload
+        column.
+        """
+        return self._fork(columns=tuple(_parse_column(c) for c in columns))
+
+    def where(self, predicate: Predicate,
+              index_qualifiers: Sequence[str]) -> "GridQuery":
+        """Filter pushdown: ``predicate`` over the index family only."""
+        if self.predicate is not None:
+            raise ValueError("plan already has a predicate; compose them "
+                             "into one callable instead")
+        return self._fork(predicate=predicate,
+                          index_qualifiers=tuple(index_qualifiers))
+
+    def map(self, program: MapReduceProgram) -> "GridQuery":
+        """Add a statistic; all mapped programs fuse into ONE engine pass."""
+        return self._fork(programs=self.programs + (program,))
+
+    def reduce(self) -> "GridQuery":
+        """Finalize the plan (the programs are monoid folds, so the reduce
+        is implied by their ``merge``/``finalize``; kept for call-site
+        symmetry with the paper's map→reduce verbs).  Still lazy."""
+        if not self.programs:
+            raise ValueError("reduce() needs at least one map(program)")
+        return self
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+
+    def collect(self, eta: Optional[int] = None) -> Tuple[Any, "RunReport"]:
+        """Compile + execute the plan; returns ``(results, RunReport)``.
+
+        With programs, ``results`` follows map order (a bare value for a
+        single program, a tuple for a fused set).  Without programs this is
+        a pruned retrieve: ``results = (rowkeys, {"fam:qual": values})``.
+        """
+        eta_key = int(eta or self.session.default_eta)
+        memo_key = (eta_key, self.session.epoch)
+        if memo_key not in self._memo:
+            self._memo.clear()      # stale epochs/etas have no consumers
+            self._memo[memo_key] = self.session._execute_plan(self, eta=eta)
+        return self._memo[memo_key]
+
+    def stats(self, eta: Optional[int] = None) -> "RunReport":
+        """Execute (memoized) and return just the accounting report."""
+        _, report = self.collect(eta=eta)
+        return report
+
+    def explain(self) -> str:
+        """Describe the physical plan WITHOUT moving bytes or compiling."""
+        regions = self.session.table.regions
+        pruned = regions.prune(self.start, self.stop)
+        lo, hi = self.session.table.row_range(self.start, self.stop)
+        cols = self.resolved_columns()
+        lines = [
+            f"GridQuery(epoch={self.session.epoch})",
+            f"  scan    [{self.start!r}, {self.stop!r}) -> rows {lo}:{hi}, "
+            f"regions {len(pruned)}/{len(regions)} "
+            f"({len(regions) - len(pruned)} pruned)",
+            f"  select  {', '.join(f'{f}:{q}' for f, q in cols)}",
+            f"  where   {self.predicate!r} over idx{list(self.index_qualifiers)}"
+            if self.predicate is not None else "  where   -",
+            f"  map     {len(self.programs)} program(s) fused: "
+            f"{[type(p).__name__ for p in self.programs]}"
+            if self.programs else "  map     - (retrieve)",
+        ]
+        return "\n".join(lines)
+
+    # ------------------------------------------------------------------
+    # planner-facing helpers
+    # ------------------------------------------------------------------
+
+    def resolved_columns(self) -> Tuple[Tuple[str, str], ...]:
+        if self.columns:
+            return self.columns
+        return ((self.session.payload_family, self.session.payload_qualifier),)
+
+    def compute_column(self) -> Tuple[str, str]:
+        cols = self.resolved_columns()
+        if len(cols) != 1:
+            raise ValueError(
+                f"compute plans fold over exactly one column, got {cols}")
+        return cols[0]
+
+    def plan_signature(self, eta: int) -> Tuple:
+        """The compiled-plan cache key: (programs, pruned-region signature,
+        mesh shape, η, epoch) plus projection/range/predicate identity.
+
+        The predicate contributes ``id()``; the cache entry pins the object
+        so the id cannot be recycled while the entry lives (the session
+        verifies identity on every hit).
+        """
+        pruned = self.session.table.regions.prune(self.start, self.stop)
+        return (
+            tuple(p.cache_key() for p in self.programs),
+            tuple(r.rid for r in pruned),
+            self.session._mesh_shape(),
+            int(eta),
+            self.session.epoch,
+            self.resolved_columns(),
+            (self.start, self.stop),
+            None if self.predicate is None
+            else (id(self.predicate), self.index_qualifiers),
+        )

@@ -46,6 +46,11 @@ class QueryStats:
     # GridSession pushdown path (run_where), where it must cover ONLY the
     # selected rows — the quantity the §2.3 scheme exists to minimize.
     payload_bytes_moved: int = 0
+    # region pruning efficacy: how many regions the scan range resolved to
+    # vs how many the rowkey-range pushdown excluded outright (their device
+    # blocks are never gathered).  scanned + pruned == total regions.
+    regions_scanned: int = 0
+    regions_pruned: int = 0
 
     @property
     def total_bytes_scanned(self) -> int:
@@ -57,10 +62,18 @@ def _scan_range(
     start: Optional[bytes],
     stop: Optional[bytes],
 ) -> np.ndarray:
-    keys = table.keys
-    lo = 0 if start is None else int(np.searchsorted(keys, start, side="left"))
-    hi = len(keys) if stop is None else int(np.searchsorted(keys, stop, side="left"))
+    lo, hi = table.row_range(start, stop)
     return np.arange(lo, hi, dtype=np.int64)
+
+
+def _region_stats(
+    table: TensorTable,
+    start: Optional[bytes],
+    stop: Optional[bytes],
+) -> Tuple[int, int]:
+    """``(regions_scanned, regions_pruned)`` for a scan range."""
+    scanned = len(table.regions.prune(start, stop))
+    return scanned, len(table.regions) - scanned
 
 
 def indexed_query(
@@ -87,11 +100,14 @@ def indexed_query(
         raise ValueError("predicate must return one bool per scanned row")
     mask = np.zeros(table.num_rows, dtype=bool)
     mask[rows[sel]] = True
+    scanned, pruned = _region_stats(table, start, stop)
     return mask, QueryStats(
         rows_scanned=len(rows),
         index_bytes_scanned=idx_bytes,
         payload_bytes_traversed=0,
         rows_selected=int(sel.sum()),
+        regions_scanned=scanned,
+        regions_pruned=pruned,
     )
 
 
@@ -117,11 +133,14 @@ def naive_query(
     mask[rows[sel]] = True
     # logical payload bytes of every row in the scan range — the traversal cost
     payload = int(table.row_bytes()[rows].sum())
+    scanned, pruned = _region_stats(table, start, stop)
     return mask, QueryStats(
         rows_scanned=len(rows),
         index_bytes_scanned=idx_bytes,
         payload_bytes_traversed=payload,
         rows_selected=int(sel.sum()),
+        regions_scanned=scanned,
+        regions_pruned=pruned,
     )
 
 

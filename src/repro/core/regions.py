@@ -141,6 +141,9 @@ class RegionSet:
         self.policy = policy
         self._regions: List[Region] = [Region(0, KEY_MIN, KEY_MAX)]
         self._next_rid = 1
+        # sorted region start keys, maintained in lockstep with _regions so
+        # every containment/overlap question is a bisect, never a rebuild
+        self._starts: List[bytes] = [KEY_MIN]
 
     # -- accessors ---------------------------------------------------------
 
@@ -158,17 +161,38 @@ class RegionSet:
         """Region ids whose key ranges contain any of ``keys``.
 
         The dirty-region primitive: a mutation touching ``keys`` invalidates
-        exactly these regions' placements, nothing else.
+        exactly these regions' placements, nothing else.  O(m log n) — one
+        bisect over the maintained start-key list per key, no linear walk.
         """
-        starts = [r.start for r in self._regions]
+        starts = self._starts
         return {
             self._regions[bisect.bisect_right(starts, k) - 1].rid
             for k in keys
         }
 
     def region_for(self, key: bytes) -> Region:
-        starts = [r.start for r in self._regions]
-        return self._regions[bisect.bisect_right(starts, key) - 1]
+        return self._regions[bisect.bisect_right(self._starts, key) - 1]
+
+    def prune(self, start: Optional[bytes] = None,
+              stop: Optional[bytes] = None) -> Tuple[Region, ...]:
+        """Regions overlapping the half-open scan range ``[start, stop)``.
+
+        The scan-pruning primitive (§2.3's rowkey scheme): a rowkey
+        prefix/range predicate resolves to the regions it can possibly touch,
+        so non-matching regions are never scanned and their device blocks
+        never gathered.  ``None`` bounds mean the open keyspace ends.  Two
+        bisects over the start-key list — O(log n) plus the output size.
+        """
+        if stop is not None and start is not None and start >= stop:
+            return ()
+        lo = 0
+        if start is not None and start > KEY_MIN:
+            lo = bisect.bisect_right(self._starts, start) - 1
+        hi = len(self._regions)
+        if stop is not None:
+            # regions with r.start >= stop cannot overlap [start, stop)
+            hi = bisect.bisect_left(self._starts, stop)
+        return tuple(self._regions[lo:hi])
 
     # -- mutation ----------------------------------------------------------
 
@@ -192,6 +216,7 @@ class RegionSet:
         regions.append(Region(self._next_rid, prev, KEY_MAX))
         self._next_rid += 1
         self._regions = regions
+        self._starts = [r.start for r in regions]
 
     def maybe_split(self, sorted_keys: np.ndarray, row_bytes: np.ndarray
                     ) -> List[Tuple[Region, Region, Region]]:
@@ -211,6 +236,7 @@ class RegionSet:
                     right = Region(self._next_rid + 1, key, region.stop)
                     self._next_rid += 2
                     self._regions[i:i + 1] = [left, right]
+                    self._starts[i:i + 1] = [left.start, right.start]
                     events.append((region, left, right))
                     continue  # re-examine children at the same index
             i += 1
@@ -228,3 +254,5 @@ class RegionSet:
             assert a.stop is not None
         rids = [r.rid for r in rs]
         assert len(set(rids)) == len(rids), "region ids must be unique"
+        assert self._starts == [r.start for r in rs], \
+            "start-key index out of sync with regions"

@@ -128,6 +128,17 @@ class GridScheduler:
 
     # ------------------------------------------------------------------
 
+    def effective_nodes(self) -> List[NodeSpec]:
+        """Node specs with MIPS refreshed from the scheduler's EWMA powers.
+
+        The hand-off point for callers owning the rebalance decision: pass
+        the result to ``GridSession.rebalance(nodes=...)`` to apply this
+        scheduler's view of node speeds with the session's epoch machinery
+        intact.  (``rebalance(auto=True)`` instead folds the session's own
+        raw round-time history via :func:`powers_from_observations` —
+        unbiased by quota estimates, per the paper's offline probe.)"""
+        return self._current_nodes()
+
     def _current_nodes(self) -> List[NodeSpec]:
         """Node specs with MIPS refreshed from observed effective powers."""
         return [

@@ -144,6 +144,40 @@ class MomentsProgram(MapReduceProgram):
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedProgram(MapReduceProgram):
+    """The monoid product of N statistic programs — one pass, N answers.
+
+    ``GridQuery`` fuses every ``.map(program)`` on a plan into one of these,
+    so mean+variance+histogram share a single gather and a single
+    ``shard_map`` fold: partials are tuples, merged component-wise.  The
+    fused program is additive (single-``psum`` reduce) only when every
+    component is; one non-additive member moves the whole tuple onto the
+    all-gather path, which is still one executable and one data pass.
+    """
+
+    programs: Tuple[MapReduceProgram, ...] = ()
+
+    def __post_init__(self):
+        if not self.programs:
+            raise ValueError("FusedProgram needs at least one program")
+        object.__setattr__(self, "programs", tuple(self.programs))
+        object.__setattr__(
+            self, "additive", all(p.additive for p in self.programs))
+
+    def zero(self, row_shape, dtype):
+        return tuple(p.zero(row_shape, dtype) for p in self.programs)
+
+    def map_chunk(self, rows, valid):
+        return tuple(p.map_chunk(rows, valid) for p in self.programs)
+
+    def merge(self, a, b):
+        return tuple(p.merge(x, y) for p, x, y in zip(self.programs, a, b))
+
+    def finalize(self, partial):
+        return tuple(p.finalize(x) for p, x in zip(self.programs, partial))
+
+
+@dataclasses.dataclass(frozen=True)
 class HistogramProgram(MapReduceProgram):
     """Global intensity histogram with fixed bin edges (additive)."""
 

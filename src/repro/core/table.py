@@ -165,6 +165,22 @@ class TensorTable:
     # selectors
     # ------------------------------------------------------------------
 
+    def row_range(self, start: Optional[RowKey] = None,
+                  stop: Optional[RowKey] = None) -> Tuple[int, int]:
+        """Positional bounds ``(lo, hi)`` of the rowkey range ``[start, stop)``.
+
+        The scan primitive every range consumer (selectors, queries, the
+        GridQuery planner) shares: two binary searches over the sorted keys,
+        never a linear walk.  ``hi`` is clamped so ``hi >= lo`` always.
+        """
+        lo = 0
+        if start is not None:
+            lo = int(np.searchsorted(self._keys, _as_key(start), side="left"))
+        hi = len(self._keys)
+        if stop is not None:
+            hi = int(np.searchsorted(self._keys, _as_key(stop), side="left"))
+        return lo, max(lo, hi)
+
     def existing_mask(self, rowkeys: Sequence[RowKey]) -> np.ndarray:
         """Bool per input key: is it already stored?  (The duplicate rule
         ``upload`` applies — shared so callers never re-derive it.)"""
@@ -196,13 +212,8 @@ class TensorTable:
                 return np.empty((0,), dtype=np.int64)
             idx = np.array([pos], dtype=np.int64)
         else:
-            lo = 0
-            hi = len(self._keys)
-            if start is not None:
-                lo = int(np.searchsorted(self._keys, _as_key(start), side="left"))
-            if stop is not None:
-                hi = int(np.searchsorted(self._keys, _as_key(stop), side="left"))
-            idx = np.arange(lo, max(lo, hi), dtype=np.int64)
+            lo, hi = self.row_range(start, stop)
+            idx = np.arange(lo, hi, dtype=np.int64)
         if skip:
             skip_keys = np.array(sorted({_as_key(k) for k in skip}), dtype=self._keys.dtype)
             mask = ~np.isin(self._keys[idx], skip_keys)

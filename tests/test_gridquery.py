@@ -1,0 +1,466 @@
+"""GridQuery job plans: region pruning, projection pushdown, program fusion,
+plan caching, and the auto-rebalance observation loop.
+
+Covers the PR-2 acceptance criteria directly: a prefix scan selecting 1 of k
+regions gathers payload for — and compiles a plan over — only the pruned
+region set (``QueryStats.regions_pruned`` / ``payload_bytes_moved``), and a
+fused mean+variance job costs exactly one ``engine.compile_count`` increment
+and one payload gather pass.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.grid import GridSession
+from repro.core.plan import prefix_range
+from repro.core.query import age_sex_predicate, indexed_query
+from repro.core.regions import (
+    KEY_MIN,
+    ConstantSizeSplitPolicy,
+    HierarchicalSplitPolicy,
+    RegionSet,
+)
+from repro.core.stats import (
+    FusedProgram,
+    HistogramProgram,
+    MeanProgram,
+    VarianceProgram,
+)
+from repro.core.table import ColumnSpec, make_mip_table
+
+PAYLOAD = (3, 4)
+ROW_NBYTES = int(np.prod(PAYLOAD)) * 4  # float32
+
+
+def make_table(groups=("a", "b", "c", "d"), per=12, presplit=True, seed=0,
+               split_bytes=10**18):
+    """``len(groups)`` rowkey prefixes; presplit -> one region per prefix."""
+    rng = np.random.default_rng(seed)
+    t = make_mip_table(
+        payload_shape=PAYLOAD,
+        extra_index_columns=[ColumnSpec("age", (), np.float32),
+                             ColumnSpec("sex", (), np.int8)],
+        split_policy=HierarchicalSplitPolicy(max_region_bytes=split_bytes),
+        presplit_keys=list(groups)[1:] if presplit else None,
+    )
+    keys = [f"{g}{i:04d}" for g in groups for i in range(per)]
+    n = len(keys)
+    t.upload(keys, {
+        "img": {"data": rng.normal(size=(n,) + PAYLOAD).astype(np.float32)},
+        "idx": {"size": rng.integers(6_000_000, 20_000_001, n),
+                "age": rng.uniform(4, 80, n).astype(np.float32),
+                "sex": rng.integers(0, 2, n).astype(np.int8)}})
+    return t
+
+
+# ----------------------------------------------------------------------
+# prefix_range / RegionSet.prune primitives
+# ----------------------------------------------------------------------
+
+class TestPrefixRange:
+    def test_plain_prefix(self):
+        assert prefix_range(b"img0") == (b"img0", b"img1")
+
+    def test_trailing_ff_rolls_over(self):
+        assert prefix_range(b"a\xff") == (b"a\xff", b"b")
+        assert prefix_range(b"a\xff\xff") == (b"a\xff\xff", b"b")
+
+    def test_unbounded_prefixes(self):
+        assert prefix_range(b"") == (b"", None)
+        assert prefix_range(b"\xff") == (b"\xff", None)
+        assert prefix_range(b"\xff\xff") == (b"\xff\xff", None)
+
+    def test_str_prefix(self):
+        assert prefix_range("ab") == (b"ab", b"ac")
+
+
+class TestRegionPrune:
+    def make(self, splits):
+        rs = RegionSet(ConstantSizeSplitPolicy(1 << 62))
+        rs.pre_split(splits)
+        rs.check_invariants()
+        return rs
+
+    def test_prune_matches_interval_overlap(self):
+        rs = self.make([b"b", b"c", b"d"])
+        assert [r.start for r in rs.prune(b"b", b"c")] == [b"b"]
+        assert [r.start for r in rs.prune(b"b0", b"b9")] == [b"b"]
+        # stop at a region boundary excludes the boundary region
+        assert [r.start for r in rs.prune(KEY_MIN, b"b")] == [KEY_MIN]
+        # straddles two regions
+        assert [r.start for r in rs.prune(b"bz", b"cz")] == [b"b", b"c"]
+
+    def test_open_ends_cover_all(self):
+        rs = self.make([b"b", b"c"])
+        assert rs.prune(None, None) == rs.regions
+        assert rs.prune(b"c", None) == rs.regions[2:]
+        assert rs.prune(None, b"c") == rs.regions[:2]
+
+    def test_empty_and_inverted_ranges(self):
+        rs = self.make([b"b", b"c"])
+        assert rs.prune(b"x", b"b") == ()
+        assert rs.prune(b"b", b"b") == ()
+
+    def test_prune_consistent_with_regions_containing(self):
+        rs = self.make([b"b", b"c", b"d", b"e"])
+        for key in [b"a", b"b", b"b5", b"dzz", b"zz"]:
+            pruned = rs.prune(key, key + b"\x00")
+            assert {r.rid for r in pruned} == rs.regions_containing([key])
+
+    def test_containing_after_organic_splits(self):
+        rs = RegionSet(ConstantSizeSplitPolicy(1))
+        keys = np.array([f"k{i:03d}".encode() for i in range(32)], dtype="S8")
+        rs.maybe_split(keys, np.full(32, 10, dtype=np.int64))
+        rs.check_invariants()
+        assert len(rs) > 1
+        for k in keys:
+            (rid,) = rs.regions_containing([bytes(k)])
+            assert rs.region_for(bytes(k)).rid == rid
+
+
+# ----------------------------------------------------------------------
+# the acceptance criteria
+# ----------------------------------------------------------------------
+
+class TestPruningAcceptance:
+    def test_prefix_scan_gathers_only_pruned_region_set(self):
+        t = make_table(per=10)
+        s = GridSession(t, default_eta=4)
+        res, rep = s.scan(prefix="b").map(MeanProgram()).collect()
+
+        q = rep.query
+        assert q.regions_scanned == 1
+        assert q.regions_pruned == len(t.regions) - 1 == 3
+        # payload moved covers exactly the pruned region's rows
+        assert q.rows_selected == 10
+        assert q.payload_bytes_moved == 10 * ROW_NBYTES
+        assert s.metrics.pushdown_rows_gathered == 10
+        # and the fold read only those rows
+        assert rep.mapreduce.local_rows_read == 10
+        np.testing.assert_allclose(
+            np.asarray(res), t.column("img", "data")[10:20].mean(0),
+            atol=1e-5)
+
+    def test_fused_mean_variance_one_compile_one_gather(self):
+        t = make_table(per=10)
+        s = GridSession(t, default_eta=4)
+        c0, g0 = s.engine.compile_count, s.metrics.payload_gathers
+        (mean, var), rep = (s.scan().map(MeanProgram())
+                            .map(VarianceProgram()).reduce().collect())
+        assert s.engine.compile_count - c0 == 1
+        assert s.metrics.payload_gathers - g0 == 1
+        data = t.column("img", "data")
+        np.testing.assert_allclose(np.asarray(mean), data.mean(0), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(var["var"]), data.var(0),
+                                   atol=1e-4)
+        assert rep.query.regions_pruned == 0
+
+    def test_fused_three_statistics_single_pass(self):
+        t = make_table(per=8)
+        s = GridSession(t, default_eta=4)
+        c0 = s.engine.compile_count
+        (mean, var, hist), _ = (
+            s.scan(prefix="c")
+            .map(MeanProgram())
+            .map(VarianceProgram())
+            .map(HistogramProgram(lo=-4.0, hi=4.0, bins=16))
+            .collect())
+        assert s.engine.compile_count - c0 == 1
+        assert s.metrics.programs_fused == 3
+        sub = t.column("img", "data")[16:24]
+        np.testing.assert_allclose(np.asarray(mean), sub.mean(0), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(var["var"]), sub.var(0),
+                                   atol=1e-4)
+        ref, _ = np.histogram(sub, bins=16, range=(-4.0, 4.0))
+        np.testing.assert_allclose(np.asarray(hist)[1:-1],
+                                   ref.astype(np.float32)[1:-1], atol=0.5)
+
+
+class TestFusedProgram:
+    def test_additivity_follows_members(self):
+        assert FusedProgram((MeanProgram(), HistogramProgram())).additive
+        assert not FusedProgram((MeanProgram(), VarianceProgram())).additive
+
+    def test_needs_programs(self):
+        with pytest.raises(ValueError):
+            FusedProgram(())
+
+
+# ----------------------------------------------------------------------
+# edge cases: split-straddling prefixes, empty scans
+# ----------------------------------------------------------------------
+
+class TestScanEdges:
+    def test_prefix_straddling_region_split_boundary(self):
+        # presplit INSIDE the "b" prefix: b-rows live in two regions
+        t = make_table(presplit=False)
+        t2 = make_mip_table(
+            payload_shape=PAYLOAD,
+            extra_index_columns=[ColumnSpec("age", (), np.float32),
+                                 ColumnSpec("sex", (), np.int8)],
+            presplit_keys=["b0006", "c"])
+        keys = t.keys
+        t2.upload([k.decode() for k in keys],
+                  {"img": {"data": t.column("img", "data")},
+                   "idx": {"size": t.column("idx", "size"),
+                           "age": t.column("idx", "age"),
+                           "sex": t.column("idx", "sex")}})
+        s = GridSession(t2, default_eta=4)
+        res, rep = s.scan(prefix="b").map(MeanProgram()).collect()
+        assert rep.query.regions_scanned == 2     # both halves of the prefix
+        assert rep.query.regions_pruned == 1      # the [c, +inf) region
+        assert rep.query.rows_selected == 12
+        lo, hi = t2.row_range(b"b", b"c")
+        np.testing.assert_allclose(
+            np.asarray(res), t2.column("img", "data")[lo:hi].mean(0),
+            atol=1e-5)
+
+    def test_empty_result_scan_compute_and_retrieve(self):
+        s = GridSession(make_table(per=6), default_eta=4)
+        res, rep = s.scan(prefix="zz").map(MeanProgram()).collect()
+        assert rep.query.rows_selected == 0
+        assert rep.query.payload_bytes_moved == 0
+        assert np.all(np.isfinite(np.asarray(res)))
+        (keys, cols), rep2 = s.scan(prefix="zz").select("img:data").collect()
+        assert len(keys) == 0 and cols["img:data"].shape[0] == 0
+
+    def test_predicate_composes_with_range(self):
+        t = make_table(per=16, seed=3)
+        s = GridSession(t, default_eta=4)
+        pred = age_sex_predicate(20, 40, 1)
+        res, rep = (s.scan(prefix="c").where(pred, ["age", "sex"])
+                    .map(MeanProgram()).collect())
+        mask, _ = indexed_query(t, pred, ["age", "sex"],
+                                start=b"c", stop=b"d")
+        assert rep.query.rows_selected == int(mask.sum())
+        assert rep.query.payload_bytes_moved == int(mask.sum()) * ROW_NBYTES
+        # index scan charged only for the range, not the table
+        per_row = (t.column_spec("idx", "age").row_nbytes
+                   + t.column_spec("idx", "sex").row_nbytes)
+        assert rep.query.index_bytes_scanned == 16 * per_row
+        if mask.any():
+            np.testing.assert_allclose(
+                np.asarray(res), t.column("img", "data")[mask].mean(0),
+                atol=1e-5)
+
+    def test_prefix_exclusive_with_range(self):
+        s = GridSession(make_table(per=4))
+        with pytest.raises(ValueError):
+            s.scan(prefix="b", start="a")
+
+    def test_reduce_requires_map(self):
+        s = GridSession(make_table(per=4))
+        with pytest.raises(ValueError):
+            s.scan().reduce()
+
+    def test_compute_needs_single_column(self):
+        s = GridSession(make_table(per=4))
+        q = s.scan().select("img:data", "idx:age").map(MeanProgram())
+        with pytest.raises(ValueError):
+            q.collect()
+
+
+# ----------------------------------------------------------------------
+# plan cache + laziness
+# ----------------------------------------------------------------------
+
+class TestPlanCache:
+    def test_equivalent_fresh_plan_hits_cache(self):
+        s = GridSession(make_table(per=10), default_eta=4)
+        _, r1 = s.scan(prefix="b").map(MeanProgram()).collect()
+        assert not r1.plan_cache_hit
+        g = s.metrics.payload_gathers
+        _, r2 = s.scan(prefix="b").map(MeanProgram()).collect()
+        assert r2.plan_cache_hit
+        assert s.metrics.payload_gathers == g    # no re-gather
+
+    def test_collect_memoizes_on_plan_object(self):
+        s = GridSession(make_table(per=10), default_eta=4)
+        q = s.scan(prefix="b").map(MeanProgram())
+        res1, _ = q.collect()
+        scans = s.metrics.scans
+        res2, _ = q.collect()
+        assert s.metrics.scans == scans          # executor not re-entered
+        assert res1 is res2
+
+    def test_mutation_invalidates_scan_plans(self):
+        t = make_table(per=10)
+        s = GridSession(t, default_eta=4)
+        q = s.scan(prefix="b").map(MeanProgram())
+        res1, _ = q.collect()
+        # overwrite a b-row: same shapes, new content
+        rng = np.random.default_rng(9)
+        s.upload(["b0001"], {
+            "img": {"data": rng.normal(size=(1,) + PAYLOAD).astype(np.float32)},
+            "idx": {"size": np.array([7_000_000]),
+                    "age": np.array([30.0], np.float32),
+                    "sex": np.array([1], np.int8)}}, on_duplicate="overwrite")
+        res2, r2 = q.collect()
+        assert not r2.plan_cache_hit
+        np.testing.assert_allclose(
+            np.asarray(res2), t.column("img", "data")[10:20].mean(0),
+            atol=1e-5)
+        assert not np.allclose(np.asarray(res1), np.asarray(res2))
+
+    def test_builders_are_pure(self):
+        s = GridSession(make_table(per=4))
+        base = s.scan(prefix="b")
+        q1 = base.map(MeanProgram())
+        q2 = base.map(VarianceProgram())
+        assert base.programs == ()
+        assert len(q1.programs) == 1 and len(q2.programs) == 1
+
+    def test_explain_moves_no_bytes(self):
+        s = GridSession(make_table(per=10), default_eta=4)
+        text = (s.scan(prefix="b").map(MeanProgram())
+                .map(VarianceProgram()).explain())
+        assert "1/4" in text and "3 pruned" in text
+        assert s.metrics.payload_gathers == 0
+        assert s.engine.compile_count == 0
+
+
+# ----------------------------------------------------------------------
+# property: pruned scan == unpruned full-table scan on matching rows
+# ----------------------------------------------------------------------
+
+class TestPrunedEqualsUnpruned:
+    def test_property_pruned_scan_equals_full_scan_filter(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        t = make_table(groups=("a", "b", "c", "d", "e"), per=9, seed=11)
+        s = GridSession(t, default_eta=4)
+        data = t.column("img", "data")
+        keys = t.keys
+
+        @settings(max_examples=25, deadline=None)
+        @given(prefix=st.text(alphabet="abcdef", min_size=0, max_size=3))
+        def check_prefix(prefix):
+            res, rep = (s.scan(prefix=prefix).select("img:data").collect())
+            sel_keys, _ = res
+            lo, hi = prefix_range(prefix)
+            want = [bytes(k) for k in keys
+                    if bytes(k).startswith(lo)]
+            assert [bytes(k) for k in sel_keys] == want
+            # pruned + scanned always tiles the table
+            assert (rep.query.regions_scanned + rep.query.regions_pruned
+                    == len(t.regions))
+            # and the compute path agrees with numpy on the same subset
+            if want:
+                got, _ = s.scan(prefix=prefix).map(MeanProgram()).collect()
+                mask = np.array([bytes(k).startswith(lo) for k in keys])
+                np.testing.assert_allclose(
+                    np.asarray(got), data[mask].mean(0), atol=1e-5)
+
+        check_prefix()
+
+
+# ----------------------------------------------------------------------
+# auto-rebalance wiring
+# ----------------------------------------------------------------------
+
+class TestAutoRebalance:
+    def test_auto_rejects_explicit_nodes(self):
+        from repro.core.balancer import NodeSpec
+        s = GridSession(make_table(per=4))
+        with pytest.raises(ValueError):
+            s.rebalance(auto=True, nodes=[NodeSpec(0)])
+
+    def test_auto_without_observations_is_plain_rebalance(self):
+        s = GridSession(make_table(per=4))
+        assert s.rebalance(auto=True) == []
+
+    def test_observe_round_feeds_scheduler_and_history(self):
+        s = GridSession(make_table(per=4))
+        s.observe_round({0: 2.0})
+        s.observe_round({0: 2.5})
+        assert s._round_history[0] == [2.0, 2.5]
+        assert s.scheduler.round_index == 2
+        assert s.scheduler.makespan_estimate() > 0
+        # the scheduler's own refreshed specs reflect the slow rounds and
+        # are valid input for an explicit rebalance(nodes=...)
+        (spec,) = s.scheduler.effective_nodes()
+        assert spec.node_id == 0 and spec.power < 1.0
+        assert s.rebalance(nodes=s.scheduler.effective_nodes()) == []
+
+    def test_round_history_is_bounded(self):
+        s = GridSession(make_table(per=4))
+        for i in range(GridSession.ROUND_HISTORY_CAP + 40):
+            s.observe_round({0: 1.0 + i})
+        assert len(s._round_history[0]) == GridSession.ROUND_HISTORY_CAP
+        # oldest entries dropped, newest kept
+        assert s._round_history[0][-1] == 1.0 + GridSession.ROUND_HISTORY_CAP + 39
+
+    def test_session_scheduler_cannot_mutate_membership(self):
+        # fail/join would rebind the shared placement behind the session's
+        # epoch machinery; the session-owned scheduler refuses
+        from repro.core.balancer import NodeSpec
+        s = GridSession(make_table(per=4))
+        with pytest.raises(NotImplementedError):
+            s.scheduler.handle_failure([0])
+        with pytest.raises(NotImplementedError):
+            s.scheduler.handle_join([NodeSpec(9)])
+
+    def test_auto_rebalance_deweights_straggler_multinode(self):
+        # needs >1 device to host >1 node; run in a subprocess like
+        # test_multidevice does
+        import os
+        import subprocess
+        import sys
+        import textwrap
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        env["PYTHONPATH"] = os.path.join(repo, "src")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        body = """
+            import numpy as np
+            from repro.core.balancer import NodeSpec
+            from repro.core.grid import GridSession
+            from repro.core.regions import HierarchicalSplitPolicy
+            from repro.core.stats import MeanProgram
+            from repro.core.table import make_mip_table
+
+            rng = np.random.default_rng(0)
+            t = make_mip_table(
+                payload_shape=(2,),
+                extra_index_columns=[],
+                split_policy=HierarchicalSplitPolicy(max_region_bytes=int(60e6)))
+            n = 256
+            t.upload([f"r{i:05d}" for i in range(n)],
+                     {"img": {"data": rng.normal(size=(n, 2)).astype(np.float32)},
+                      "idx": {"size": rng.integers(6e6, 2e7, n)}})
+            s = GridSession(t, nodes=[NodeSpec(i, cores=1, mips=1.0)
+                                      for i in range(4)])
+            before = s.placement.node_bytes()
+            # node 3 is persistently 4x slower
+            for _ in range(6):
+                s.observe_round({0: 1.0, 1: 1.0, 2: 1.0, 3: 4.0})
+            moved = s.rebalance(auto=True, tolerance=0.05)
+            after = s.placement.node_bytes()
+            assert moved, "straggler must force region moves"
+            assert after[3] < before[3], (before, after)
+            assert s.epoch == 1      # moves advanced the mutation epoch
+            res, _ = s.run(MeanProgram())
+            np.testing.assert_allclose(np.asarray(res),
+                                       t.column("img", "data").mean(0),
+                                       atol=1e-5)
+
+            # pruned range scan across the rebalanced multi-node placement
+            res2, rep2 = (s.scan(start="r00100", stop="r00200")
+                          .map(MeanProgram()).collect())
+            q = rep2.query
+            assert q.rows_selected == 100, q
+            assert q.regions_pruned > 0, q
+            assert q.regions_scanned + q.regions_pruned == len(t.regions)
+            np.testing.assert_allclose(
+                np.asarray(res2),
+                t.column("img", "data")[100:200].mean(0), atol=1e-5)
+            print("OK")
+        """
+        proc = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(body)],
+            capture_output=True, text=True, env=env, timeout=600)
+        assert proc.returncode == 0, (
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+        assert "OK" in proc.stdout
