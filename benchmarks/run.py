@@ -1,11 +1,14 @@
 """Benchmark harness — one entry per paper table/figure + roofline/kernels.
 
 Prints ``name,value,derived`` CSV lines per benchmark plus the validation
-summary EXPERIMENTS.md quotes, and writes one JSON artifact per bench so the
-perf trajectory is diffable across PRs.
+summary EXPERIMENTS.md quotes, and writes one JSON artifact per bench
+(``BENCH_<name>.json``) so the perf trajectory is diffable across PRs.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --smoke    # CI-fast subset
+
+``--smoke`` runs every artifact-emitting bench except the table-scheme
+sweep and the roofline — CI uploads the JSON files from each run.
 """
 
 from __future__ import annotations
@@ -13,6 +16,7 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from typing import Callable, Optional
 
 
 def _write_artifact(name: str, payload: dict) -> None:
@@ -22,24 +26,105 @@ def _write_artifact(name: str, payload: dict) -> None:
     print(f"wrote {path}")
 
 
+def _run_bench(
+    name: str,
+    title: str,
+    runner: Callable[[], dict],
+    summarize: Optional[Callable[[dict], str]] = None,
+    payload: Optional[Callable[[dict], dict]] = None,
+) -> None:
+    """Time one bench, print its CSV summary line, write its artifact."""
+    print(f"\n--- {title} ---")
+    t0 = time.perf_counter()
+    b = runner()
+    elapsed_us = round((time.perf_counter() - t0) * 1e6)
+    if summarize is not None:
+        print(f"bench_{name},{elapsed_us},{summarize(b)}")
+    _write_artifact(name, {"elapsed_us": elapsed_us,
+                           **(payload(b) if payload else b)})
+
+
+def run_balancer() -> None:
+    from benchmarks import bench_balancer
+
+    _run_bench(
+        "balancer",
+        "[Fig. 3] Use case 1: heterogeneous cluster / load balancer",
+        bench_balancer.run,
+        lambda b: f"mean_speedup={b['mean_balancer_speedup']:.2f}x;paper=1.5x")
+
+
+def run_chunk_model() -> None:
+    from benchmarks import bench_chunk_model
+
+    _run_bench(
+        "chunk_model",
+        "[Fig. 4] Use case 2: large-dataset average / chunk model",
+        bench_chunk_model.run,
+        lambda b: (f"eta_star={b['eta_star_model']};paper=50-60;"
+                   f"sge_wall_x={b['sge_wall_x']:.1f};paper=5-8;"
+                   f"sge_rt_x={b['sge_rt_x']:.1f};paper=14-20"))
+
+
+def run_table_scheme() -> None:
+    from benchmarks import bench_table_scheme
+
+    _run_bench(
+        "table_scheme",
+        "[Fig. 6/Table 3] Use case 3: table scheme / rapid query",
+        bench_table_scheme.run,
+        lambda b: (f"naive_over_proposed_small="
+                   f"{b['naive_over_proposed_small']:.1f}x;paper=9x;"
+                   f"sge_over_proposed_large="
+                   f"{b['sge_over_proposed_large']:.1f}x;paper=3x"))
+
+
 def run_query_pruning() -> None:
     from benchmarks import bench_query_pruning
 
-    print("\n--- [PR 2] GridQuery region pruning: pruned vs naive scan ---")
-    t0 = time.perf_counter()
-    b = bench_query_pruning.run()
-    elapsed_us = (time.perf_counter() - t0) * 1e6
-    print(f"bench_query_pruning,{elapsed_us:.0f},"
-          f"regions_pruned={b['regions_pruned']}/{b['n_sites']};"
-          f"wall_vs_mask={b['wall_speedup_vs_mask_path']:.1f}x;"
-          f"sim_rt_x={b['sim_rt_speedup']:.1f}x")
-    _write_artifact("query_pruning", {"elapsed_us": round(elapsed_us), **b})
+    _run_bench(
+        "query_pruning",
+        "[PR 2] GridQuery region pruning: pruned vs naive scan",
+        bench_query_pruning.run,
+        lambda b: (f"regions_pruned={b['regions_pruned']}/{b['n_sites']};"
+                   f"wall_vs_mask={b['wall_speedup_vs_mask_path']:.1f}x;"
+                   f"sim_rt_x={b['sim_rt_speedup']:.1f}x"))
+
+
+def run_blockstore() -> None:
+    from benchmarks import bench_blockstore
+
+    def summarize(b):
+        total = b["refresh_blocks_reused"] + b["refresh_blocks_transferred"]
+        return (f"refresh_x={b['refresh_speedup_vs_rebuild']:.1f};"
+                f"reused={b['refresh_blocks_reused']}/{total};"
+                f"overlap_2nd_gathers={b['overlap_second_gathers']}")
+
+    _run_bench(
+        "blockstore",
+        "[PR 3] BlockStore: copy-on-write mutation/overlap reuse",
+        bench_blockstore.run,
+        summarize)
+
+
+def run_kernels() -> None:
+    from benchmarks import bench_kernels
+
+    _run_bench(
+        "kernels",
+        "Kernels (interpret-mode validation)",
+        bench_kernels.run,
+        payload=lambda b: {
+            "rows": [{"name": n, "us": us, "derived": derived}
+                     for n, us, derived in b["rows"]],
+        })
 
 
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--smoke", action="store_true",
-                        help="fast subset for CI: query-pruning bench only")
+                        help="CI-fast subset: every artifact bench except "
+                             "the table-scheme sweep and the roofline")
     args = parser.parse_args()
 
     print("=" * 72)
@@ -47,46 +132,22 @@ def main() -> None:
     print("=" * 72)
 
     if args.smoke:
+        run_balancer()
+        run_chunk_model()
+        run_kernels()
         run_query_pruning()
+        run_blockstore()
         print("\nsmoke benchmarks complete")
         return
 
-    from benchmarks import (
-        bench_balancer,
-        bench_chunk_model,
-        bench_kernels,
-        bench_roofline,
-        bench_table_scheme,
-    )
+    from benchmarks import bench_roofline
 
-    print("\n--- [Fig. 3] Use case 1: heterogeneous cluster / load balancer ---")
-    t0 = time.perf_counter()
-    b1 = bench_balancer.run()
-    print(f"bench_balancer,{(time.perf_counter()-t0)*1e6:.0f},"
-          f"mean_speedup={b1['mean_balancer_speedup']:.2f}x;paper=1.5x")
-
-    print("\n--- [Fig. 4] Use case 2: large-dataset average / chunk model ---")
-    t0 = time.perf_counter()
-    b2 = bench_chunk_model.run()
-    print(f"bench_chunk_model,{(time.perf_counter()-t0)*1e6:.0f},"
-          f"eta_star={b2['eta_star_model']};paper=50-60;"
-          f"sge_wall_x={b2['sge_wall_x']:.1f};paper=5-8;"
-          f"sge_rt_x={b2['sge_rt_x']:.1f};paper=14-20")
-
-    print("\n--- [Fig. 6/Table 3] Use case 3: table scheme / rapid query ---")
-    t0 = time.perf_counter()
-    b3 = bench_table_scheme.run()
-    elapsed_us = (time.perf_counter() - t0) * 1e6
-    print(f"bench_table_scheme,{elapsed_us:.0f},"
-          f"naive_over_proposed_small={b3['naive_over_proposed_small']:.1f}x;"
-          f"paper=9x;sge_over_proposed_large="
-          f"{b3['sge_over_proposed_large']:.1f}x;paper=3x")
-    _write_artifact("table_scheme", {"elapsed_us": round(elapsed_us), **b3})
-
+    run_balancer()
+    run_chunk_model()
+    run_table_scheme()
     run_query_pruning()
-
-    print("\n--- Kernels (interpret-mode validation) ---")
-    bench_kernels.run()
+    run_blockstore()
+    run_kernels()
 
     print("\n--- Roofline (single-pod dry-run artifacts) ---")
     bench_roofline.run()

@@ -17,6 +17,8 @@ The subpackage mirrors HadoopBase-MIP's backend (Bao et al., 2017):
   reduce job plans with region pruning, projection pushdown, program fusion.
 - :mod:`repro.core.simulator`   — discrete-event cluster simulator (Hadoop/SGE).
 - :mod:`repro.core.scheduler`   — grid scheduler: rounds, stragglers, failures.
+- :mod:`repro.core.blockstore`  — :class:`BlockStore`, content-addressed
+  copy-on-write per-region device blocks shared across epochs and plans.
 - :mod:`repro.core.grid`        — :class:`GridSession`, the five-verb facade
   (upload / retrieve / remove / rebalance / run) with mutation epochs,
   incremental placement, and a compiled-plan cache.
@@ -47,6 +49,7 @@ from repro.core.chunk_model import (
 )
 from repro.core.mapreduce import MapReduceEngine, MapReduceProgram
 from repro.core.stats import (
+    CountProgram,
     MeanProgram,
     VarianceProgram,
     MomentsProgram,
@@ -55,6 +58,7 @@ from repro.core.stats import (
 )
 from repro.core.query import indexed_query, naive_query, QueryStats
 from repro.core.plan import GridQuery, prefix_range
+from repro.core.blockstore import BlockStore, DeviceBlock, LRUCache
 from repro.core.grid import GridSession, RunReport, SessionMetrics
 
 __all__ = [
@@ -67,8 +71,9 @@ __all__ = [
     "Placement",
     "ChunkModelParams", "ChunkModel", "PAPER_PARAMS", "TPU_V5E_PARAMS",
     "MapReduceEngine", "MapReduceProgram",
-    "MeanProgram", "VarianceProgram", "MomentsProgram", "HistogramProgram",
-    "FusedProgram",
+    "CountProgram", "MeanProgram", "VarianceProgram", "MomentsProgram",
+    "HistogramProgram", "FusedProgram",
     "indexed_query", "naive_query", "QueryStats",
     "GridQuery", "prefix_range",
+    "BlockStore", "DeviceBlock", "LRUCache",
 ]

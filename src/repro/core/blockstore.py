@@ -1,0 +1,309 @@
+"""BlockStore — content-addressed, copy-on-write device blocks per region.
+
+The paper's core claim is data *colocation*: computation moves to where the
+image blocks already live, so mutations and repeated queries must not re-ship
+or re-pad data that did not change.  Before this module, the session's caches
+worked at two coarser granularities and paid for it twice:
+
+- whole-table layouts were re-``device_put`` monolithically after every
+  mutation (clean devices' payload re-crossed the host↔device boundary), and
+- pruned-scan plans each gathered their own private copy of the selected
+  regions, so two overlapping scans shipped the shared regions twice.
+
+The missing abstraction is a **block**: one region's rows of one column,
+materialized once on the device that owns the region.  Blocks are
+
+- **content-addressed** — keyed by ``(region signature, column, version)``
+  where the *version* is the mutation epoch that last touched the region
+  (its epoch-lineage).  A key never maps to two different payloads;
+- **copy-on-write** — a mutation never edits a block in place.  It bumps the
+  touched regions' versions (:meth:`BlockStore.touch`), so the next request
+  under the new key gathers a fresh block while live consumers (cached scan
+  plans, assembled layouts) keep their references to the old object;
+- **shared** — every consumer (whole-table layouts across epochs, pruned
+  scans across overlapping plans) asks the store first, so a block crosses
+  the host→device boundary once per (content, owner device), not once per
+  plan or per epoch.
+
+The store is storage + versioning only: *gathering* a block from the table
+and choosing its owner device stay with :class:`~repro.core.grid.GridSession`,
+which owns placement.  Capacity is bounded by an :class:`LRUCache`; an
+evicted block is simply re-gathered on next use (a regression test asserts
+re-materialization is loss-free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.core.regions import Region
+
+#: (region signature, family, qualifier, version) — the content address.
+BlockKey = Tuple[Tuple[int, bytes, Optional[bytes]], str, str, int]
+
+
+class LRUCache:
+    """A small bounded mapping with least-recently-used eviction.
+
+    Shared by every cache this backend keeps per session — device blocks,
+    bound scan plans, compiled executables — so long-lived mutating sessions
+    stay memory-bounded.  ``get`` refreshes recency; ``put`` evicts the
+    coldest entries beyond ``cap`` and reports them to ``on_evict`` (used to
+    count evictions and, for blocks, to observe re-materialization in tests).
+    """
+
+    def __init__(self, cap: int,
+                 on_evict: Optional[Callable[[Any, Any], None]] = None):
+        if cap <= 0:
+            raise ValueError(f"LRU cap must be positive, got {cap}")
+        self.cap = int(cap)
+        self._d: "OrderedDict[Any, Any]" = OrderedDict()
+        self._on_evict = on_evict
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def get(self, key, default=None):
+        if key not in self._d:
+            return default
+        self._d.move_to_end(key)
+        return self._d[key]
+
+    def peek(self, key, default=None):
+        """Read without refreshing recency (diagnostics / identity tests)."""
+        return self._d.get(key, default)
+
+    def put(self, key, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.cap:
+            k, v = self._d.popitem(last=False)
+            self.evictions += 1
+            if self._on_evict is not None:
+                self._on_evict(k, v)
+
+    def pop(self, key, default=None):
+        return self._d.pop(key, default)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def keys(self):
+        return self._d.keys()
+
+    def values(self):
+        return self._d.values()
+
+    def items(self):
+        return self._d.items()
+
+
+@dataclasses.dataclass
+class DeviceBlock:
+    """One region's rows of one column, resident on the owning device.
+
+    ``host`` is a private copy of the region's column rows (positions inside
+    the table may shift under unrelated mutations; content cannot — any
+    mutation to *this* region bumps its version and a new block is born).
+    ``device`` is the committed on-device copy (``None`` while host-only,
+    e.g. on meshes where per-shard placement is unavailable);
+    ``device_index`` records which mesh shard it was committed to, so a
+    rebalance that moves the region re-ships the block without re-reading
+    the table.
+    """
+
+    rid: int
+    family: str
+    qualifier: str
+    version: int
+    rows: int
+    nbytes: int
+    host: np.ndarray
+    device: Any = None             # jax.Array committed to the owner shard
+    device_index: Optional[int] = None
+
+
+@dataclasses.dataclass
+class BlockStoreStats:
+    """Cumulative store counters (session lifetime).  Evictions are not
+    duplicated here — the LRU already counts them; read
+    :attr:`BlockStore.evictions`."""
+
+    gathers: int = 0        # host payloads read from the table (store misses)
+    transfers: int = 0      # host→device block transfers (device_put calls)
+    hits: int = 0           # requests served by a resident current block
+    touches: int = 0        # region versions bumped by mutations
+
+
+class BlockStore:
+    """Versioned LRU of :class:`DeviceBlock`, the substrate under layouts.
+
+    One instance per :class:`~repro.core.grid.GridSession`.  The session
+    funnels every block request through :meth:`fetch`, which classifies the
+    outcome for the ``QueryStats`` oracles:
+
+    - *reused*      — current version resident on the current owner device;
+    - *transferred* — host payload was shipped to a device (either because
+      the block was freshly gathered, or because a rebalance moved the
+      region so the cached host copy re-commits to its new owner);
+    - *gathered*    — the host payload itself had to be (re-)read from the
+      table (a store miss for this content version).
+
+    Every fetched block satisfies ``reused or transferred`` — which is the
+    testable invariant ``blocks_reused + blocks_transferred == blocks_total``
+    carried on ``QueryStats``.
+    """
+
+    def __init__(self, cap: int = 256):
+        self.stats = BlockStoreStats()
+        self._blocks: LRUCache = LRUCache(cap)
+        # region id -> mutation epoch that last changed its content
+        self._versions: Dict[int, int] = {}
+
+    @property
+    def evictions(self) -> int:
+        """Blocks dropped by the LRU cap (counted once, by the LRU)."""
+        return self._blocks.evictions
+
+    # ------------------------------------------------------------------
+    # epoch lineage
+    # ------------------------------------------------------------------
+
+    def version_of(self, rid: int) -> int:
+        """The region's content version: the epoch of its last mutation
+        (0 for regions never touched since the session opened)."""
+        return self._versions.get(rid, 0)
+
+    def touch(self, rids: Iterable[int], epoch: int) -> None:
+        """Copy-on-write bump: mutated regions move to version ``epoch``.
+
+        Superseded cache entries are dropped eagerly (they can never hit
+        again); block objects stay alive wherever consumers still hold them.
+        """
+        touched = {int(rid) for rid in rids}
+        for rid in touched:
+            self._versions[rid] = int(epoch)
+            self.stats.touches += 1
+        doomed = [k for k in self._blocks.keys()
+                  if k[0][0] in touched and k[3] != self._versions[k[0][0]]]
+        for k in doomed:
+            self._blocks.pop(k)
+
+    def drop_regions(self, rids: Iterable[int]) -> None:
+        """Forget regions that no longer exist (split parents): their rids
+        never reappear in the region set, so their blocks could otherwise
+        pin host+device payload until cap pressure that may never come."""
+        doomed_rids = {int(rid) for rid in rids}
+        if not doomed_rids:
+            return
+        for k in [k for k in self._blocks.keys() if k[0][0] in doomed_rids]:
+            self._blocks.pop(k)
+        for rid in doomed_rids:
+            self._versions.pop(rid, None)
+
+    def lineage(self, regions: Iterable[Region]) -> Tuple[Tuple[int, int], ...]:
+        """``((rid, version), ...)`` — the epoch-lineage signature of a
+        region set.  Two plans over the same regions at the same versions may
+        share everything; any difference forces a re-bind."""
+        return tuple((r.rid, self.version_of(r.rid)) for r in regions)
+
+    # ------------------------------------------------------------------
+    # block access
+    # ------------------------------------------------------------------
+
+    def key_of(self, region: Region, family: str, qualifier: str) -> BlockKey:
+        return (region.signature, family, qualifier,
+                self.version_of(region.rid))
+
+    def peek(self, region: Region, family: str,
+             qualifier: str) -> Optional[DeviceBlock]:
+        """Current-version block without touching recency (identity tests)."""
+        return self._blocks.peek(self.key_of(region, family, qualifier))
+
+    def fetch(
+        self,
+        region: Region,
+        family: str,
+        qualifier: str,
+        owner_index: Optional[int],
+        gather_host: Callable[[], np.ndarray],
+        to_device: Optional[Callable[[np.ndarray, Optional[int]], Any]],
+    ) -> Tuple[DeviceBlock, bool, bool]:
+        """Return ``(block, reused, gathered)`` for the current version.
+
+        ``gather_host`` reads the region's column rows from the table (called
+        only on a content miss).  ``to_device`` commits a host payload to the
+        shard ``owner_index`` (``None`` disables device residency — the
+        host-assembly fallback for meshes without per-shard placement).
+        ``reused`` means no host→device transfer happened; ``gathered`` means
+        the table was re-read.  ``not reused`` implies a transfer, so every
+        fetch is exactly one of reused / transferred.
+        """
+        key = self.key_of(region, family, qualifier)
+        blk = self._blocks.get(key)
+        gathered = False
+        if blk is None:
+            host = np.ascontiguousarray(gather_host())
+            host.flags.writeable = False
+            blk = DeviceBlock(
+                rid=region.rid, family=family, qualifier=qualifier,
+                version=key[3], rows=int(host.shape[0]),
+                nbytes=int(host.nbytes), host=host,
+            )
+            gathered = True
+            self.stats.gathers += 1
+        if to_device is None:
+            # host-only fallback: every layout build re-ships the whole
+            # assembled array, so no block is ever device-"reused" — a
+            # content hit only avoids the table re-read.  Classifying each
+            # fetch as transferred keeps payload_bytes_transferred honest
+            # about what actually crosses host→device on this path.
+            if gathered:
+                self._blocks.put(key, blk)
+            else:
+                self.stats.hits += 1
+            self.stats.transfers += 1
+            return blk, False, gathered
+
+        if blk.device is not None and blk.device_index == owner_index:
+            self.stats.hits += 1
+            return blk, True, False
+        # fresh gather, or a rebalance moved the region: (re-)commit the
+        # host copy to its current owner.  COW: a re-homed cached block is
+        # replaced, not mutated — older consumers keep the old object.
+        if blk.device is not None:
+            blk = dataclasses.replace(blk)
+        blk.device = to_device(blk.host, owner_index)
+        blk.device_index = owner_index
+        self.stats.transfers += 1
+        self._blocks.put(key, blk)
+        return blk, False, gathered
+
+    # ------------------------------------------------------------------
+    # diagnostics
+    # ------------------------------------------------------------------
+
+    @property
+    def cap(self) -> int:
+        return self._blocks.cap
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    def resident_nbytes(self) -> int:
+        return sum(b.nbytes for b in self._blocks.values())
+
+    def describe(self) -> str:
+        s = self.stats
+        return (f"BlockStore({len(self)}/{self.cap} blocks, "
+                f"{self.resident_nbytes()} bytes; {s.hits} hits, "
+                f"{s.gathers} gathers, {s.transfers} transfers, "
+                f"{self.evictions} evictions)")

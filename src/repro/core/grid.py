@@ -5,8 +5,8 @@ Remove, a heterogeneity-aware Load balancer, and MapReduce templates over
 colocated storage.  The repo implements each piece as a standalone module
 (:mod:`table`, :mod:`regions`, :mod:`balancer`, :mod:`placement`,
 :mod:`mapreduce`, :mod:`query`); ``GridSession`` owns the whole
-table → regions → balancer → placement → mapreduce → query lifecycle and
-exposes the five verbs:
+table → regions → blockstore → balancer → placement → mapreduce → query
+lifecycle and exposes the five verbs:
 
 - :meth:`upload`    — batch insert with split handling and incremental
   placement (split children inherit their parent's node, HBase-style);
@@ -23,28 +23,39 @@ exposes the five verbs:
 - :meth:`run` / :meth:`run_where` — thin wrappers over :meth:`scan` for the
   full table and the predicate-pushdown subset.
 
-Three properties make mutation cheap and repeated compute fast:
+Beneath every executed plan sits the :class:`~repro.core.blockstore
+.BlockStore`: a content-addressed, copy-on-write cache of per-region device
+blocks keyed by ``(region signature, column, epoch-lineage)``.  Four
+properties make mutation cheap and repeated compute fast:
 
-1. **Mutation epochs + dirty regions.**  Every mutation advances an epoch and
-   records which regions (hence which nodes) it touched.  Device layouts are
-   cached per column; a stale layout re-gathers payload *only for the dirty
-   nodes* and reuses every other device's block — an upload into one region
-   costs one device's gather, not a rebuild of the world.
-2. **Compiled-plan cache.**  Plans are keyed by ``(program, mesh shape, η,
-   table epoch)``.  A repeat ``run`` at the same epoch is a pure cache hit;
-   across epochs the bound data refreshes but the jitted ``shard_map``
-   executable (shape-keyed inside :class:`MapReduceEngine`) is reused, so no
-   recompile happens unless the layout's shape actually changed.
-3. **Predicate pushdown.**  ``where`` plans evaluate the predicate on the
-   index family only (§2.3), then gather *just the selected payload rows*
-   per device — locality preserved because index and payload share rowkeys
-   and placement — and report ``payload_bytes_moved`` covering only those
-   rows.  The mask path (materialize everything, fold a subset) is gone.
-4. **Region pruning.**  A rowkey prefix/range scan intersects the
-   :class:`RegionSet` intervals *before* any bytes move (two bisects over
-   region start keys): non-matching regions are never scanned and their
-   device blocks never gathered.  ``QueryStats.regions_scanned`` /
-   ``regions_pruned`` make the efficacy observable.
+1. **Mutation epochs + block lineage.**  Every mutation advances an epoch
+   and bumps *only the touched regions'* block versions.  A layout for epoch
+   N+1 structurally shares every clean region's block with epoch N — no
+   re-pad, no re-``device_put``; an upload into one region re-gathers one
+   region's block and re-assembles one device's shard, not the world.
+2. **Cross-plan block sharing.**  Pruned-scan plans look blocks up in the
+   store before gathering, so two overlapping plans (same region subset,
+   different predicates or ranges) ship the shared regions once.  The
+   ``QueryStats`` oracles ``blocks_reused`` / ``blocks_transferred`` /
+   ``gather_count`` make both reuse paths observable.
+3. **Compiled-plan caches.**  Whole-table plans are keyed by ``(program,
+   mesh shape, η, epoch)``; pruned plans by the block lineage of their
+   region subset, so they *survive* mutations that touch other regions.
+   Either way the jitted ``shard_map`` executable (shape-keyed inside
+   :class:`MapReduceEngine`) is reused unless the layout's shape changed.
+   All three caches (plans, blocks, executables) are LRU-capped so
+   long-lived sessions stay memory-bounded.
+4. **Pushdowns.**  Region pruning (two bisects over region start keys)
+   excludes non-matching regions before any bytes move; ``where`` plans
+   evaluate the predicate on the index family only (§2.3) and the fold
+   reads just the selected slots through a device-side row mask;
+   projection keeps unselected columns out of the layout entirely.
+
+On multi-chip meshes, dirty blocks transfer via per-shard ``device_put`` +
+``jax.make_array_from_single_device_arrays`` — the interconnect never
+carries clean blocks.  Meshes without a one-device-per-node data axis fall
+back to host-side assembly of the whole layout (blocks still dedupe the
+host gathers).
 """
 
 from __future__ import annotations
@@ -57,6 +68,7 @@ from typing import (
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.balancer import (
     NodeSpec,
@@ -64,6 +76,7 @@ from repro.core.balancer import (
     powers_from_observations,
     rebalance as rebalance_allocation,
 )
+from repro.core.blockstore import BlockStore, DeviceBlock, LRUCache
 from repro.core.mapreduce import MapReduceEngine, MapReduceProgram, MapReduceStats
 from repro.core.placement import Placement
 from repro.core.plan import GridQuery, prefix_range
@@ -92,15 +105,17 @@ class SessionMetrics:
     regions_dirtied: int = 0
     plan_hits: int = 0              # run() served from the plan cache
     plan_misses: int = 0
-    layout_full_builds: int = 0     # gather-everything rebuilds
-    layout_refreshes: int = 0       # incremental dirty-node refreshes
-    devices_regathered: int = 0     # device blocks whose payload was re-read
-    devices_reused: int = 0         # device blocks kept across a mutation
-    rows_gathered: int = 0          # payload rows copied into layouts
-    pushdown_rows_gathered: int = 0  # payload rows moved by pruned/where scans
+    layout_full_builds: int = 0     # assemble-every-shard builds
+    layout_refreshes: int = 0       # incremental dirty-shard refreshes
+    devices_regathered: int = 0     # device shards re-assembled from blocks
+    devices_reused: int = 0         # device shards kept across a mutation
+    rows_gathered: int = 0          # payload rows copied into layout blocks
+    pushdown_rows_gathered: int = 0  # payload rows gathered by pruned scans
     scans: int = 0                  # GridQuery plans executed
     payload_gathers: int = 0        # payload gather passes (full, refresh, pruned)
     programs_fused: int = 0         # programs that shared a fused engine pass
+    # (session-lifetime block reuse counters live on BlockStore.stats —
+    # hits/gathers/transfers/evictions — not duplicated here)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,33 +152,80 @@ class _SessionScheduler(GridScheduler):
 
 
 @dataclasses.dataclass
+class _BlockAccount:
+    """Per-execution block accounting, folded into ``QueryStats`` oracles."""
+
+    total: int = 0
+    reused: int = 0
+    transferred: int = 0
+    gathered: int = 0
+    rows_gathered: int = 0
+    bytes_transferred: int = 0
+
+    def add(self, blk: DeviceBlock, reused: bool, gathered: bool) -> None:
+        self.total += 1
+        if reused:
+            self.reused += 1
+        else:
+            self.transferred += 1
+            self.bytes_transferred += blk.nbytes
+        if gathered:
+            self.gathered += 1
+            self.rows_gathered += blk.rows
+
+    @classmethod
+    def all_reused(cls, n: int) -> "_BlockAccount":
+        return cls(total=n, reused=n)
+
+    def apply(self, qstats: QueryStats) -> QueryStats:
+        return dataclasses.replace(
+            qstats, blocks_total=self.total, blocks_reused=self.reused,
+            blocks_transferred=self.transferred, gather_count=self.gathered,
+            payload_bytes_transferred=self.bytes_transferred)
+
+
+@dataclasses.dataclass
 class _ScanPlan:
-    """A bound pruned-scan layout: the gathered device blocks of one
-    ``GridQuery`` plan, reusable until the next mutation epoch.
+    """A bound pruned-scan layout: one ``GridQuery`` plan's device blocks,
+    assembled, reusable until a mutation touches one of its regions.
 
     ``predicate`` pins the predicate object so its ``id()`` (part of the
-    plan signature) cannot be recycled while this entry lives; every cache
-    hit re-verifies identity.
+    plan signature) cannot be recycled while this entry lives; ``blocks``
+    pins the (COW) device blocks against LRU eviction so the assembled
+    ``values`` stay backed.  Every cache hit re-verifies predicate identity.
     """
 
     predicate: Optional[Predicate]
-    values: Any                # device [D, C, ...] of the selected rows
-    dvalid: Any                # device [D, C] validity
-    qstats: QueryStats
+    values: Any                # device [D, C, ...] assembled region blocks
+    dvalid: Any                # device [D, C] real-slot mask
+    row_mask: Any              # device [D, C] selected-slot mask
+    qstats: QueryStats         # scan accounting sans per-execution blocks
+    blocks: Tuple[DeviceBlock, ...]
+    # staleness probes: a mutation touching a member region, or a move of
+    # one (owner binding changed), makes the entry's signature unmatchable
+    # forever — _advance_epoch evicts it eagerly instead of letting dead
+    # device arrays ride the LRU.  Moves of OTHER regions leave it bound.
+    region_ids: FrozenSet[int] = frozenset()
+    owners: Tuple[Tuple[int, Optional[int]], ...] = ()
+    last_used: int = 0         # epoch of the last execution through this entry
 
 
 @dataclasses.dataclass
 class _Layout:
-    """One column materialized in colocated ``[D, C, ...]`` device layout."""
+    """One column materialized in colocated ``[D, C, ...]`` device layout,
+    assembled per shard from the BlockStore's per-region device blocks."""
 
     epoch: int
     chunk: int
     capacity: int
-    row_ids: np.ndarray        # [D, C] positional indices into the table
     valid: np.ndarray          # [D, C] real-slot mask (host)
-    host_values: np.ndarray    # [D, C, ...] gathered payload (host cache)
-    values: Any                # device copy of host_values
+    values: Any                # global [D, C, ...] device array
     dvalid: Any                # device copy of valid
+    # per-device tuple of (rid, version) — the shard's block lineage; a
+    # shard whose composition is unchanged is reused object-for-object
+    composition: Tuple[Tuple[Tuple[int, int], ...], ...]
+    shards: Optional[List[Any]]  # per-device [1, C, ...] committed arrays
+    n_blocks: int
     last_used: int = 0         # epoch of the last run using this layout
 
 
@@ -171,8 +233,8 @@ class GridSession:
     """One object owning the grid lifecycle; the five-verb facade."""
 
     #: layouts untouched for this many epochs are evicted — a stale layout
-    #: pins a full host payload copy AND the dirty-log floor, so a
-    #: long-lived mutating session must not keep it forever.
+    #: pins its device shards, so a long-lived mutating session must not
+    #: keep it forever.
     LAYOUT_TTL_EPOCHS = 64
 
     def __init__(
@@ -186,6 +248,8 @@ class GridSession:
         payload_family: str = DATA_FAMILY,
         payload_qualifier: str = "data",
         index_family: str = INDEX_FAMILY,
+        plan_cache_cap: int = 64,
+        block_cache_cap: int = 256,
     ):
         self.table = table
         self.mesh = (mesh if mesh is not None
@@ -206,16 +270,20 @@ class GridSession:
         self.table.split_log.clear()  # from_strategy saw the current regions
         self.engine = MapReduceEngine(self.mesh, data_axis)
         self.metrics = SessionMetrics()
+        self.blocks = BlockStore(cap=block_cache_cap)
 
         self._epoch = 0
-        # (epoch, dirty node ids) per mutation; consumed by layout refresh
-        self._dirty_log: List[Tuple[int, FrozenSet[int]]] = []
         self._layouts: Dict[Tuple[str, str, int], _Layout] = {}
         # (programs, mesh shape, eta, column, epoch) -> layout key
-        self._plans: Dict[Tuple, Tuple[str, str, int]] = {}
-        # GridQuery plan signature -> bound pruned-scan layout
-        self._scan_plans: Dict[Tuple, _ScanPlan] = {}
+        self._plans: LRUCache = LRUCache(plan_cache_cap)
+        # GridQuery plan signature (block lineage) -> bound pruned-scan layout
+        self._scan_plans: LRUCache = LRUCache(plan_cache_cap)
         self._node_index = {n.node_id: d for d, n in enumerate(nodes)}
+        # per-shard devices for block placement: available when the mesh is
+        # exactly the 1-D data axis (one device per node); otherwise None
+        # and layouts fall back to host-side assembly
+        self._devices = (list(np.asarray(self.mesh.devices).flat)
+                         if self.mesh.axis_names == (data_axis,) else None)
         # observed per-node round times (observe_round) -> auto-rebalance
         self._round_history: Dict[int, List[float]] = {
             n.node_id: [] for n in nodes
@@ -231,30 +299,40 @@ class GridSession:
         return self._epoch
 
     def _advance_epoch(self, dirty_rids: Set[int],
-                       extra_dirty_nodes: Set[int] = frozenset()) -> None:
+                       touch_blocks: bool = True) -> None:
         self._epoch += 1
         self.metrics.epochs += 1
         self.metrics.regions_dirtied += len(dirty_rids)
-        owners = {
-            self.placement.alloc[rid]
-            for rid in dirty_rids if rid in self.placement.alloc
-        } | set(extra_dirty_nodes)
-        self._dirty_log.append((self._epoch, frozenset(owners)))
-        # plans are epoch-keyed; everything cached is now stale
+        if touch_blocks:
+            # copy-on-write: only the touched regions' blocks version-bump;
+            # every other block — and every pruned-scan plan over untouched
+            # regions — survives the mutation structurally intact
+            self.blocks.touch(dirty_rids, self._epoch)
+        # whole-table plans are epoch-keyed and can never hit again
         self._plans.clear()
-        self._scan_plans.clear()
+        # bound pruned plans whose lineage or owner binding just changed
+        # are unmatchable forever — release their device layouts now
+        alloc = self.placement.alloc
+        dead = [sig for sig, e in self._scan_plans.items()
+                if (e.region_ids & dirty_rids)
+                or any(alloc.get(rid) != owner for rid, owner in e.owners)]
+        for sig in dead:
+            self._scan_plans.pop(sig)
         self._prune_caches()
 
     def _prune_caches(self) -> None:
-        """Evict long-unused layouts, then drop dirty entries no survivor
-        can still consume — keeps a mutating session's memory bounded."""
+        """Evict long-unused layouts and bound scan plans — both pin
+        assembled device arrays, so a long-lived mutating session must not
+        keep idle ones forever.  (The LRU caps bound entry COUNT; this
+        bounds idle LIFETIME across mutation epochs.)"""
         self._layouts = {
             k: l for k, l in self._layouts.items()
             if self._epoch - l.last_used <= self.LAYOUT_TTL_EPOCHS
         }
-        floor = min((l.epoch for l in self._layouts.values()),
-                    default=self._epoch)
-        self._dirty_log = [(e, ns) for e, ns in self._dirty_log if e > floor]
+        idle = [sig for sig, e in self._scan_plans.items()
+                if self._epoch - e.last_used > self.LAYOUT_TTL_EPOCHS]
+        for sig in idle:
+            self._scan_plans.pop(sig)
 
     # ------------------------------------------------------------------
     # the five verbs
@@ -284,6 +362,11 @@ class GridSession:
         if not written:
             self.table.split_log.clear()
             return 0
+        # split parents' rids never reappear: forget their blocks before
+        # apply_splits consumes the log, or they'd pin payload until cap
+        # pressure (their region set membership is gone for good)
+        self.blocks.drop_regions(
+            parent.rid for parent, _, _ in self.table.split_log)
         self.placement.apply_splits()
         dirty = self.table.regions.regions_containing(
             [bytes(k) for k in written_keys])
@@ -310,7 +393,11 @@ class GridSession:
         stop: Optional[RowKey] = None,
         skip: Optional[Sequence[RowKey]] = None,
     ) -> int:
-        """Table-1 Remove: delete rows, invalidating only their regions."""
+        """Table-1 Remove: delete rows, invalidating only their regions.
+
+        Only the touched regions' block versions bump: every other region's
+        device block is reused object-for-object by the next layout build
+        (the block-identity tests pin this)."""
         doomed = [bytes(k) for k in
                   self.table.select_keys(rowkey, start, stop, skip)]
         removed = self.table.delete(rowkey=rowkey, start=start, stop=stop,
@@ -368,6 +455,11 @@ class GridSession:
         — node ids must be the existing ones.  ``auto=True`` derives those
         specs from the round times fed to :meth:`observe_round` instead
         (no observations yet -> powers unchanged).  Returns moved region ids.
+
+        Moves do NOT bump block content versions: a moved region's payload is
+        unchanged, so its cached host block re-commits to the new owner
+        device (one transfer, zero table re-reads) while unmoved regions'
+        device blocks are reused as-is.
         """
         if auto:
             if nodes is not None:
@@ -390,9 +482,7 @@ class GridSession:
             self.placement.alloc.clear()
             self.placement.alloc.update(new_alloc)
             self.placement.version += 1
-            dirty_nodes = ({old[rid] for rid in moved if rid in old}
-                           | {new_alloc[rid] for rid in moved})
-            self._advance_epoch(set(moved), extra_dirty_nodes=dirty_nodes)
+            self._advance_epoch(set(moved), touch_blocks=False)
         return moved
 
     # ------------------------------------------------------------------
@@ -449,10 +539,19 @@ class GridSession:
         """Predicate-pushdown MapReduce (§2.3 unified with §2.2) — a
         full-range ``.where`` plan.
 
-        The predicate runs over the index family only; each device then
-        gathers *just its own selected* payload rows (compacted, locality
-        preserved), so the returned ``QueryStats.payload_bytes_moved`` covers
-        exactly the selected rows — never the full table.
+        The predicate runs over the index family only; the fold then reads
+        *just the selected payload slots* through a device-side row mask
+        (locality preserved because index and payload share rowkeys and
+        placement), so ``QueryStats.payload_bytes_moved`` covers exactly
+        the selected rows — never the full table.
+
+        Physical transfer is block-granular: a COLD selective query ships
+        the surviving regions' whole blocks (observable via
+        ``payload_bytes_transferred``), which is what lets every later
+        plan — any predicate, any overlapping range, any later epoch —
+        reuse them without re-shipping.  Region pruning (``scan`` with a
+        range, then ``.where``) is the tool for keeping cold transfers
+        small too.
         """
         q = (self.scan()
              .select((family or self.payload_family,
@@ -464,9 +563,6 @@ class GridSession:
     # ------------------------------------------------------------------
     # the planner/executor behind GridQuery
     # ------------------------------------------------------------------
-
-    #: bound pruned-scan layouts kept per epoch; oldest evicted beyond this
-    SCAN_PLAN_CAP = 32
 
     def _execute_plan(
         self, plan: GridQuery, eta: Optional[int] = None
@@ -491,30 +587,35 @@ class GridSession:
         self, plan: GridQuery, program: MapReduceProgram, eta: int
     ) -> Tuple[Any, RunReport]:
         """Whole-table plans ride the incremental layout machinery: a repeat
-        run is a plan-cache hit; across epochs only dirty device blocks are
-        re-gathered."""
+        run is a plan-cache hit; across epochs only dirty regions' blocks are
+        re-gathered and only their shards re-assembled."""
         family, qualifier = plan.compute_column()
         plan_key = (tuple(p.cache_key() for p in plan.programs),
                     self._mesh_shape(), eta, family, qualifier, self._epoch)
-        hit = plan_key in self._plans
-        rows_before = self.metrics.rows_gathered
+        layout_key = self._plans.get(plan_key)
+        hit = (layout_key is not None
+               and self._layouts.get(layout_key) is not None)
         if hit:
             self.metrics.plan_hits += 1
-            layout = self._layouts[self._plans[plan_key]]
+            layout = self._layouts[layout_key]
+            layout.last_used = self._epoch
+            acct = _BlockAccount.all_reused(layout.n_blocks)
         else:
             self.metrics.plan_misses += 1
-            layout = self._layout(family, qualifier, eta)
-            self._plans[plan_key] = (family, qualifier, eta)
+            layout, acct = self._layout(family, qualifier, eta)
+            self._plans.put(plan_key, (family, qualifier, eta))
         result, mr = self.engine.run(program, layout.values, layout.dvalid,
                                      eta)
         n = self.table.num_rows
         row_nbytes = self.table.column_spec(family, qualifier).row_nbytes
-        qstats = QueryStats(
+        # payload_bytes_moved is the LOGICAL quantity (selected rows × row
+        # bytes, here the whole table) on every path; physical transfer
+        # lives in the block oracles acct.apply fills in
+        qstats = acct.apply(QueryStats(
             rows_scanned=n, index_bytes_scanned=0, payload_bytes_traversed=0,
             rows_selected=n,
-            payload_bytes_moved=(self.metrics.rows_gathered - rows_before)
-            * row_nbytes,
-            regions_scanned=len(self.table.regions), regions_pruned=0)
+            payload_bytes_moved=n * row_nbytes,
+            regions_scanned=len(self.table.regions), regions_pruned=0))
         return result, RunReport(epoch=self._epoch, eta=eta,
                                  plan_cache_hit=hit, mapreduce=mr,
                                  query=qstats)
@@ -522,30 +623,34 @@ class GridSession:
     def _run_pruned(
         self, plan: GridQuery, program: MapReduceProgram, eta: int
     ) -> Tuple[Any, RunReport]:
-        """Range/predicate plans: prune regions first, then gather only the
-        selected rows of the surviving regions into a compact layout."""
+        """Range/predicate plans: prune regions first, then assemble the
+        surviving regions' blocks into a layout (store-first, so blocks
+        shared with earlier plans or epochs never re-gather) and fold only
+        the selected slots through a device-side row mask."""
         sig = plan.plan_signature(eta)
         entry = self._scan_plans.get(sig)
         hit = entry is not None and entry.predicate is plan.predicate
         if hit:
             self.metrics.plan_hits += 1
+            acct = _BlockAccount.all_reused(len(entry.blocks))
         else:
             self.metrics.plan_misses += 1
-            entry = self._gather_pruned(plan, eta)
-            while len(self._scan_plans) >= self.SCAN_PLAN_CAP:
-                self._scan_plans.pop(next(iter(self._scan_plans)))
-            self._scan_plans[sig] = entry
-        result, mr = self.engine.run(program, entry.values, entry.dvalid, eta)
+            entry, acct = self._gather_pruned(plan, eta)
+            self._scan_plans.put(sig, entry)
+        entry.last_used = self._epoch
+        result, mr = self.engine.run(program, entry.values, entry.dvalid, eta,
+                                     row_mask=entry.row_mask)
         return result, RunReport(epoch=self._epoch, eta=eta,
                                  plan_cache_hit=hit, mapreduce=mr,
-                                 query=entry.qstats)
+                                 query=acct.apply(entry.qstats))
 
     def _scan_mask(
         self, plan: GridQuery
-    ) -> Tuple[np.ndarray, QueryStats, Tuple[Region, ...], int, int]:
+    ) -> Tuple[np.ndarray, QueryStats, Tuple[Region, ...]]:
         """Selected-row mask + accounting for a plan's scan stage, plus the
-        resolved ``(regions, lo, hi)`` so downstream stages consume the SAME
-        range resolution they were keyed on.
+        pruned region set so downstream stages consume the SAME range
+        resolution they were keyed on (range clipping itself lives in the
+        mask — blocks keep whole regions).
 
         With a predicate this is :func:`indexed_query` over the scan range
         (index family only); without one, every row in range is selected and
@@ -566,42 +671,57 @@ class GridSession:
                 rows_scanned=hi - lo, index_bytes_scanned=0,
                 payload_bytes_traversed=0, rows_selected=hi - lo,
                 regions_scanned=len(regions), regions_pruned=pruned_count)
-        return mask, qstats, regions, lo, hi
+        return mask, qstats, regions
 
-    def _gather_pruned(self, plan: GridQuery, eta: int) -> _ScanPlan:
-        """One gather pass: per device, only ITS OWN selected rows from the
-        surviving regions — locality preserved, pruned regions untouched."""
+    def _gather_pruned(
+        self, plan: GridQuery, eta: int
+    ) -> Tuple[_ScanPlan, _BlockAccount]:
+        """One store-first assembly pass: per device, ITS OWN surviving
+        regions' blocks — pruned regions untouched, shared blocks reused."""
         family, qualifier = plan.compute_column()
-        mask, qstats, regions, lo, hi = self._scan_mask(plan)
-        per_dev = self._per_device_rows_pruned(regions, lo, hi)
-        selected = [rows[mask[rows]] for rows in per_dev]
-        n_sel = int(sum(len(s) for s in selected))
-        need = max((len(s) for s in selected), default=0)
-        cap = max(eta, -(-max(need, 1) // eta) * eta)
+        # range clipping lives entirely in the row mask below — blocks keep
+        # whole regions so the payload stays shareable across ranges
+        mask, qstats, regions = self._scan_mask(plan)
+        per_dev = self._per_device_regions(regions)
+        blocks_per_dev, acct = self._fetch_blocks(per_dev, family, qualifier)
 
-        col = self.table.column(family, qualifier)
-        D = len(per_dev)
-        host = np.zeros((D, cap) + col.shape[1:], col.dtype)
-        valid = np.zeros((D, cap), dtype=bool)
-        for d, rows in enumerate(selected):
-            host[d, : len(rows)] = col[rows]
-            valid[d, : len(rows)] = True
+        spec = self.table.column_spec(family, qualifier)
+        rows_per_dev = [sum(b.rows for b in blks) for blks in blocks_per_dev]
+        cap = self._capacity_for(rows_per_dev, eta)
+        values, valid, _ = self._assemble(blocks_per_dev, rows_per_dev, cap,
+                                          spec.shape, spec.dtype)
+        # slot-level selection: real slot AND in scan range AND predicate —
+        # blocks hold whole regions, so range edges and predicates both land
+        # in the mask, never in the (shared, reusable) payload
+        row_mask = np.zeros_like(valid)
+        for d, regs in enumerate(per_dev):
+            if regs:
+                rows = np.concatenate(
+                    [self.table.region_positions(r) for r in regs])
+                row_mask[d, : len(rows)] = mask[rows]
         sh = Placement.data_sharding(self.mesh, self.data_axis)
-        row_nbytes = self.table.column_spec(family, qualifier).row_nbytes
         qstats = dataclasses.replace(
-            qstats, payload_bytes_moved=n_sel * row_nbytes)
-        self.metrics.pushdown_rows_gathered += n_sel
-        self.metrics.payload_gathers += 1
-        return _ScanPlan(predicate=plan.predicate,
-                         values=jax.device_put(host, sh),
-                         dvalid=jax.device_put(valid, sh), qstats=qstats)
+            qstats,
+            payload_bytes_moved=qstats.rows_selected * spec.row_nbytes)
+        self.metrics.pushdown_rows_gathered += acct.rows_gathered
+        if acct.gathered:
+            self.metrics.payload_gathers += 1
+        entry = _ScanPlan(
+            predicate=plan.predicate, values=values,
+            dvalid=jax.device_put(valid, sh),
+            row_mask=jax.device_put(row_mask, sh), qstats=qstats,
+            blocks=tuple(b for blks in blocks_per_dev for b in blks),
+            region_ids=frozenset(r.rid for r in regions),
+            owners=tuple((r.rid, self.placement.alloc.get(r.rid))
+                         for r in regions))
+        return entry, acct
 
     def _collect_rows(
         self, plan: GridQuery, eta: int
     ) -> Tuple[Tuple[np.ndarray, Dict[str, np.ndarray]], RunReport]:
         """Program-less plans are pruned retrieves: host-side rowkeys plus
         every selected column's values, charging only the selected rows."""
-        mask, qstats, _, _, _ = self._scan_mask(plan)
+        mask, qstats, _ = self._scan_mask(plan)
         sel = np.nonzero(mask)[0]
         cols = {
             f"{f}:{q}": self.table.column(f, q)[sel].copy()
@@ -616,96 +736,209 @@ class GridSession:
         return (self.table.keys[sel].copy(), cols), report
 
     # ------------------------------------------------------------------
-    # layouts (incremental placement materialization)
+    # block fetch + layout assembly (the BlockStore plumbing)
     # ------------------------------------------------------------------
 
-    def _per_device_rows(self) -> List[np.ndarray]:
-        return [self.placement.rows_for_node(n.node_id)
-                for n in self.placement.nodes]
-
-    def _per_device_rows_pruned(
-        self, regions: Sequence[Region], lo: int, hi: int
-    ) -> List[np.ndarray]:
-        """Per-device positional rows restricted to the surviving regions,
-        clipped to the scan range — O(|pruned regions|), never a walk over
-        regions the scan excluded."""
-        keys = self.table.keys
-        per: List[List[np.ndarray]] = [[] for _ in self.placement.nodes]
+    def _per_device_regions(
+        self, regions: Sequence[Region]
+    ) -> List[List[Region]]:
+        """Group regions by owning device, preserving start-key order (so a
+        shard's slots are ascending in rowkey, exactly as placement's
+        ``rows_for_node`` orders them)."""
+        per: List[List[Region]] = [[] for _ in self.placement.nodes]
         for region in regions:
             d = self._node_index.get(self.placement.alloc.get(region.rid))
-            if d is None:
-                continue
-            s = region.row_slice(keys)
-            a, b = max(s.start, lo), min(s.stop, hi)
-            if a < b:
-                per[d].append(np.arange(a, b, dtype=np.int64))
-        return [np.sort(np.concatenate(p)) if p
-                else np.empty((0,), dtype=np.int64) for p in per]
+            if d is not None:
+                per[d].append(region)
+        return per
 
-    def _layout(self, family: str, qualifier: str, chunk: int) -> _Layout:
+    @staticmethod
+    def _capacity_for(rows_per_dev: List[int], chunk: int) -> int:
+        """Slots per device: the busiest device's rows rounded up to a
+        chunk multiple, at least one chunk (SPMD needs equal shards)."""
+        need = max(rows_per_dev, default=0)
+        return max(chunk, -(-max(need, 1) // chunk) * chunk)
+
+    def _fetch_blocks(
+        self,
+        per_dev: List[List[Region]],
+        family: str,
+        qualifier: str,
+        skip: Optional[List[bool]] = None,
+    ) -> Tuple[List[List[DeviceBlock]], _BlockAccount]:
+        """Store-first fetch of every listed region's block, grouped per
+        device, with one account covering the whole pass.
+
+        ``skip[d]`` marks devices whose assembled shard will be reused
+        as-is: their regions are accounted as reused without touching the
+        store (no fetch, no LRU churn) and their block list stays empty.
+        """
+        acct = _BlockAccount()
+        blocks_per_dev: List[List[DeviceBlock]] = []
+        for d, regs in enumerate(per_dev):
+            if skip is not None and skip[d]:
+                acct.total += len(regs)
+                acct.reused += len(regs)
+                blocks_per_dev.append([])
+                continue
+            blks = []
+            for region in regs:
+                blk, reused, gathered = self._fetch_block(
+                    region, family, qualifier, owner=d)
+                acct.add(blk, reused, gathered)
+                blks.append(blk)
+            blocks_per_dev.append(blks)
+        return blocks_per_dev, acct
+
+    def _fetch_block(
+        self, region: Region, family: str, qualifier: str, owner: int
+    ) -> Tuple[DeviceBlock, bool, bool]:
+        """Store-first block access; ``owner`` is the region's device index
+        (the _per_device_regions group the caller is filling — derived once
+        there, not re-derived per block)."""
+        blk, reused, gathered = self.blocks.fetch(
+            region, family, qualifier, owner,
+            gather_host=lambda: self.table.region_column(
+                region, family, qualifier),
+            to_device=None if self._devices is None else self._put_block,
+        )
+        return blk, reused, gathered
+
+    def _put_block(self, host: np.ndarray, owner_index: Optional[int]):
+        """Commit one block to its owner shard's device (the per-shard
+        ``device_put`` half of the multi-chip transfer path)."""
+        dev = None if owner_index is None else self._devices[owner_index]
+        return jax.device_put(host, dev)
+
+    def _assemble(
+        self,
+        blocks_per_dev: List[List[DeviceBlock]],
+        rows_per_dev: List[int],
+        cap: int,
+        row_shape: Tuple[int, ...],
+        dtype,
+        reuse: Optional[List[Optional[Any]]] = None,
+    ) -> Tuple[Any, np.ndarray, Optional[List[Any]]]:
+        """Blocks → ``(global [D, cap, ...] device array, host validity,
+        per-device shards)``.
+
+        Per-shard path (1-D data mesh): each device's blocks are already
+        resident on it, so assembly is an on-device concat + pad and the
+        global array is stitched with
+        ``jax.make_array_from_single_device_arrays`` — clean blocks never
+        re-cross the host↔device boundary.  ``reuse[d]`` (a prior build's
+        shard whose composition is unchanged) skips even the concat, and
+        its block list may be empty.  Fallback (exotic meshes): host concat
+        + one sharded ``device_put``, shards ``None``.
+        """
+        D = len(blocks_per_dev)
+        valid = np.zeros((D, cap), dtype=bool)
+        for d, n in enumerate(rows_per_dev):
+            valid[d, :n] = True
+        sh = Placement.data_sharding(self.mesh, self.data_axis)
+        global_shape = (D, cap) + tuple(row_shape)
+        if self._devices is None:
+            host = np.zeros(global_shape, dtype)
+            for d, blks in enumerate(blocks_per_dev):
+                off = 0
+                for b in blks:
+                    host[d, off: off + b.rows] = b.host
+                    off += b.rows
+            return jax.device_put(host, sh), valid, None
+        shards = [
+            reuse[d] if reuse is not None and reuse[d] is not None
+            else self._assemble_shard(blks, cap, row_shape, dtype, d)
+            for d, blks in enumerate(blocks_per_dev)
+        ]
+        values = jax.make_array_from_single_device_arrays(
+            global_shape, sh, shards)
+        return values, valid, shards
+
+    def _assemble_shard(
+        self,
+        blks: List[DeviceBlock],
+        cap: int,
+        row_shape: Tuple[int, ...],
+        dtype,
+        d: int,
+    ):
+        """One device's ``[1, cap, ...]`` shard from its resident blocks."""
+        parts = [b.device for b in blks if b.rows]
+        n = sum(b.rows for b in blks)
+        if not parts:
+            shard = jax.device_put(
+                np.zeros((cap,) + tuple(row_shape), dtype), self._devices[d])
+        else:
+            shard = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            if n < cap:
+                shard = jnp.pad(
+                    shard, [(0, cap - n)] + [(0, 0)] * len(row_shape))
+        return shard.reshape((1, cap) + tuple(row_shape))
+
+    # ------------------------------------------------------------------
+    # layouts (incremental placement materialization over blocks)
+    # ------------------------------------------------------------------
+
+    def _layout(
+        self, family: str, qualifier: str, chunk: int
+    ) -> Tuple[_Layout, _BlockAccount]:
         key = (family, qualifier, int(chunk))
         lay = self._layouts.get(key)
         if lay is not None and lay.epoch == self._epoch:
             lay.last_used = self._epoch
-            return lay
+            return lay, _BlockAccount.all_reused(lay.n_blocks)
 
-        per_dev = self._per_device_rows()
+        per_dev = self._per_device_regions(self.table.regions.regions)
         D = len(per_dev)
-        need = max((len(r) for r in per_dev), default=0)
-        cap_needed = max(chunk, -(-max(need, 1) // chunk) * chunk)
-        col = self.table.column(family, qualifier)
+        keys = self.table.keys
+        rows_per_dev = [sum(r.num_rows(keys) for r in regs)
+                        for regs in per_dev]
+        # composition comes from lineage alone — deciding which shards to
+        # reuse must not touch the store, or clean shards' blocks would be
+        # re-fetched (and under cap pressure re-gathered) just to be
+        # discarded by the reuse path
+        composition = tuple(self.blocks.lineage(regs) for regs in per_dev)
 
-        if lay is None or cap_needed > lay.capacity:
-            cap = cap_needed
-            row_ids = np.zeros((D, cap), dtype=np.int64)
-            valid = np.zeros((D, cap), dtype=bool)
-            host = np.zeros((D, cap) + col.shape[1:], col.dtype)
-            for d, rows in enumerate(per_dev):
-                row_ids[d, : len(rows)] = rows
-                valid[d, : len(rows)] = True
-                host[d, : len(rows)] = col[rows]
+        cap_needed = self._capacity_for(rows_per_dev, chunk)
+        spec = self.table.column_spec(family, qualifier)
+        full = lay is None or cap_needed > lay.capacity
+        cap = cap_needed if full else lay.capacity
+
+        # a shard whose block composition (and capacity) is unchanged is
+        # reused object-for-object — no concat, no pad, no device_put,
+        # and its blocks are never pulled through the store
+        reuse: Optional[List[Optional[Any]]] = None
+        if not full and lay.shards is not None:
+            reuse = [lay.shards[d] if composition[d] == lay.composition[d]
+                     else None for d in range(D)]
+        skip = None if reuse is None else [r is not None for r in reuse]
+        blocks_per_dev, acct = self._fetch_blocks(per_dev, family, qualifier,
+                                                  skip=skip)
+        values, valid, shards = self._assemble(
+            blocks_per_dev, rows_per_dev, cap, spec.shape, spec.dtype,
+            reuse=reuse)
+        kept = sum(1 for r in reuse if r is not None) if reuse else 0
+        self.metrics.devices_reused += kept
+        self.metrics.devices_regathered += D - kept
+
+        if full:
             self.metrics.layout_full_builds += 1
-            self.metrics.payload_gathers += 1
-            self.metrics.devices_regathered += D
-            self.metrics.rows_gathered += int(sum(len(r) for r in per_dev))
         else:
-            # incremental refresh: payload re-gathered ONLY for nodes dirtied
-            # since this layout's epoch; row indices are recomputed for all
-            # (cheap — positions shift under inserts) but clean devices keep
-            # their payload blocks byte-for-byte.
-            cap = lay.capacity
-            dirty_nodes: Set[int] = set()
-            for e, ns in self._dirty_log:
-                if e > lay.epoch:
-                    dirty_nodes |= set(ns)
-            dirty_devs = {self._node_index[nid] for nid in dirty_nodes
-                          if nid in self._node_index}
-            row_ids, valid, host = lay.row_ids, lay.valid, lay.host_values
-            for d, rows in enumerate(per_dev):
-                row_ids[d] = 0
-                valid[d] = False
-                row_ids[d, : len(rows)] = rows
-                valid[d, : len(rows)] = True
-                if d in dirty_devs:
-                    host[d] = 0
-                    host[d, : len(rows)] = col[rows]
-                    self.metrics.devices_regathered += 1
-                    self.metrics.rows_gathered += len(rows)
-                else:
-                    self.metrics.devices_reused += 1
             self.metrics.layout_refreshes += 1
-            if dirty_devs:
-                self.metrics.payload_gathers += 1
+        self.metrics.rows_gathered += acct.rows_gathered
+        if acct.gathered:
+            self.metrics.payload_gathers += 1
 
         sh = Placement.data_sharding(self.mesh, self.data_axis)
         lay = _Layout(
             epoch=self._epoch, chunk=int(chunk), capacity=cap,
-            row_ids=row_ids, valid=valid, host_values=host,
-            values=jax.device_put(host, sh), dvalid=jax.device_put(valid, sh),
-            last_used=self._epoch,
+            valid=valid, values=values,
+            dvalid=jax.device_put(valid, sh),
+            composition=composition, shards=shards,
+            n_blocks=acct.total, last_used=self._epoch,
         )
         self._layouts[key] = lay
-        return lay
+        return lay, acct
 
     # ------------------------------------------------------------------
     # helpers / diagnostics
@@ -740,8 +973,9 @@ class GridSession:
             f"engine compiles: {self.engine.compile_count}",
             f"  layouts: {m.layout_full_builds} full builds, "
             f"{m.layout_refreshes} refreshes "
-            f"({m.devices_regathered} regathered / {m.devices_reused} reused "
-            f"device blocks, {m.rows_gathered} rows gathered)",
+            f"({m.devices_regathered} reassembled / {m.devices_reused} reused "
+            f"device shards, {m.rows_gathered} rows gathered)",
+            f"  blocks: {self.blocks.describe()}",
             f"  queries: {m.scans} plans executed, {m.programs_fused} "
             f"programs fused, {m.payload_gathers} payload gather passes "
             f"({m.pushdown_rows_gathered} pushdown rows)",

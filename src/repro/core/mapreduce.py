@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.blockstore import LRUCache
 from repro.utils import shard_map_compat
 
 PyTree = Any
@@ -94,10 +95,13 @@ class MapReduceStats:
 class MapReduceEngine:
     """Executes MapReduce programs over ``[D, C, ...]`` colocated layouts."""
 
-    def __init__(self, mesh: Mesh, data_axis: str = "data"):
+    def __init__(self, mesh: Mesh, data_axis: str = "data",
+                 executable_cache_cap: int = 64):
         self.mesh = mesh
         self.data_axis = data_axis
-        self._compiled = {}
+        # LRU-capped: one entry per (program, row signature, eta, C); an
+        # evicted executable rebuilds on next use (compile_count bumps again)
+        self._compiled = LRUCache(executable_cache_cap)
         # builds of new executables (the recompile oracle GridSession's plan
         # cache is tested against): bumped only on an executable-cache miss.
         self.compile_count = 0
@@ -193,10 +197,12 @@ class MapReduceEngine:
         row_shape = tuple(values.shape[2:])
         dtype = values.dtype
         key = (program.cache_key(), row_shape, str(dtype), chunk_size, C)
-        if key not in self._compiled:
+        fn = self._compiled.get(key)
+        if fn is None:
             self.compile_count += 1
-            self._compiled[key] = self._build(program, row_shape, dtype, chunk_size)
-        result = self._compiled[key](values, mask)
+            fn = self._build(program, row_shape, dtype, chunk_size)
+            self._compiled.put(key, fn)
+        result = fn(values, mask)
 
         # --- byte accounting (host-side; mask is tiny) -------------------
         mask_np = np.asarray(jax.device_get(mask))

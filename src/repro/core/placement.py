@@ -73,19 +73,28 @@ class Placement:
 
     def apply_splits(self) -> None:
         """Children of a split region inherit the parent's node (HBase
-        keeps daughters on the same region server until a balancer run)."""
+        keeps daughters on the same region server until a balancer run).
+
+        ``version`` bumps only when the region→node map actually changed:
+        consumers key caches on it (row pools, bound plan signatures), so a
+        split-free upload must not read as a placement change."""
+        changed = False
         for parent, left, right in self.table.split_log:
             if parent.rid in self.alloc:
                 nid = self.alloc.pop(parent.rid)
                 self.alloc[left.rid] = nid
                 self.alloc[right.rid] = nid
+                changed = True
         self.table.split_log.clear()
         # adopt any regions still missing (e.g. created before this placement)
         # at the neediest node vs its #CPU×MIPS share — not blindly node 0
-        self.alloc.update(
-            assign_new_regions(self.alloc, self.table.region_bytes(), self.nodes)
-        )
-        self.version += 1
+        adopted = assign_new_regions(
+            self.alloc, self.table.region_bytes(), self.nodes)
+        if adopted:
+            self.alloc.update(adopted)
+            changed = True
+        if changed:
+            self.version += 1
 
     def node_bytes(self) -> Dict[int, float]:
         return node_loads(self.alloc, self.table.region_bytes(), self.nodes)

@@ -201,20 +201,29 @@ class GridQuery:
         return cols[0]
 
     def plan_signature(self, eta: int) -> Tuple:
-        """The compiled-plan cache key: (programs, pruned-region signature,
-        mesh shape, η, epoch) plus projection/range/predicate identity.
+        """The compiled-plan cache key: (programs, pruned-region
+        *epoch-lineage*, the pruned regions' owner devices, mesh shape, η)
+        plus projection/range/predicate identity.
 
-        The predicate contributes ``id()``; the cache entry pins the object
-        so the id cannot be recycled while the entry lives (the session
-        verifies identity on every hit).
+        Lineage — ``(rid, version)`` per surviving region, from the
+        session's :class:`~repro.core.blockstore.BlockStore` — replaces the
+        global epoch: a bound plan survives every mutation that does not
+        touch its own regions, which is what lets overlapping pruned scans
+        keep sharing device blocks across epochs.  Region moves fold in as
+        the plan's OWN regions' owner assignments (not a global placement
+        version), so a rebalance that moves other regions doesn't unbind
+        this plan either.  The predicate contributes ``id()``; the cache
+        entry pins the object so the id cannot be recycled while the entry
+        lives (the session verifies identity on every hit).
         """
         pruned = self.session.table.regions.prune(self.start, self.stop)
+        alloc = self.session.placement.alloc
         return (
             tuple(p.cache_key() for p in self.programs),
-            tuple(r.rid for r in pruned),
+            self.session.blocks.lineage(pruned),
+            tuple(alloc.get(r.rid) for r in pruned),
             self.session._mesh_shape(),
             int(eta),
-            self.session.epoch,
             self.resolved_columns(),
             (self.start, self.stop),
             None if self.predicate is None

@@ -42,19 +42,36 @@ class QueryStats:
     index_bytes_scanned: int      # small-column bytes read for the predicate
     payload_bytes_traversed: int  # payload bytes forced through the read path
     rows_selected: int
-    # payload bytes actually gathered into a compute layout; filled by the
-    # GridSession pushdown path (run_where), where it must cover ONLY the
-    # selected rows — the quantity the §2.3 scheme exists to minimize.
+    # logical payload bytes the pushdown admitted into the fold: selected
+    # rows × row bytes, the quantity the §2.3 scheme exists to minimize.
+    # (Physical transfer is now block-granular and reported separately
+    # below — a repeat plan can select many rows yet transfer nothing.)
     payload_bytes_moved: int = 0
     # region pruning efficacy: how many regions the scan range resolved to
     # vs how many the rowkey-range pushdown excluded outright (their device
     # blocks are never gathered).  scanned + pruned == total regions.
     regions_scanned: int = 0
     regions_pruned: int = 0
+    # --- BlockStore oracles (copy-on-write block reuse observability) ----
+    # The plan's layout is assembled from per-region device blocks; every
+    # block it needed is exactly one of reused / transferred:
+    blocks_total: int = 0         # blocks the plan's surviving regions span
+    blocks_reused: int = 0        # already resident on the right device
+    blocks_transferred: int = 0   # crossed host→device for this execution
+    gather_count: int = 0         # blocks whose host payload was re-read
+    payload_bytes_transferred: int = 0  # physical bytes of the transfers
 
     @property
     def total_bytes_scanned(self) -> int:
         return self.index_bytes_scanned + self.payload_bytes_traversed
+
+    def check_block_invariant(self) -> None:
+        """Every needed block is exactly one of reused / transferred, and a
+        table re-read implies a transfer (the differential harness asserts
+        this after every executed plan)."""
+        assert self.blocks_reused + self.blocks_transferred == \
+            self.blocks_total, self
+        assert 0 <= self.gather_count <= self.blocks_transferred, self
 
 
 def _scan_range(

@@ -41,6 +41,14 @@ class Region:
     start: bytes                  # inclusive; KEY_MIN for the first region
     stop: Optional[bytes]         # exclusive; None (KEY_MAX) for the last
 
+    @property
+    def signature(self) -> Tuple[int, bytes, Optional[bytes]]:
+        """Stable identity for content-addressed consumers (the BlockStore's
+        block keys).  rids are never reused, but carrying the key range makes
+        a block's address self-describing and collision-proof by
+        construction."""
+        return (self.rid, self.start, self.stop)
+
     def contains(self, key: bytes) -> bool:
         return self.start <= key and _key_lt(key, self.stop)
 

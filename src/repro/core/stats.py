@@ -144,6 +144,35 @@ class MomentsProgram(MapReduceProgram):
 
 
 @dataclasses.dataclass(frozen=True)
+class CountProgram(MapReduceProgram):
+    """Row count (additive) — the cheapest statistic, and an end-to-end
+    oracle: a fold over a block-assembled layout must count exactly the
+    slots the scan's row mask selected, so the differential harness checks
+    it against ``QueryStats.rows_selected`` (a mask/padding bug anywhere in
+    the block plumbing shows up here first).
+
+    Accumulates in int32 (``psum`` is exact on integers; int64 would need
+    x64 mode), not the float32 the statistic programs default to — callers
+    assert exact equality and float32 loses integer exactness past 2^24
+    rows."""
+
+    acc_dtype: jnp.dtype = jnp.int32
+    additive = True
+
+    def zero(self, row_shape, dtype):
+        return {"count": jnp.zeros((), self.acc_dtype)}
+
+    def map_chunk(self, rows, valid):
+        return {"count": valid.sum().astype(self.acc_dtype)}
+
+    def merge(self, a, b):
+        return jax.tree.map(jnp.add, a, b)
+
+    def finalize(self, p):
+        return p["count"]
+
+
+@dataclasses.dataclass(frozen=True)
 class FusedProgram(MapReduceProgram):
     """The monoid product of N statistic programs — one pass, N answers.
 

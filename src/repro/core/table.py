@@ -369,6 +369,20 @@ class TensorTable:
     def region_rows(self, region: Region) -> slice:
         return region.row_slice(self._keys)
 
+    def region_positions(self, region: Region) -> np.ndarray:
+        """Current positional row indices of a region (ascending)."""
+        s = region.row_slice(self._keys)
+        return np.arange(s.start, s.stop, dtype=np.int64)
+
+    def region_column(self, region: Region, family: str,
+                      qualifier: str) -> np.ndarray:
+        """A private copy of one region's rows of one column — the BlockStore
+        gather primitive.  A copy (not a view) because block content must
+        survive later mutations that shift the backing arrays; any mutation
+        to *this* region's rows invalidates the block by version instead."""
+        s = region.row_slice(self._keys)
+        return self._data[(family, qualifier)][s.start:s.stop].copy()
+
     def region_bytes(self) -> Dict[int, int]:
         rb = self.row_bytes()
         return {r.rid: r.num_bytes(self._keys, rb) for r in self.regions}

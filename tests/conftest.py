@@ -1,0 +1,32 @@
+"""Shared test config: marker registration + Hypothesis profiles.
+
+Two Hypothesis profiles keep CI fast without weakening local runs:
+
+- ``ci``  — ``max_examples`` capped (selected automatically when the ``CI``
+  env var is set, as GitHub Actions does);
+- ``dev`` — the full budget (200 examples), the default everywhere else.
+
+Select explicitly with ``HYPOTHESIS_PROFILE=ci|dev``.
+"""
+
+import os
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device subprocess tests (minutes, not ms)")
+
+
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=20, deadline=None,
+                              stateful_step_count=15)
+    settings.register_profile("dev", max_examples=200, deadline=None,
+                              stateful_step_count=25)
+    settings.load_profile(os.environ.get(
+        "HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI") else "dev"))
+except ImportError:
+    pass

@@ -1,0 +1,407 @@
+"""BlockStore: copy-on-write per-region device blocks shared across epochs
+and plans.
+
+The two PR acceptance oracles live here: (1) after ``session.remove`` of one
+region, a repeat ``.stats()`` re-transfers ONLY that region's blocks — every
+other region's device block is the *same object* (no re-pad, no re-
+``device_put``); (2) two overlapping pruned scans share gathered blocks — the
+second plan's ``gather_count`` counts only blocks the first didn't gather.
+Plus the LRU cap regressions: eviction + loss-free re-materialization for
+both the block cache and the bound-plan cache.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.blockstore import BlockStore, LRUCache
+from repro.core.grid import GridSession
+from repro.core.query import age_sex_predicate
+from repro.core.regions import HierarchicalSplitPolicy, Region
+from repro.core.stats import MeanProgram, VarianceProgram
+from repro.core.table import ColumnSpec, make_mip_table
+
+PAYLOAD = (3, 4)
+
+
+def make_table(groups=("a", "b", "c", "d", "e"), per=8, seed=0):
+    """One presplit region per rowkey prefix, ``per`` rows each."""
+    rng = np.random.default_rng(seed)
+    t = make_mip_table(
+        payload_shape=PAYLOAD,
+        extra_index_columns=[ColumnSpec("age", (), np.float32),
+                             ColumnSpec("sex", (), np.int8)],
+        split_policy=HierarchicalSplitPolicy(max_region_bytes=10**18),
+        presplit_keys=list(groups)[1:],
+    )
+    keys = [f"{g}{i:04d}" for g in groups for i in range(per)]
+    n = len(keys)
+    t.upload(keys, {
+        "img": {"data": rng.normal(size=(n,) + PAYLOAD).astype(np.float32)},
+        "idx": {"size": rng.integers(6_000_000, 20_000_001, n),
+                "age": rng.uniform(4, 80, n).astype(np.float32),
+                "sex": rng.integers(0, 2, n).astype(np.int8)}})
+    return t
+
+
+def batch(keys, seed=1):
+    rng = np.random.default_rng(seed)
+    n = len(keys)
+    return {"img": {"data": rng.normal(size=(n,) + PAYLOAD).astype(np.float32)},
+            "idx": {"size": rng.integers(6_000_000, 20_000_001, n),
+                    "age": rng.uniform(4, 80, n).astype(np.float32),
+                    "sex": rng.integers(0, 2, n).astype(np.int8)}}
+
+
+# ----------------------------------------------------------------------
+# LRUCache / BlockStore units
+# ----------------------------------------------------------------------
+
+class TestLRUCache:
+    def test_eviction_order_and_counter(self):
+        evicted = []
+        c = LRUCache(2, on_evict=lambda k, v: evicted.append(k))
+        c.put("a", 1)
+        c.put("b", 2)
+        assert c.get("a") == 1          # refreshes 'a': 'b' is now coldest
+        c.put("c", 3)
+        assert "b" not in c and "a" in c and "c" in c
+        assert evicted == ["b"] and c.evictions == 1
+
+    def test_peek_does_not_refresh(self):
+        c = LRUCache(2)
+        c.put("a", 1)
+        c.put("b", 2)
+        assert c.peek("a") == 1         # no recency bump: 'a' still coldest
+        c.put("c", 3)
+        assert "a" not in c
+
+    def test_cap_must_be_positive(self):
+        with pytest.raises(ValueError):
+            LRUCache(0)
+
+
+class TestBlockStoreVersions:
+    def region(self, rid=1):
+        return Region(rid, b"a", b"b")
+
+    def fetch(self, store, region, value=1.0):
+        return store.fetch(
+            region, "img", "data", owner_index=None,
+            gather_host=lambda: np.full((4, 2), value, np.float32),
+            to_device=None)
+
+    def test_touch_bumps_version_and_drops_superseded(self):
+        store = BlockStore(cap=8)
+        r = self.region()
+        assert store.version_of(r.rid) == 0
+        blk1, reused, gathered = self.fetch(store, r)
+        assert gathered and not reused
+        blk2, reused, gathered = self.fetch(store, r)
+        # host-only mode: the content hit skips the table re-read but every
+        # fetch still counts as a transfer (the fallback re-ships layouts)
+        assert blk2 is blk1 and not gathered and not reused
+        store.touch([r.rid], epoch=3)
+        assert store.version_of(r.rid) == 3
+        assert store.peek(r, "img", "data") is None   # superseded key gone
+        blk3, reused, gathered = self.fetch(store, r, value=2.0)
+        assert gathered and not reused and blk3 is not blk1
+        # copy-on-write: the old object survives for holders, unmodified
+        assert float(blk1.host[0, 0]) == 1.0
+
+    def test_lineage_signature(self):
+        store = BlockStore(cap=8)
+        regs = [Region(1, b"", b"m"), Region(2, b"m", None)]
+        assert store.lineage(regs) == ((1, 0), (2, 0))
+        store.touch([2], epoch=5)
+        assert store.lineage(regs) == ((1, 0), (2, 5))
+
+    def test_block_host_is_immutable(self):
+        store = BlockStore(cap=8)
+        blk, _, _ = self.fetch(store, self.region())
+        with pytest.raises(ValueError):
+            blk.host[0, 0] = 9.0
+
+
+# ----------------------------------------------------------------------
+# acceptance oracle 1: remove re-transfers only the touched region
+# ----------------------------------------------------------------------
+
+class TestRemoveReusesCleanBlocks:
+    def test_repeat_stats_after_remove_retransfers_one_region(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        q = s.scan().map(MeanProgram())
+        rep1 = q.stats()
+        R = len(t.regions)
+        assert rep1.query.blocks_total == R == 5
+        assert rep1.query.blocks_transferred == R    # cold store
+        assert rep1.query.gather_count == R
+        rep1.query.check_block_invariant()
+
+        before = {r.rid: s.blocks.peek(r, "img", "data") for r in t.regions}
+        assert all(b is not None for b in before.values())
+
+        doomed = b"c0000"
+        assert s.remove(rowkey=doomed) == 1
+        rep2 = q.stats()
+        # the acceptance criterion: blocks_reused >= regions - 1
+        assert rep2.query.blocks_total == R
+        assert rep2.query.blocks_reused == R - 1
+        assert rep2.query.blocks_transferred == 1
+        assert rep2.query.gather_count == 1
+        rep2.query.check_block_invariant()
+
+        # block identity: every untouched region's block — host AND device
+        # arrays — is the SAME object; only the removed row's region re-made
+        for r in t.regions:
+            blk = s.blocks.peek(r, "img", "data")
+            if r.contains(doomed):
+                assert blk is not before[r.rid]
+                assert blk.rows == before[r.rid].rows - 1
+            else:
+                assert blk is before[r.rid]
+                assert blk.device is before[r.rid].device
+                assert blk.host is before[r.rid].host
+
+        np.testing.assert_allclose(
+            np.asarray(q.collect()[0]), t.column("img", "data").mean(0),
+            atol=1e-5)
+
+    def test_upload_into_one_region_keeps_other_blocks(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        s.run(MeanProgram())
+        before = {r.rid: s.blocks.peek(r, "img", "data") for r in t.regions}
+        s.upload(["d9999"], batch(["d9999"], seed=7))
+        _, rep = s.run(MeanProgram())
+        assert rep.query.blocks_reused == len(t.regions) - 1
+        for r in t.regions:
+            blk = s.blocks.peek(r, "img", "data")
+            if r.contains(b"d9999"):
+                assert blk is not before[r.rid]
+            else:
+                assert blk is before[r.rid]
+
+
+# ----------------------------------------------------------------------
+# acceptance oracle 2: overlapping pruned scans share gathered blocks
+# ----------------------------------------------------------------------
+
+class TestOverlappingScansShareBlocks:
+    def test_second_plan_gathers_only_new_blocks(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        data = t.column("img", "data")
+
+        ra = s.scan(start="a", stop="c").map(MeanProgram()).stats()
+        assert ra.query.regions_scanned == 2          # regions a, b
+        assert ra.query.gather_count == 2
+        ra.query.check_block_invariant()
+        region_b = t.regions.region_for(b"b0000")
+        shared = s.blocks.peek(region_b, "img", "data")
+
+        rb = s.scan(start="b", stop="e").map(MeanProgram()).stats()
+        assert rb.query.regions_scanned == 3          # regions b, c, d
+        assert rb.query.blocks_total == 3
+        assert rb.query.blocks_reused == 1            # b, from plan A
+        assert rb.query.gather_count == 2             # only c and d
+        rb.query.check_block_invariant()
+        assert s.blocks.peek(region_b, "img", "data") is shared
+
+        lo, hi = t.row_range(b"b", b"e")
+        res, _ = s.scan(start="b", stop="e").map(MeanProgram()).collect()
+        np.testing.assert_allclose(np.asarray(res), data[lo:hi].mean(0),
+                                   atol=1e-5)
+
+    def test_different_predicates_share_the_same_blocks(self):
+        t = make_table(per=16, seed=3)
+        s = GridSession(t, default_eta=4)
+        p1 = age_sex_predicate(20, 40, None)
+        p2 = age_sex_predicate(40, 70, 0)
+        r1 = (s.scan(prefix="b").where(p1, ["age", "sex"])
+              .map(MeanProgram()).stats())
+        assert r1.query.gather_count == 1
+        r2 = (s.scan(prefix="b").where(p2, ["age", "sex"])
+              .map(MeanProgram()).stats())
+        # same region subset, different predicate: zero new gathers
+        assert r2.query.gather_count == 0
+        assert r2.query.blocks_reused == r2.query.blocks_total == 1
+        mask = p2({"age": t.column("idx", "age"),
+                   "sex": t.column("idx", "sex")})
+        mask &= np.char.startswith(t.keys.astype("S1"), b"b")
+        if mask.any():
+            res, _ = (s.scan(prefix="b").where(p2, ["age", "sex"])
+                      .map(MeanProgram()).collect())
+            np.testing.assert_allclose(
+                np.asarray(res), t.column("img", "data")[mask].mean(0),
+                atol=1e-5)
+
+    def test_scan_plan_survives_unrelated_mutation(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        q = s.scan(prefix="a").map(MeanProgram())
+        r1 = q.stats()
+        assert not r1.plan_cache_hit
+        s.remove(rowkey=b"e0000")       # touches only region e
+        r2 = q.stats()                  # epoch changed -> memo miss, BUT
+        assert r2.plan_cache_hit        # lineage of region a is unchanged
+        assert r2.query.blocks_reused == r2.query.blocks_total
+        assert r2.query.gather_count == 0
+        # a split-free upload elsewhere doesn't bump placement.version, so
+        # the bound plan keeps surviving across upload epochs too
+        s.upload(["e9999"], batch(["e9999"], seed=13))
+        r3 = q.stats()
+        assert r3.plan_cache_hit
+        np.testing.assert_allclose(
+            np.asarray(q.collect()[0]),
+            t.column("img", "data")[:8].mean(0), atol=1e-5)
+
+
+class TestStaleStateReleased:
+    def test_split_parent_blocks_are_dropped(self):
+        t = make_table(groups=("a", "b"), per=8)
+        s = GridSession(t, default_eta=4)
+        s.run(MeanProgram())                   # blocks for both regions
+        # shrink the split threshold so the next upload splits region b
+        t.split_policy.max_region_bytes = int(40e6)
+        t.regions.policy.max_region_bytes = int(40e6)
+        keys = [f"b9{i:03d}" for i in range(8)]
+        regions_before = len(t.regions)
+        s.upload(keys, batch(keys, seed=11))
+        assert len(t.regions) > regions_before, "upload must have split"
+        live = {r.rid for r in t.regions}
+        stored = {k[0][0] for k in s.blocks._blocks.keys()}
+        assert stored <= live, "split parents' blocks must be forgotten"
+        res, rep = s.run(MeanProgram())
+        rep.query.check_block_invariant()
+        np.testing.assert_allclose(
+            np.asarray(res), t.column("img", "data").mean(0), atol=1e-5)
+
+    def test_dead_scan_plans_evicted_on_their_regions_mutation(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        s.scan(prefix="b").map(MeanProgram()).stats()
+        s.scan(prefix="d").map(MeanProgram()).stats()
+        assert len(s._scan_plans) == 2
+        s.remove(rowkey=b"b0000")       # kills ONLY the b-plan's lineage
+        assert len(s._scan_plans) == 1
+        s.remove(rowkey=b"d0000")
+        assert len(s._scan_plans) == 0
+
+
+# ----------------------------------------------------------------------
+# LRU caps: eviction + loss-free re-materialization
+# ----------------------------------------------------------------------
+
+class TestCacheCaps:
+    def test_block_cache_eviction_rematerializes(self):
+        t = make_table()                       # 5 regions
+        s = GridSession(t, default_eta=4, block_cache_cap=2)
+        res, rep = s.run(MeanProgram())
+        assert s.blocks.evictions >= 3         # 5 blocks through a 2-cap
+        assert len(s.blocks) <= 2
+        np.testing.assert_allclose(
+            np.asarray(res), t.column("img", "data").mean(0), atol=1e-5)
+        # mutate, then rebuild: evicted blocks re-gather losslessly
+        s.upload(["a9999"], batch(["a9999"], seed=5))
+        res2, rep2 = s.run(MeanProgram())
+        rep2.query.check_block_invariant()
+        assert rep2.query.gather_count >= 1
+        np.testing.assert_allclose(
+            np.asarray(res2), t.column("img", "data").mean(0), atol=1e-5)
+
+    def test_plan_cache_eviction_rematerializes_without_regather(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4, plan_cache_cap=1)
+        qa = s.scan(prefix="a").map(MeanProgram())
+        qb = s.scan(prefix="b").map(MeanProgram())
+        qa.stats()
+        qb.stats()                       # evicts qa's bound plan
+        misses = s.metrics.plan_misses
+        r = s.scan(prefix="a").map(MeanProgram()).stats()
+        assert not r.plan_cache_hit
+        assert s.metrics.plan_misses == misses + 1
+        # the PLAN re-binds, but its blocks are still store-resident
+        assert r.query.gather_count == 0
+        assert r.query.blocks_reused == r.query.blocks_total == 1
+        np.testing.assert_allclose(
+            np.asarray(s.scan(prefix="a").map(MeanProgram()).collect()[0]),
+            t.column("img", "data")[:8].mean(0), atol=1e-5)
+
+    def test_caps_are_configurable(self):
+        s = GridSession(make_table(), plan_cache_cap=7, block_cache_cap=11)
+        assert s._scan_plans.cap == 7 and s._plans.cap == 7
+        assert s.blocks.cap == 11
+
+    def test_engine_executable_cache_is_bounded(self):
+        t = make_table(per=4)
+        s = GridSession(t, default_eta=4)
+        s.engine._compiled.cap = 1
+        s.run(MeanProgram())
+        c1 = s.engine.compile_count
+        s.run(VarianceProgram())         # evicts the mean executable
+        s.run(MeanProgram())
+        assert s.engine.compile_count >= c1 + 1  # recompiled after evict
+        np.testing.assert_allclose(
+            np.asarray(s.run(MeanProgram())[0]),
+            t.column("img", "data").mean(0), atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# rebalance re-homes blocks without re-reading the table (multi-node)
+# ----------------------------------------------------------------------
+
+class TestRebalanceRehomesBlocks:
+    def test_rebalance_moves_blocks_not_bytes_4dev(self):
+        import os
+        import subprocess
+        import sys
+        import textwrap
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        env["PYTHONPATH"] = os.path.join(repo, "src")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        body = """
+            import numpy as np
+            from repro.core.balancer import NodeSpec
+            from repro.core.grid import GridSession
+            from repro.core.regions import HierarchicalSplitPolicy
+            from repro.core.stats import MeanProgram
+            from repro.core.table import make_mip_table
+
+            rng = np.random.default_rng(0)
+            t = make_mip_table(
+                payload_shape=(2,),
+                split_policy=HierarchicalSplitPolicy(max_region_bytes=int(50e6)))
+            n = 128
+            t.upload([f"r{i:05d}" for i in range(n)],
+                     {"img": {"data": rng.normal(size=(n, 2)).astype(np.float32)},
+                      "idx": {"size": rng.integers(6e6, 2e7, n)}})
+            s = GridSession(t, nodes=[NodeSpec(i, cores=1, mips=1.0)
+                                      for i in range(4)])
+            s.run(MeanProgram())
+            # skew powers so the balancer must move regions
+            moved = s.rebalance(nodes=[NodeSpec(0, cores=1, mips=4.0)]
+                                + [NodeSpec(i, cores=1, mips=1.0)
+                                   for i in range(1, 4)],
+                                tolerance=0.01)
+            assert moved, "power skew must force region moves"
+            res, rep = s.run(MeanProgram())
+            q = rep.query
+            # moved regions re-ship their cached host blocks; NOTHING is
+            # re-read from the table (content versions are untouched)
+            assert q.gather_count == 0, q
+            assert q.blocks_transferred == len(moved), (q, moved)
+            assert q.blocks_reused == q.blocks_total - len(moved), q
+            np.testing.assert_allclose(np.asarray(res),
+                                       t.column("img", "data").mean(0),
+                                       atol=1e-5)
+            print("REBALANCE_BLOCKS_OK", len(moved))
+        """
+        proc = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(body)],
+            capture_output=True, text=True, env=env, timeout=600)
+        assert proc.returncode == 0, (
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+        assert "REBALANCE_BLOCKS_OK" in proc.stdout

@@ -1,0 +1,340 @@
+"""Stateful differential harness: GridSession vs a plain-NumPy oracle.
+
+Random interleavings of ``upload`` / ``remove`` / ``rebalance`` /
+``scan().where().map().reduce()`` run against both the real backend (blocks,
+layouts, plan caches, engine) and a dict-of-rows NumPy mirror; every
+``.collect()``/``.stats()`` must agree, and after every step the harness
+asserts the structural invariants:
+
+- ``blocks_reused + blocks_transferred == blocks_total`` on every executed
+  plan (the copy-on-write accounting can never leak or double-count a block);
+- mutation epochs are monotone, advancing exactly when rows change;
+- the table's region/rowkey invariants hold (strictly sorted keys, regions
+  tile the keyspace).
+
+The same :class:`DifferentialDriver` drives two entry points: a Hypothesis
+``RuleBasedStateMachine`` (shrinking, CI profile in ``conftest.py``) and a
+seeded random walk that needs no third-party package — the walk covers the
+``>= 200`` interleaved steps the PR acceptance asks for even where
+Hypothesis isn't installed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.grid import GridSession
+from repro.core.query import age_sex_predicate
+from repro.core.regions import HierarchicalSplitPolicy
+from repro.core.stats import CountProgram, MeanProgram, VarianceProgram
+from repro.core.table import ColumnSpec, make_mip_table
+
+try:
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine,
+        invariant,
+        rule,
+    )
+    HAVE_HYPOTHESIS = True
+except ImportError:           # container without hypothesis: fallback only
+    HAVE_HYPOTHESIS = False
+
+PAYLOAD = (2, 3)
+PREFIXES = "abcde"
+#: small region threshold so the walk triggers organic splits (13 MB mean
+#: logical row size -> a region splits after ~8 rows)
+SPLIT_BYTES = int(8 * 13e6)
+
+
+class DifferentialDriver:
+    """One live GridSession + its NumPy oracle + the op vocabulary."""
+
+    def __init__(self):
+        self.table = make_mip_table(
+            payload_shape=PAYLOAD,
+            extra_index_columns=[ColumnSpec("age", (), np.float32),
+                                 ColumnSpec("sex", (), np.int8)],
+            split_policy=HierarchicalSplitPolicy(max_region_bytes=SPLIT_BYTES),
+        )
+        self.session = GridSession(self.table, default_eta=4,
+                                   block_cache_cap=32)
+        # oracle: rowkey -> {column: value}; ALL query semantics re-derived
+        # from this dict with plain numpy
+        self.rows = {}
+        self.last_epoch = 0
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    # oracle helpers
+    # ------------------------------------------------------------------
+
+    def oracle_keys(self, prefix=b"", start=None, stop=None):
+        keys = [k for k in sorted(self.rows) if k.startswith(prefix)]
+        if start is not None:
+            keys = [k for k in keys if k >= start]
+        if stop is not None:
+            keys = [k for k in keys if k < stop]
+        return keys
+
+    def oracle_column(self, keys, col="img"):
+        if not keys:
+            shape = PAYLOAD if col == "img" else ()
+            return np.empty((0,) + shape, np.float32)
+        return np.stack([self.rows[k][col] for k in keys]).astype(np.float32)
+
+    def _batch(self, keys, rng):
+        n = len(keys)
+        return {
+            "img": {"data": rng.normal(size=(n,) + PAYLOAD)
+                    .astype(np.float32)},
+            "idx": {"size": rng.integers(6_000_000, 20_000_001, n),
+                    "age": rng.uniform(4, 80, n).astype(np.float32),
+                    "sex": rng.integers(0, 2, n).astype(np.int8)},
+        }
+
+    def _key_universe(self, rng, n):
+        picks = rng.integers(0, len(PREFIXES), n), rng.integers(0, 40, n)
+        return sorted({f"{PREFIXES[p]}{i:02d}".encode()
+                       for p, i in zip(*picks)})
+
+    # ------------------------------------------------------------------
+    # mutations (applied to both worlds, then cross-checked)
+    # ------------------------------------------------------------------
+
+    def op_upload(self, seed, mode="skip"):
+        rng = np.random.default_rng(seed)
+        keys = self._key_universe(rng, int(rng.integers(1, 5)))
+        data = self._batch(keys, rng)
+        written = self.session.upload(keys, data, on_duplicate=mode)
+        expect = 0
+        for i, k in enumerate(keys):
+            if k in self.rows and mode == "skip":
+                continue
+            self.rows[k] = {"img": data["img"]["data"][i],
+                            "age": data["idx"]["age"][i],
+                            "sex": data["idx"]["sex"][i]}
+            expect += 1
+        assert written == expect, (written, expect, keys)
+        self._after_mutation(changed=written > 0)
+
+    def op_remove_key(self, seed):
+        rng = np.random.default_rng(seed)
+        if not self.rows:
+            return
+        key = sorted(self.rows)[int(rng.integers(0, len(self.rows)))]
+        removed = self.session.remove(rowkey=key)
+        assert removed == 1, key
+        del self.rows[key]
+        self._after_mutation(changed=True)
+
+    def op_remove_range(self, seed):
+        rng = np.random.default_rng(seed)
+        a, b = self._key_universe(rng, 2)[:2], None
+        start = a[0]
+        stop = a[-1] if len(a) > 1 and a[-1] > a[0] else None
+        doomed = self.oracle_keys(start=start, stop=stop)
+        removed = self.session.remove(start=start, stop=stop)
+        assert removed == len(doomed), (start, stop, removed, doomed)
+        for k in doomed:
+            del self.rows[k]
+        self._after_mutation(changed=removed > 0)
+
+    def op_rebalance(self, seed):
+        moved = self.session.rebalance(tolerance=0.05)
+        # single-device runs never move; multi-device may. Either way the
+        # verbs must stay consistent afterwards:
+        self._after_mutation(changed=bool(moved))
+
+    # ------------------------------------------------------------------
+    # queries (differential checks)
+    # ------------------------------------------------------------------
+
+    def op_query_full(self, seed):
+        res, rep = self.session.run(MeanProgram())
+        self._check_report(rep)
+        keys = self.oracle_keys()
+        if keys:
+            np.testing.assert_allclose(
+                np.asarray(res), self.oracle_column(keys).mean(0), atol=3e-4)
+        else:
+            assert np.all(np.isfinite(np.asarray(res)))
+
+    def op_query_prefix(self, seed):
+        rng = np.random.default_rng(seed)
+        prefix = PREFIXES[int(rng.integers(0, len(PREFIXES)))].encode()
+        q = (self.session.scan(prefix=prefix).map(MeanProgram())
+             .map(VarianceProgram()).map(CountProgram()).reduce())
+        (mean, var, count), rep = q.collect()
+        self._check_report(rep)
+        keys = self.oracle_keys(prefix=prefix)
+        assert rep.query.rows_selected == len(keys)
+        # the fold itself must count exactly the masked-in slots — any
+        # padding/row-mask bug in the block assembly shows up here
+        assert int(count) == len(keys)
+        if keys:
+            ref = self.oracle_column(keys)
+            np.testing.assert_allclose(np.asarray(mean), ref.mean(0),
+                                       atol=3e-4)
+            np.testing.assert_allclose(np.asarray(var["var"]), ref.var(0),
+                                       atol=2e-3)
+
+    def op_query_predicate(self, seed):
+        rng = np.random.default_rng(seed)
+        lo = float(rng.uniform(4, 60))
+        pred = age_sex_predicate(lo, lo + 25, int(rng.integers(0, 2)))
+        res, rep = self.session.run_where(pred, MeanProgram(),
+                                          ["age", "sex"])
+        self._check_report(rep)
+        keys = self.oracle_keys()
+        if keys:
+            mask = pred({"age": self.oracle_column(keys, "age"),
+                         "sex": self.oracle_column(keys, "sex")})
+            assert rep.query.rows_selected == int(mask.sum())
+            if mask.any():
+                np.testing.assert_allclose(
+                    np.asarray(res),
+                    self.oracle_column(keys)[mask].mean(0), atol=3e-4)
+        else:
+            assert rep.query.rows_selected == 0
+
+    def op_collect_rows(self, seed):
+        rng = np.random.default_rng(seed)
+        prefix = PREFIXES[int(rng.integers(0, len(PREFIXES)))].encode()
+        (keys, cols), rep = (self.session.scan(prefix=prefix)
+                             .select("img:data").collect())
+        want = self.oracle_keys(prefix=prefix)
+        assert [bytes(k) for k in keys] == want
+        np.testing.assert_array_equal(cols["img:data"],
+                                      self.oracle_column(want))
+
+    # ------------------------------------------------------------------
+    # invariants
+    # ------------------------------------------------------------------
+
+    def _check_report(self, rep):
+        q = rep.query
+        q.check_block_invariant()   # reused + transferred == total
+        assert q.regions_scanned + q.regions_pruned == len(self.table.regions)
+        assert rep.epoch == self.session.epoch
+
+    def _after_mutation(self, changed: bool):
+        epoch = self.session.epoch
+        if changed:
+            assert epoch == self.last_epoch + 1, "epochs advance one-by-one"
+        else:
+            assert epoch == self.last_epoch, "no-op mutations keep the epoch"
+        self.last_epoch = epoch
+
+    def check_state(self):
+        assert self.session.epoch >= self.last_epoch
+        assert self.table.num_rows == len(self.rows)
+        self.table.check_invariants()
+        s = self.session.blocks.stats
+        assert s.hits + s.transfers >= s.gathers   # a gather always ships
+
+    OPS = ("upload", "upload_overwrite", "remove_key", "remove_range",
+           "rebalance", "query_full", "query_prefix", "query_predicate",
+           "collect_rows")
+
+    def apply(self, op: str, seed: int):
+        if op == "upload":
+            self.op_upload(seed)
+        elif op == "upload_overwrite":
+            self.op_upload(seed, mode="overwrite")
+        elif op == "remove_key":
+            self.op_remove_key(seed)
+        elif op == "remove_range":
+            self.op_remove_range(seed)
+        elif op == "rebalance":
+            self.op_rebalance(seed)
+        elif op == "query_full":
+            self.op_query_full(seed)
+        elif op == "query_prefix":
+            self.op_query_prefix(seed)
+        elif op == "query_predicate":
+            self.op_query_predicate(seed)
+        elif op == "collect_rows":
+            self.op_collect_rows(seed)
+        else:                            # pragma: no cover
+            raise AssertionError(op)
+        self.steps += 1
+        self.check_state()
+
+
+# ----------------------------------------------------------------------
+# entry point 1: seeded random walk (no third-party deps; always runs)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("walk_seed", [0, 1, 2])
+def test_differential_random_walk(walk_seed):
+    """>= 70 interleaved steps per seed (210 across the matrix), weighted
+    toward mutations early (grow state) and queries throughout."""
+    drv = DifferentialDriver()
+    rng = np.random.default_rng(walk_seed)
+    ops = list(DifferentialDriver.OPS)
+    weights = np.array([4, 2, 2, 1, 1, 2, 3, 2, 2], dtype=float)
+    weights /= weights.sum()
+    for _ in range(70):
+        op = rng.choice(ops, p=weights)
+        drv.apply(str(op), int(rng.integers(0, 2**31)))
+    assert drv.steps == 70
+    # the walk must actually have exercised the reuse machinery
+    assert drv.session.blocks.stats.hits > 0
+    assert drv.session.blocks.stats.gathers > 0
+
+
+# ----------------------------------------------------------------------
+# entry point 2: Hypothesis stateful machine (shrinks counterexamples)
+# ----------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    class GridDifferentialMachine(RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.drv = DifferentialDriver()
+
+        seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+        @rule(seed=seeds)
+        def upload(self, seed):
+            self.drv.op_upload(seed)
+
+        @rule(seed=seeds)
+        def upload_overwrite(self, seed):
+            self.drv.op_upload(seed, mode="overwrite")
+
+        @rule(seed=seeds)
+        def remove_key(self, seed):
+            self.drv.op_remove_key(seed)
+
+        @rule(seed=seeds)
+        def remove_range(self, seed):
+            self.drv.op_remove_range(seed)
+
+        @rule(seed=seeds)
+        def rebalance(self, seed):
+            self.drv.op_rebalance(seed)
+
+        @rule(seed=seeds)
+        def query_full(self, seed):
+            self.drv.op_query_full(seed)
+
+        @rule(seed=seeds)
+        def query_prefix(self, seed):
+            self.drv.op_query_prefix(seed)
+
+        @rule(seed=seeds)
+        def query_predicate(self, seed):
+            self.drv.op_query_predicate(seed)
+
+        @rule(seed=seeds)
+        def collect_rows(self, seed):
+            self.drv.op_collect_rows(seed)
+
+        @invariant()
+        def state_consistent(self):
+            self.drv.check_state()
+
+    # step count / example budget come from the ci/dev profiles registered
+    # in conftest.py — no override here, or the profile knob goes dead
+    TestGridDifferential = GridDifferentialMachine.TestCase
