@@ -1,0 +1,182 @@
+"""Block-granular fold engine microbench — the PR's wall-clock acceptance.
+
+Three query regimes at the 16-region smoke size, against the PR-3 baseline
+(full re-fold of the assembled ``[D, C, ...]`` layout, which is what a warm
+plan-cache hit used to execute):
+
+1. **cold**  — first ``.stats()``: gather + fold every block, compile;
+2. **warm**  — repeat on an unchanged epoch: result-cache hit, ZERO rows
+   folded (``QueryStats.rows_folded == 0``);
+3. **one-dirty-region** — overwrite one row, repeat: only that region's
+   block re-folds and re-merges.
+
+Plus the fused-program CSE comparison: FLOPs (XLA ``cost_analysis`` of the
+per-block fold executable) and wall time of a CSE'd vs naive fused
+mean+variance+moments fold over the same chunk stream.
+
+Artifact: ``BENCH_fold_engine.json`` via benchmarks/run.py (also in
+``--smoke``; CI uploads it).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grid import GridSession
+from repro.core.mapreduce import MapReduceEngine
+from repro.core.placement import Placement
+from repro.core.stats import (
+    FusedProgram,
+    MeanProgram,
+    MomentsProgram,
+    VarianceProgram,
+)
+from repro.core.table import make_mip_table
+from repro.utils import make_mesh
+
+N_ROWS = 512
+N_REGIONS = 16
+PAYLOAD = (32, 32)
+ETA = 8
+REPS = 15
+
+
+def _make_table(seed=0):
+    rng = np.random.default_rng(seed)
+    groups = [f"g{i:02d}" for i in range(N_REGIONS)]
+    t = make_mip_table(payload_shape=PAYLOAD, presplit_keys=groups[1:])
+    per = N_ROWS // N_REGIONS
+    keys = [f"{g}x{i:04d}" for g in groups for i in range(per)]
+    n = len(keys)
+    t.upload(keys, {
+        "img": {"data": rng.normal(size=(n,) + PAYLOAD).astype(np.float32)},
+        "idx": {"size": rng.integers(6_000_000, 20_000_001, n)}})
+    return t
+
+
+def _timed(fn, reps=REPS):
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def run(verbose: bool = True):
+    program = MeanProgram()
+    rng = np.random.default_rng(1)
+    t = _make_table()
+    s = GridSession(t, default_eta=ETA)
+
+    # --- cold: gather + fold + compile everything ----------------------
+    t0 = time.perf_counter()
+    res, rep_cold = s.run(program)
+    jax.block_until_ready(res)
+    cold_s = time.perf_counter() - t0
+    assert rep_cold.query.rows_folded == N_ROWS
+
+    # --- warm: repeat .stats() on the unchanged epoch -------------------
+    def warm():
+        r, rep = s.run(program)
+        assert rep.query.rows_folded == 0, rep.query          # acceptance
+        assert rep.query.partials_reused == rep.query.partials_total
+        return r
+    warm_s = _timed(warm)
+    _, rep_warm = s.run(program)
+
+    # --- PR-3 baseline: full re-fold of the assembled layout ------------
+    # (what a warm plan-cache hit executed before this PR: the layout and
+    # executable are cached, but every row re-folds every call)
+    vals, valid = s.placement.put_column(s.mesh, "img", "data",
+                                         chunk_size=ETA)
+    sh = Placement.data_sharding(s.mesh, s.data_axis)
+    vals = jax.device_put(vals, sh)
+    dvalid = jax.device_put(valid, sh)
+    baseline_eng = MapReduceEngine(s.mesh)
+    baseline_eng.run(program, vals, dvalid, ETA)              # compile
+    refold_s = _timed(
+        lambda: baseline_eng.run(program, vals, dvalid, ETA)[0])
+
+    # --- one dirty region: overwrite a row, re-fold only its block ------
+    group_keys = [f"g07x{i:04d}" for i in range(N_ROWS // N_REGIONS)]
+    dirty_samples, dirty_rows, dirty_reused = [], 0, 0
+    for i in range(REPS):
+        key = group_keys[i % len(group_keys)]
+        s.upload([key], {
+            "img": {"data": rng.normal(size=(1,) + PAYLOAD)
+                    .astype(np.float32)},
+            "idx": {"size": rng.integers(6_000_000, 20_000_001, 1)}},
+            on_duplicate="overwrite")
+        t0 = time.perf_counter()
+        r, rep = s.run(program)
+        jax.block_until_ready(r)
+        dirty_samples.append(time.perf_counter() - t0)
+        q = rep.query
+        assert q.partials_reused == q.partials_total - 1, q   # acceptance
+        dirty_rows, dirty_reused = q.rows_folded, q.partials_reused
+    dirty_s = float(np.median(dirty_samples))
+
+    warm_speedup = refold_s / max(warm_s, 1e-9)
+    assert warm_speedup >= 3.0, (warm_s, refold_s)            # acceptance
+
+    # --- fused CSE vs naive fusion: FLOPs + wall ------------------------
+    members = (MeanProgram(), VarianceProgram(), MomentsProgram())
+    cse, naive = FusedProgram(members), FusedProgram(members, cse=False)
+    eng = MapReduceEngine(make_mesh((1,), ("data",)))
+    block_rows = N_ROWS // N_REGIONS
+    cost_cse = eng.fold_cost(cse, block_rows, PAYLOAD, jnp.float32, ETA)
+    cost_naive = eng.fold_cost(naive, block_rows, PAYLOAD, jnp.float32, ETA)
+    big = jnp.asarray(rng.normal(size=(256,) + PAYLOAD).astype(np.float32))
+    for p in (cse, naive):
+        eng.fold_block(p, big, None, ETA, PAYLOAD, np.float32)  # compile
+    cse_fold_s = _timed(
+        lambda: eng.fold_block(cse, big, None, ETA, PAYLOAD, np.float32))
+    naive_fold_s = _timed(
+        lambda: eng.fold_block(naive, big, None, ETA, PAYLOAD, np.float32))
+
+    out = {
+        "n_rows": N_ROWS,
+        "n_regions": len(t.regions),
+        "payload_bytes_per_row": int(np.prod(PAYLOAD)) * 4,
+        "eta": ETA,
+        "cold_s": cold_s,
+        "warm_s": warm_s,
+        "pr3_full_refold_s": refold_s,
+        "warm_speedup_vs_refold": warm_speedup,
+        "warm_rows_folded": rep_warm.query.rows_folded,
+        "warm_partials_reused": rep_warm.query.partials_reused,
+        "warm_partials_total": rep_warm.query.partials_total,
+        "one_dirty_region_s": dirty_s,
+        "dirty_rows_folded": dirty_rows,
+        "dirty_partials_reused": dirty_reused,
+        "dirty_speedup_vs_refold": refold_s / max(dirty_s, 1e-9),
+        "cse_fold_flops": cost_cse["flops"],
+        "naive_fold_flops": cost_naive["flops"],
+        "cse_flop_ratio": cost_cse["flops"] / max(cost_naive["flops"], 1e-9),
+        "cse_fold_s": cse_fold_s,
+        "naive_fold_s": naive_fold_s,
+        "cse_wall_speedup": naive_fold_s / max(cse_fold_s, 1e-9),
+    }
+    if verbose:
+        print(f"cold={cold_s*1e3:.1f}ms warm={warm_s*1e3:.2f}ms "
+              f"pr3-refold={refold_s*1e3:.2f}ms "
+              f"({warm_speedup:.0f}x warm win, rows_folded=0)")
+        print(f"one-dirty-region={dirty_s*1e3:.2f}ms "
+              f"(refolds {dirty_rows} rows, reuses "
+              f"{dirty_reused}/{rep_warm.query.partials_total} partials)")
+        print(f"fused CSE: {cost_cse['flops']:.0f} vs "
+              f"{cost_naive['flops']:.0f} flops/block "
+              f"({out['cse_flop_ratio']:.2f}x), wall "
+              f"{cse_fold_s*1e3:.2f} vs {naive_fold_s*1e3:.2f} ms "
+              f"({out['cse_wall_speedup']:.2f}x)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -47,6 +47,32 @@ def run(verbose: bool = True):
                  f"maxerr={err:.1e};bytes={x.nbytes/1e6:.0f}MB;"
                  f"flops={2*R*F:.2e}"))
 
+    # pallas map phase wired into the grid: GridSession.run(impl="pallas")
+    # vs the jnp reference fold over the same 4-region table
+    from repro.core.grid import GridSession
+    from repro.core.stats import MeanProgram
+    from repro.core.table import make_mip_table
+
+    t = make_mip_table(payload_shape=(16, 16),
+                       presplit_keys=["g1", "g2", "g3"])
+    gk = [f"g{i % 4}x{i:04d}" for i in range(64)]
+    t.upload(sorted(gk), {
+        "img": {"data": rng.normal(size=(64, 16, 16)).astype(np.float32)},
+        "idx": {"size": rng.integers(6_000_000, 20_000_001, 64)}})
+    sess = GridSession(t, default_eta=8)
+    ref_res, _ = sess.run(MeanProgram(), impl="ref")
+    pal_res, _ = sess.run(MeanProgram(), impl="pallas")
+    err = float(jnp.abs(jnp.asarray(pal_res) - jnp.asarray(ref_res)).max())
+    sess.blocks.clear_partials()
+
+    def grid_pallas():
+        sess._results.clear()
+        sess.blocks.clear_partials()
+        return sess.run(MeanProgram(), impl="pallas")[0]
+    us = _time(lambda: grid_pallas())
+    rows.append(("grid_map_phase_pallas_64x16x16", us,
+                 f"maxerr_vs_ref={err:.1e};regions={len(t.regions)}"))
+
     # flash attention: one 128-block tile at head_dim 128
     B, H, S, D = 1, 4, 256, 128
     q = jnp.asarray(rng.normal(size=(B, H, S, D)).astype(np.float32))

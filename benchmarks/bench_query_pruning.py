@@ -70,8 +70,8 @@ def _time_plans(session, reps=REPS, **make_plans):
     samples = {name: [] for name in make_plans}
     for _ in range(reps):
         for name, make_plan in make_plans.items():
-            session._scan_plans.clear()         # cold layout, warm engine
-            session._plans.clear()
+            session._results.clear()            # cold results + partials,
+            session.blocks.clear_partials()     # warm engine executables
             t0 = time.perf_counter()
             make_plan().collect()
             samples[name].append(time.perf_counter() - t0)

@@ -8,7 +8,8 @@ summary EXPERIMENTS.md quotes, and writes one JSON artifact per bench
     PYTHONPATH=src python -m benchmarks.run --smoke    # CI-fast subset
 
 ``--smoke`` runs every artifact-emitting bench except the table-scheme
-sweep and the roofline — CI uploads the JSON files from each run.
+sweep and the roofline (balancer, chunk model, kernels, query pruning,
+blockstore, fold engine) — CI uploads the JSON files from each run.
 """
 
 from __future__ import annotations
@@ -107,6 +108,18 @@ def run_blockstore() -> None:
         summarize)
 
 
+def run_fold_engine() -> None:
+    from benchmarks import bench_fold_engine
+
+    _run_bench(
+        "fold_engine",
+        "[PR 4] Block-granular fold engine: partial cache + fused CSE",
+        bench_fold_engine.run,
+        lambda b: (f"warm_x={b['warm_speedup_vs_refold']:.0f};"
+                   f"dirty_rows={b['dirty_rows_folded']}/{b['n_rows']};"
+                   f"cse_flops={b['cse_flop_ratio']:.2f}x"))
+
+
 def run_kernels() -> None:
     from benchmarks import bench_kernels
 
@@ -137,6 +150,7 @@ def main() -> None:
         run_kernels()
         run_query_pruning()
         run_blockstore()
+        run_fold_engine()
         print("\nsmoke benchmarks complete")
         return
 
@@ -147,6 +161,7 @@ def main() -> None:
     run_table_scheme()
     run_query_pruning()
     run_blockstore()
+    run_fold_engine()
     run_kernels()
 
     print("\n--- Roofline (single-pod dry-run artifacts) ---")

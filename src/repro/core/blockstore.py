@@ -25,11 +25,19 @@ materialized once on the device that owns the region.  Blocks are
   the host→device boundary once per (content, owner device), not once per
   plan or per epoch.
 
-The store is storage + versioning only: *gathering* a block from the table
-and choosing its owner device stay with :class:`~repro.core.grid.GridSession`,
-which owns placement.  Capacity is bounded by an :class:`LRUCache`; an
-evicted block is simply re-gathered on next use (a regression test asserts
-re-materialization is loss-free).
+Stacked on the payload blocks is the **partial cache**: each block's
+MapReduce fold result (one tiny accumulator pytree), keyed ``(block
+lineage, program, row-mask signature, η)``.  Content addressing carries
+over — a mutation's version bump invalidates a block's partials with it,
+while every other partial survives to be *merged* instead of re-folded.
+This is what makes a repeat query fold zero payload rows.
+
+The store is storage + versioning only: *gathering* a block from the table,
+choosing its owner device, and *folding* partials stay with
+:class:`~repro.core.grid.GridSession` / the engine, which own placement and
+compute.  Capacity is bounded by :class:`LRUCache` instances; an evicted
+block is simply re-gathered — and an evicted partial re-folded — on next
+use (regression tests assert re-materialization is loss-free).
 """
 
 from __future__ import annotations
@@ -141,6 +149,9 @@ class BlockStoreStats:
     transfers: int = 0      # host→device block transfers (device_put calls)
     hits: int = 0           # requests served by a resident current block
     touches: int = 0        # region versions bumped by mutations
+    host_reads: int = 0     # host-only fetches that re-read the table
+    partial_hits: int = 0   # per-block fold partials served from the cache
+    folds: int = 0          # per-block fold partials computed and stored
 
 
 class BlockStore:
@@ -162,9 +173,18 @@ class BlockStore:
     carried on ``QueryStats``.
     """
 
-    def __init__(self, cap: int = 256):
+    def __init__(self, cap: int = 256, partial_cap: int = 1024):
         self.stats = BlockStoreStats()
         self._blocks: LRUCache = LRUCache(cap)
+        # per-block fold partials, keyed (BlockKey, program, mask sig, eta):
+        # the compute-side cache that lets a repeat query fold zero rows.
+        # Partials are tiny (one accumulator pytree per block), so their cap
+        # is several times the block cap; an evicted partial just re-folds.
+        self._partials: LRUCache = LRUCache(
+            partial_cap, on_evict=lambda k, v: self._unindex_partial(k))
+        # (rid, version) -> live partial count: keeps has_partials O(1)
+        # (it runs once per surviving region on every cold selective scan)
+        self._partial_index: Dict[Tuple[int, int], int] = {}
         # region id -> mutation epoch that last changed its content
         self._versions: Dict[int, int] = {}
 
@@ -196,6 +216,13 @@ class BlockStore:
                   if k[0][0] in touched and k[3] != self._versions[k[0][0]]]
         for k in doomed:
             self._blocks.pop(k)
+        # superseded fold partials are as dead as their blocks: the partial
+        # key embeds the block version, so they can never hit again
+        doomed_p = [k for k in self._partials.keys()
+                    if k[0][0][0] in touched
+                    and k[0][3] != self._versions[k[0][0][0]]]
+        for k in doomed_p:
+            self._pop_partial(k)
 
     def drop_regions(self, rids: Iterable[int]) -> None:
         """Forget regions that no longer exist (split parents): their rids
@@ -206,6 +233,9 @@ class BlockStore:
             return
         for k in [k for k in self._blocks.keys() if k[0][0] in doomed_rids]:
             self._blocks.pop(k)
+        for k in [k for k in self._partials.keys()
+                  if k[0][0][0] in doomed_rids]:
+            self._pop_partial(k)
         for rid in doomed_rids:
             self._versions.pop(rid, None)
 
@@ -287,6 +317,91 @@ class BlockStore:
         self._blocks.put(key, blk)
         return blk, False, gathered
 
+    def fetch_host(
+        self,
+        region: Region,
+        family: str,
+        qualifier: str,
+        gather_host: Callable[[], np.ndarray],
+    ) -> Tuple[DeviceBlock, bool]:
+        """Current-version host payload WITHOUT device commitment — the
+        retrieve path.  Returns ``(block, gathered)``; a later :meth:`fetch`
+        for the fold path commits the same block to its owner device, so
+        retrieve-heavy workloads and folds share one gather per content.
+        """
+        key = self.key_of(region, family, qualifier)
+        blk = self._blocks.get(key)
+        if blk is not None:
+            self.stats.hits += 1
+            return blk, False
+        host = np.ascontiguousarray(gather_host())
+        host.flags.writeable = False
+        blk = DeviceBlock(
+            rid=region.rid, family=family, qualifier=qualifier,
+            version=key[3], rows=int(host.shape[0]),
+            nbytes=int(host.nbytes), host=host,
+        )
+        self.stats.gathers += 1
+        self.stats.host_reads += 1
+        self._blocks.put(key, blk)
+        return blk, True
+
+    # ------------------------------------------------------------------
+    # fold partials (the compute-side cache of the block-granular engine)
+    # ------------------------------------------------------------------
+
+    def partial_key(self, region: Region, family: str, qualifier: str,
+                    program_key: Tuple, mask_sig: str, eta: int) -> Tuple:
+        """The content address of one block's fold partial: block lineage
+        (signature + version) × program × row-mask signature × η.  Any
+        mutation to the region bumps the embedded version; any change to
+        the selected-row subset changes ``mask_sig`` — either way the key
+        becomes unmatchable and the partial re-folds."""
+        return (self.key_of(region, family, qualifier),
+                program_key, mask_sig, int(eta))
+
+    @staticmethod
+    def _partial_rid_version(key: Tuple) -> Tuple[int, int]:
+        return key[0][0][0], key[0][3]
+
+    def _unindex_partial(self, key: Tuple) -> None:
+        k = self._partial_rid_version(key)
+        n = self._partial_index.get(k, 0) - 1
+        if n <= 0:
+            self._partial_index.pop(k, None)
+        else:
+            self._partial_index[k] = n
+
+    def _pop_partial(self, key: Tuple) -> None:
+        if self._partials.pop(key) is not None:
+            self._unindex_partial(key)
+
+    def get_partial(self, key: Tuple):
+        p = self._partials.get(key)
+        if p is not None:
+            self.stats.partial_hits += 1
+        return p
+
+    def put_partial(self, key: Tuple, value) -> None:
+        self.stats.folds += 1
+        if key not in self._partials:
+            k = self._partial_rid_version(key)
+            self._partial_index[k] = self._partial_index.get(k, 0) + 1
+        self._partials.put(key, value)
+
+    def has_partials(self, rid: int) -> bool:
+        """Any cached partial for the region's current content (a reuse
+        signal the adaptive gather consults before going compact)."""
+        return (rid, self.version_of(rid)) in self._partial_index
+
+    def clear_partials(self) -> None:
+        self._partials.clear()
+        self._partial_index.clear()
+
+    @property
+    def partial_count(self) -> int:
+        return len(self._partials)
+
     # ------------------------------------------------------------------
     # diagnostics
     # ------------------------------------------------------------------
@@ -306,4 +421,6 @@ class BlockStore:
         return (f"BlockStore({len(self)}/{self.cap} blocks, "
                 f"{self.resident_nbytes()} bytes; {s.hits} hits, "
                 f"{s.gathers} gathers, {s.transfers} transfers, "
-                f"{self.evictions} evictions)")
+                f"{self.evictions} evictions; "
+                f"{self.partial_count} partials, {s.partial_hits} partial "
+                f"hits, {s.folds} folds)")

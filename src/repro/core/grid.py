@@ -25,42 +25,50 @@ lifecycle and exposes the five verbs:
 
 Beneath every executed plan sits the :class:`~repro.core.blockstore
 .BlockStore`: a content-addressed, copy-on-write cache of per-region device
-blocks keyed by ``(region signature, column, epoch-lineage)``.  Four
-properties make mutation cheap and repeated compute fast:
+blocks keyed by ``(region signature, column, epoch-lineage)`` — and, stacked
+on it, the **block-granular fold engine**.  Compute plans never assemble a
+monolithic ``[D, C, ...]`` layout: each surviving block folds independently
+on its owner device (:meth:`MapReduceEngine.fold_block`), the tiny partials
+merge+finalize in one jitted reduce, and three content-addressed cache
+levels make repeated compute collapse:
 
-1. **Mutation epochs + block lineage.**  Every mutation advances an epoch
-   and bumps *only the touched regions'* block versions.  A layout for epoch
-   N+1 structurally shares every clean region's block with epoch N — no
-   re-pad, no re-``device_put``; an upload into one region re-gathers one
-   region's block and re-assembles one device's shard, not the world.
-2. **Cross-plan block sharing.**  Pruned-scan plans look blocks up in the
-   store before gathering, so two overlapping plans (same region subset,
-   different predicates or ranges) ship the shared regions once.  The
-   ``QueryStats`` oracles ``blocks_reused`` / ``blocks_transferred`` /
-   ``gather_count`` make both reuse paths observable.
-3. **Compiled-plan caches.**  Whole-table plans are keyed by ``(program,
-   mesh shape, η, epoch)``; pruned plans by the block lineage of their
-   region subset, so they *survive* mutations that touch other regions.
-   Either way the jitted ``shard_map`` executable (shape-keyed inside
-   :class:`MapReduceEngine`) is reused unless the layout's shape changed.
-   All three caches (plans, blocks, executables) are LRU-capped so
-   long-lived sessions stay memory-bounded.
-4. **Pushdowns.**  Region pruning (two bisects over region start keys)
-   excludes non-matching regions before any bytes move; ``where`` plans
-   evaluate the predicate on the index family only (§2.3) and the fold
-   reads just the selected slots through a device-side row mask;
-   projection keeps unselected columns out of the layout entirely.
+1. **Partial cache** (in the BlockStore).  Each block's fold result is
+   cached under ``(block lineage, program, row-mask signature, η)``.  A
+   mutation bumps only the touched regions' versions, so a repeat query
+   re-folds exactly the dirty blocks and *merges* everything else; a repeat
+   query at an unchanged table folds **zero payload rows**.  Mask
+   signatures are content hashes — a range scan that exactly covers a
+   region shares partials with the full-table plan, and two predicates
+   selecting the same rows share partials too.
+2. **Result cache.**  The finalized answer is memoized under the plan's
+   full partial-key set: an identical re-execution returns without touching
+   blocks, partials, or the engine.  Entries die eagerly when a member
+   region's content changes and survive rebalances (the answer doesn't
+   depend on which device folded it).
+3. **Block cache.**  Blocks are fetched store-first only when a fold needs
+   payload, so overlapping plans, later epochs, and retrieves ship each
+   region's content once per (content, owner device).  The ``QueryStats``
+   oracles (``blocks_*``, ``partials_*``, ``rows_folded``, ``gather_path``)
+   make every level observable.
 
-On multi-chip meshes, dirty blocks transfer via per-shard ``device_put`` +
-``jax.make_array_from_single_device_arrays`` — the interconnect never
-carries clean blocks.  Meshes without a one-device-per-node data axis fall
-back to host-side assembly of the whole layout (blocks still dedupe the
-host gathers).
+Pushdowns still run before any bytes move: region pruning (two bisects over
+region start keys), index-family-only predicates (§2.3) folded through
+per-block row masks, and projection.  Cold low-selectivity one-shot scans
+take an **adaptive compact gather** (ship only the selected rows, cache
+nothing) instead of whole-region blocks — the block path's shareability tax
+is only paid where reuse can come (``compact_gather_threshold``).
+
+On multi-chip meshes each block commits to its owner via per-shard
+``device_put`` and folds there — payload never crosses the interconnect;
+only partials travel for the merge.  Meshes without a one-device-per-node
+data axis fold host blocks on the default device (blocks still dedupe the
+gathers).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import (
     Any, Dict, FrozenSet, List, Mapping, Optional, Sequence, Set, Tuple,
 )
@@ -68,7 +76,6 @@ from typing import (
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.balancer import (
     NodeSpec,
@@ -103,19 +110,20 @@ class SessionMetrics:
     rebalances: int = 0
     epochs: int = 0                 # mutation epochs advanced
     regions_dirtied: int = 0
-    plan_hits: int = 0              # run() served from the plan cache
+    plan_hits: int = 0              # executions served whole from the result cache
     plan_misses: int = 0
-    layout_full_builds: int = 0     # assemble-every-shard builds
-    layout_refreshes: int = 0       # incremental dirty-shard refreshes
-    devices_regathered: int = 0     # device shards re-assembled from blocks
-    devices_reused: int = 0         # device shards kept across a mutation
-    rows_gathered: int = 0          # payload rows copied into layout blocks
+    partials_folded: int = 0        # per-block folds executed (map tasks run)
+    partials_reused: int = 0        # per-block partials served from the cache
+    rows_folded: int = 0            # payload rows read by per-block folds
+    rows_gathered: int = 0          # payload rows copied into device blocks
     pushdown_rows_gathered: int = 0  # payload rows gathered by pruned scans
+    compact_scans: int = 0          # plans routed to the compacted one-shot gather
     scans: int = 0                  # GridQuery plans executed
-    payload_gathers: int = 0        # payload gather passes (full, refresh, pruned)
+    payload_gathers: int = 0        # payload gather passes (block or compact)
     programs_fused: int = 0         # programs that shared a fused engine pass
     # (session-lifetime block reuse counters live on BlockStore.stats —
-    # hits/gathers/transfers/evictions — not duplicated here)
+    # hits/gathers/transfers/evictions/partial_hits/folds — not duplicated
+    # here)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,57 +193,50 @@ class _BlockAccount:
 
 
 @dataclasses.dataclass
-class _ScanPlan:
-    """A bound pruned-scan layout: one ``GridQuery`` plan's device blocks,
-    assembled, reusable until a mutation touches one of its regions.
+class _ResultEntry:
+    """One cached query answer, content-addressed by its partial keys.
 
-    ``predicate`` pins the predicate object so its ``id()`` (part of the
-    plan signature) cannot be recycled while this entry lives; ``blocks``
-    pins the (COW) device blocks against LRU eviction so the assembled
-    ``values`` stay backed.  Every cache hit re-verifies predicate identity.
+    The result cache closes the loop over the partial cache: a repeat
+    execution whose every block lineage + row-mask signature is unchanged
+    returns the finalized result without touching blocks, partials, or the
+    engine.  Entries die eagerly when a mutation touches a member region
+    (``_advance_epoch``) — a content change makes the key unmatchable
+    forever — but survive rebalances: the answer does not depend on which
+    device folded it.
     """
 
-    predicate: Optional[Predicate]
-    values: Any                # device [D, C, ...] assembled region blocks
-    dvalid: Any                # device [D, C] real-slot mask
-    row_mask: Any              # device [D, C] selected-slot mask
-    qstats: QueryStats         # scan accounting sans per-execution blocks
-    blocks: Tuple[DeviceBlock, ...]
-    # staleness probes: a mutation touching a member region, or a move of
-    # one (owner binding changed), makes the entry's signature unmatchable
-    # forever — _advance_epoch evicts it eagerly instead of letting dead
-    # device arrays ride the LRU.  Moves of OTHER regions leave it bound.
+    result: Any
+    partials_total: int        # foldable blocks the plan spanned
+    blocks_total: int          # all blocks (incl. empty-selection regions)
     region_ids: FrozenSet[int] = frozenset()
-    owners: Tuple[Tuple[int, Optional[int]], ...] = ()
+    gather_path: str = "blocks"  # which path the miss execution took
     last_used: int = 0         # epoch of the last execution through this entry
 
 
 @dataclasses.dataclass
-class _Layout:
-    """One column materialized in colocated ``[D, C, ...]`` device layout,
-    assembled per shard from the BlockStore's per-region device blocks."""
+class _RegionWork:
+    """One surviving region's slice of a plan: owner device, positional
+    row range (regions are contiguous in the sorted table), and the
+    row-mask signature that content-addresses its partial."""
 
-    epoch: int
-    chunk: int
-    capacity: int
-    valid: np.ndarray          # [D, C] real-slot mask (host)
-    values: Any                # global [D, C, ...] device array
-    dvalid: Any                # device copy of valid
-    # per-device tuple of (rid, version) — the shard's block lineage; a
-    # shard whose composition is unchanged is reused object-for-object
-    composition: Tuple[Tuple[Tuple[int, int], ...], ...]
-    shards: Optional[List[Any]]  # per-device [1, C, ...] committed arrays
-    n_blocks: int
-    last_used: int = 0         # epoch of the last run using this layout
+    region: Region
+    owner: Optional[int]
+    rows: slice
+    mask_sig: str              # "full" | "empty" | digest of the bool mask
+    selected: int              # mask-true rows (0 = nothing to fold)
+
+    @property
+    def n_rows(self) -> int:
+        return self.rows.stop - self.rows.start
 
 
 class GridSession:
     """One object owning the grid lifecycle; the five-verb facade."""
 
-    #: layouts untouched for this many epochs are evicted — a stale layout
-    #: pins its device shards, so a long-lived mutating session must not
-    #: keep it forever.
-    LAYOUT_TTL_EPOCHS = 64
+    #: cached results untouched for this many epochs are evicted — a stale
+    #: entry pins its finalized device arrays, so a long-lived mutating
+    #: session must not keep it forever.
+    RESULT_TTL_EPOCHS = 64
 
     def __init__(
         self,
@@ -250,6 +251,8 @@ class GridSession:
         index_family: str = INDEX_FAMILY,
         plan_cache_cap: int = 64,
         block_cache_cap: int = 256,
+        partial_cache_cap: int = 1024,
+        compact_gather_threshold: float = 0.05,
     ):
         self.table = table
         self.mesh = (mesh if mesh is not None
@@ -265,19 +268,27 @@ class GridSession:
         self.payload_family = payload_family
         self.payload_qualifier = payload_qualifier
         self.index_family = index_family
+        #: cold scans below this selectivity (and with no cached blocks or
+        #: partials to reuse) gather compacted selected rows instead of
+        #: whole-region blocks — the adaptive one-shot path that recovers
+        #: the pre-block cold cost where reuse never comes.  0 disables.
+        self.compact_gather_threshold = float(compact_gather_threshold)
 
         self.placement = Placement.from_strategy(table, nodes, strategy)
         self.table.split_log.clear()  # from_strategy saw the current regions
         self.engine = MapReduceEngine(self.mesh, data_axis)
         self.metrics = SessionMetrics()
-        self.blocks = BlockStore(cap=block_cache_cap)
+        self.blocks = BlockStore(cap=block_cache_cap,
+                                 partial_cap=partial_cache_cap)
 
         self._epoch = 0
-        self._layouts: Dict[Tuple[str, str, int], _Layout] = {}
-        # (programs, mesh shape, eta, column, epoch) -> layout key
-        self._plans: LRUCache = LRUCache(plan_cache_cap)
-        # GridQuery plan signature (block lineage) -> bound pruned-scan layout
-        self._scan_plans: LRUCache = LRUCache(plan_cache_cap)
+        # content-addressed finalized results: (program, partial keys, ...)
+        # -> _ResultEntry.  The only plan-level cache the fold engine needs —
+        # bound layouts and per-plan gathered blocks are gone; partials (in
+        # the BlockStore) carry all cross-plan, cross-epoch compute reuse.
+        self._results: LRUCache = LRUCache(plan_cache_cap)
+        # (epoch, work list) for full-table plans — see _run_fold
+        self._full_work: Optional[Tuple[int, List[_RegionWork]]] = None
         self._node_index = {n.node_id: d for d, n in enumerate(nodes)}
         # per-shard devices for block placement: available when the mesh is
         # exactly the 1-D data axis (one device per node); otherwise None
@@ -299,40 +310,37 @@ class GridSession:
         return self._epoch
 
     def _advance_epoch(self, dirty_rids: Set[int],
-                       touch_blocks: bool = True) -> None:
+                       touch_blocks: bool = True,
+                       dropped_rids: FrozenSet[int] = frozenset()) -> None:
         self._epoch += 1
         self.metrics.epochs += 1
         self.metrics.regions_dirtied += len(dirty_rids)
         if touch_blocks:
-            # copy-on-write: only the touched regions' blocks version-bump;
-            # every other block — and every pruned-scan plan over untouched
-            # regions — survives the mutation structurally intact
+            # copy-on-write: only the touched regions' blocks and partials
+            # version-bump; every other block, partial, and cached result
+            # over untouched regions survives the mutation structurally
             self.blocks.touch(dirty_rids, self._epoch)
-        # whole-table plans are epoch-keyed and can never hit again
-        self._plans.clear()
-        # bound pruned plans whose lineage or owner binding just changed
-        # are unmatchable forever — release their device layouts now
-        alloc = self.placement.alloc
-        dead = [sig for sig, e in self._scan_plans.items()
-                if (e.region_ids & dirty_rids)
-                or any(alloc.get(rid) != owner for rid, owner in e.owners)]
-        for sig in dead:
-            self._scan_plans.pop(sig)
+            # results spanning a dirtied region — or a split parent whose
+            # rid will never reappear (dropped_rids) — are keyed on dead
+            # lineage and can never hit again: release their device arrays
+            # now.  Rebalance epochs (touch_blocks=False) skip this: a
+            # result does not depend on which devices folded it.
+            doomed = set(dirty_rids) | set(dropped_rids)
+            dead = [k for k, e in self._results.items()
+                    if e.region_ids & doomed]
+            for k in dead:
+                self._results.pop(k)
         self._prune_caches()
 
     def _prune_caches(self) -> None:
-        """Evict long-unused layouts and bound scan plans — both pin
-        assembled device arrays, so a long-lived mutating session must not
-        keep idle ones forever.  (The LRU caps bound entry COUNT; this
-        bounds idle LIFETIME across mutation epochs.)"""
-        self._layouts = {
-            k: l for k, l in self._layouts.items()
-            if self._epoch - l.last_used <= self.LAYOUT_TTL_EPOCHS
-        }
-        idle = [sig for sig, e in self._scan_plans.items()
-                if self._epoch - e.last_used > self.LAYOUT_TTL_EPOCHS]
-        for sig in idle:
-            self._scan_plans.pop(sig)
+        """Evict long-idle cached results — they pin finalized device
+        arrays, so a long-lived mutating session must not keep them
+        forever.  (The LRU cap bounds entry COUNT; this bounds idle
+        LIFETIME across mutation epochs.)"""
+        idle = [k for k, e in self._results.items()
+                if self._epoch - e.last_used > self.RESULT_TTL_EPOCHS]
+        for k in idle:
+            self._results.pop(k)
 
     # ------------------------------------------------------------------
     # the five verbs
@@ -362,15 +370,17 @@ class GridSession:
         if not written:
             self.table.split_log.clear()
             return 0
-        # split parents' rids never reappear: forget their blocks before
-        # apply_splits consumes the log, or they'd pin payload until cap
-        # pressure (their region set membership is gone for good)
-        self.blocks.drop_regions(
+        # split parents' rids never reappear: forget their blocks (and evict
+        # cached results spanning them) before apply_splits consumes the
+        # log, or they'd pin payload until cap pressure (their region set
+        # membership is gone for good)
+        parents = frozenset(
             parent.rid for parent, _, _ in self.table.split_log)
+        self.blocks.drop_regions(parents)
         self.placement.apply_splits()
         dirty = self.table.regions.regions_containing(
             [bytes(k) for k in written_keys])
-        self._advance_epoch(dirty)
+        self._advance_epoch(dirty, dropped_rids=parents)
         return written
 
     def retrieve(
@@ -520,8 +530,20 @@ class GridSession:
         eta: Optional[int] = None,
         family: Optional[str] = None,
         qualifier: Optional[str] = None,
+        impl: Optional[str] = None,
     ) -> Tuple[Any, RunReport]:
-        """MapReduce over the whole table — a full-range one-program plan."""
+        """MapReduce over the whole table — a full-range one-program plan.
+
+        ``impl="pallas"`` swaps a sum/count-family program for its Pallas
+        ``streaming_stats``-backed map phase (see
+        :func:`repro.kernels.streaming_stats.ops.kernel_map_program`);
+        ``impl="ref"``/``None`` keeps the jnp reference fold.  The kernel
+        program has its own cache identity, so ref and pallas runs keep
+        separate partials and can be compared side by side.
+        """
+        if impl is not None and impl != "ref":
+            from repro.kernels.streaming_stats.ops import kernel_map_program
+            program = kernel_map_program(program, impl=impl)
         q = self.scan().select(
             (family or self.payload_family,
              qualifier or self.payload_qualifier)).map(program)
@@ -540,18 +562,19 @@ class GridSession:
         full-range ``.where`` plan.
 
         The predicate runs over the index family only; the fold then reads
-        *just the selected payload slots* through a device-side row mask
+        *just the selected payload slots* through per-block row masks
         (locality preserved because index and payload share rowkeys and
         placement), so ``QueryStats.payload_bytes_moved`` covers exactly
         the selected rows — never the full table.
 
-        Physical transfer is block-granular: a COLD selective query ships
+        Physical transfer is adaptive: by default a selective query ships
         the surviving regions' whole blocks (observable via
-        ``payload_bytes_transferred``), which is what lets every later
-        plan — any predicate, any overlapping range, any later epoch —
-        reuse them without re-shipping.  Region pruning (``scan`` with a
-        range, then ``.where``) is the tool for keeping cold transfers
-        small too.
+        ``payload_bytes_transferred``), which lets every later plan — any
+        predicate, any overlapping range, any later epoch — reuse blocks
+        AND per-block fold partials without re-shipping or re-folding.  A
+        COLD query below ``compact_gather_threshold`` selectivity with no
+        cached state to reuse ships only the compacted selected rows
+        instead (``QueryStats.gather_path == "compact"``).
         """
         q = (self.scan()
              .select((family or self.payload_family,
@@ -578,71 +601,278 @@ class GridSession:
         else:
             program = FusedProgram(plan.programs)
             self.metrics.programs_fused += len(plan.programs)
-        if (plan.start is None and plan.stop is None
-                and plan.predicate is None):
-            return self._run_full(plan, program, eta)
-        return self._run_pruned(plan, program, eta)
+        return self._run_fold(plan, program, eta)
 
-    def _run_full(
+    @staticmethod
+    def _mask_sig(mask_slice: np.ndarray) -> str:
+        """Content signature of one region's selected-row mask.
+
+        ``"full"`` and ``"empty"`` are canonical — a range scan that exactly
+        covers a region shares partials with the full-table plan; anything
+        else hashes the packed mask bits plus the length (packbits pads to
+        byte boundaries, so the length disambiguates).
+        """
+        if mask_slice.all():
+            return "full"
+        if not mask_slice.any():
+            return "empty"
+        h = hashlib.blake2b(digest_size=12)
+        h.update(len(mask_slice).to_bytes(8, "little"))
+        h.update(np.packbits(mask_slice).tobytes())
+        return h.hexdigest()
+
+    def _plan_work(
+        self, mask: Optional[np.ndarray], regions: Sequence[Region]
+    ) -> List[_RegionWork]:
+        """Per-region work items, in start-key order: owner device,
+        positional row range, and the partial-addressing mask signature.
+        This runs on EVERY execution (it builds the result-cache key), so
+        it stays allocation-light: slices, not index arrays."""
+        work = []
+        keys = self.table.keys
+        alloc = self.placement.alloc
+        for region in regions:
+            owner = self._node_index.get(alloc.get(region.rid))
+            rows = region.row_slice(keys)
+            n = rows.stop - rows.start
+            if n == 0:
+                sig, sel = "empty", 0
+            elif mask is None:
+                sig, sel = "full", n
+            else:
+                sub = mask[rows]
+                sig = self._mask_sig(sub)
+                sel = int(sub.sum())
+            work.append(_RegionWork(region, owner, rows, sig, sel))
+        return work
+
+    def _run_fold(
         self, plan: GridQuery, program: MapReduceProgram, eta: int
     ) -> Tuple[Any, RunReport]:
-        """Whole-table plans ride the incremental layout machinery: a repeat
-        run is a plan-cache hit; across epochs only dirty regions' blocks are
-        re-gathered and only their shards re-assembled."""
+        """The block-granular fold behind every compute plan.
+
+        Resolution order: (1) content-addressed result cache — a repeat
+        query at unchanged block lineage returns the finalized answer and
+        folds zero rows; (2) the adaptive compact gather for cold
+        low-selectivity one-shots; (3) block-at-a-time folding with the
+        partial cache — only blocks whose partial is missing are fetched
+        and folded, so a mutation re-folds exactly the dirty regions.
+        """
         family, qualifier = plan.compute_column()
-        plan_key = (tuple(p.cache_key() for p in plan.programs),
-                    self._mesh_shape(), eta, family, qualifier, self._epoch)
-        layout_key = self._plans.get(plan_key)
-        hit = (layout_key is not None
-               and self._layouts.get(layout_key) is not None)
-        if hit:
-            self.metrics.plan_hits += 1
-            layout = self._layouts[layout_key]
-            layout.last_used = self._epoch
-            acct = _BlockAccount.all_reused(layout.n_blocks)
+        spec = self.table.column_spec(family, qualifier)
+        full = (plan.start is None and plan.stop is None
+                and plan.predicate is None)
+        if full:
+            mask = None
+            # the full-table work list is a pure function of the epoch
+            # (regions, row slices, owners, versions all mutate only
+            # through _advance_epoch), so the repeat-query hot path skips
+            # the per-region bisects entirely
+            if self._full_work is None or self._full_work[0] != self._epoch:
+                self._full_work = (
+                    self._epoch,
+                    self._plan_work(None, tuple(self.table.regions.regions)))
+            work = self._full_work[1]
+            n = self.table.num_rows
+            qstats = QueryStats(
+                rows_scanned=n, index_bytes_scanned=0,
+                payload_bytes_traversed=0, rows_selected=n,
+                payload_bytes_moved=n * spec.row_nbytes,
+                regions_scanned=len(work), regions_pruned=0)
         else:
-            self.metrics.plan_misses += 1
-            layout, acct = self._layout(family, qualifier, eta)
-            self._plans.put(plan_key, (family, qualifier, eta))
-        result, mr = self.engine.run(program, layout.values, layout.dvalid,
-                                     eta)
-        n = self.table.num_rows
-        row_nbytes = self.table.column_spec(family, qualifier).row_nbytes
-        # payload_bytes_moved is the LOGICAL quantity (selected rows × row
-        # bytes, here the whole table) on every path; physical transfer
-        # lives in the block oracles acct.apply fills in
-        qstats = acct.apply(QueryStats(
-            rows_scanned=n, index_bytes_scanned=0, payload_bytes_traversed=0,
-            rows_selected=n,
-            payload_bytes_moved=n * row_nbytes,
-            regions_scanned=len(self.table.regions), regions_pruned=0))
+            mask, qstats, regions = self._scan_mask(plan)
+            qstats = dataclasses.replace(
+                qstats,
+                payload_bytes_moved=qstats.rows_selected * spec.row_nbytes)
+            work = self._plan_work(mask, regions)
+
+        result_key = (
+            "fold", program.cache_key(), family, qualifier, int(eta),
+            self._mesh_shape(),
+            tuple((w.region.signature, self.blocks.version_of(w.region.rid),
+                   w.mask_sig) for w in work),
+        )
+        entry = self._results.get(result_key)
+        if entry is not None:
+            entry.last_used = self._epoch
+            self.metrics.plan_hits += 1
+            self.metrics.partials_reused += entry.partials_total
+            acct = _BlockAccount.all_reused(entry.blocks_total)
+            qstats = dataclasses.replace(
+                acct.apply(qstats), gather_path=entry.gather_path,
+                partials_total=entry.partials_total,
+                partials_reused=entry.partials_total, rows_folded=0)
+            # zero-work execution: nothing was read, folded, or shuffled
+            mr = MapReduceStats(0, 0, 0, 0, 0, eta)
+            return entry.result, RunReport(
+                epoch=self._epoch, eta=eta, plan_cache_hit=True,
+                mapreduce=mr, query=qstats)
+
+        self.metrics.plan_misses += 1
+        if mask is not None and self._should_compact(work, family, qualifier):
+            return self._run_compact(program, eta, mask, work, qstats,
+                                     family, qualifier, spec, result_key)
+        return self._run_blockwise(program, eta, mask, work, qstats,
+                                   family, qualifier, spec, result_key)
+
+    def _should_compact(self, work: Sequence[_RegionWork],
+                        family: str, qualifier: str) -> bool:
+        """Adaptive cold-scan gather: take the compacted one-shot path when
+        selectivity is below the threshold AND no reuse is in flight (no
+        resident current-version block or partial for any surviving
+        region).  Block granularity deliberately ships whole regions to
+        make them shareable; a cold selective scan that will never share
+        shouldn't pay for that."""
+        thr = self.compact_gather_threshold
+        if thr <= 0:
+            return False
+        in_range = sum(w.n_rows for w in work)
+        sel = sum(w.selected for w in work)
+        if sel == 0 or in_range == 0 or sel / in_range >= thr:
+            return False
+        for w in work:
+            if w.selected == 0:
+                continue
+            if self.blocks.peek(w.region, family, qualifier) is not None:
+                return False
+            if self.blocks.has_partials(w.region.rid):
+                return False
+        return True
+
+    def _run_compact(
+        self, program: MapReduceProgram, eta: int, mask: np.ndarray,
+        work: Sequence[_RegionWork], qstats: QueryStats,
+        family: str, qualifier: str, spec, result_key: Tuple,
+    ) -> Tuple[Any, RunReport]:
+        """One-shot compacted gather: ONLY the selected rows ship, grouped
+        by owner device (locality preserved), folded layout-at-a-time via
+        the shard_map engine.  Nothing enters the block or partial caches —
+        this path exists precisely because no payload reuse is expected —
+        but the tiny finalized RESULT is still memoized, so an identical
+        repeat query pays nothing at all."""
+        D = len(self.placement.nodes)
+        sel_per_dev: List[List[np.ndarray]] = [[] for _ in range(D)]
+        for w in work:
+            if w.selected == 0 or w.owner is None:
+                continue
+            sel_per_dev[w.owner].append(
+                np.nonzero(mask[w.rows])[0] + w.rows.start)
+        rows_per_dev = [int(sum(len(x) for x in lst)) for lst in sel_per_dev]
+        # capacity rounds up to a power-of-two chunk count so compact scans
+        # of drifting selectivity share a few engine executables
+        cap = self._capacity_for(rows_per_dev, eta)
+        cap = eta * (1 << (max(1, cap // eta) - 1).bit_length())
+        col = self.table.column(family, qualifier)
+        host = np.zeros((D, cap) + tuple(spec.shape), spec.dtype)
+        valid = np.zeros((D, cap), dtype=bool)
+        for d in range(D):
+            off = 0
+            for sub in sel_per_dev[d]:
+                host[d, off: off + len(sub)] = col[sub]
+                off += len(sub)
+            valid[d, :off] = True
+        sh = Placement.data_sharding(self.mesh, self.data_axis)
+        result, mr = self.engine.run(
+            program, jax.device_put(host, sh), jax.device_put(valid, sh),
+            eta)
+        sel = sum(rows_per_dev)
+        self.metrics.compact_scans += 1
+        self.metrics.pushdown_rows_gathered += sel
+        self.metrics.payload_gathers += 1
+        self.metrics.rows_folded += sel
+        self._results.put(result_key, _ResultEntry(
+            result=result, partials_total=0, blocks_total=0,
+            region_ids=frozenset(w.region.rid for w in work),
+            gather_path="compact", last_used=self._epoch))
+        qstats = dataclasses.replace(
+            qstats, gather_path="compact", rows_folded=sel,
+            payload_bytes_transferred=sel * spec.row_nbytes)
         return result, RunReport(epoch=self._epoch, eta=eta,
-                                 plan_cache_hit=hit, mapreduce=mr,
+                                 plan_cache_hit=False, mapreduce=mr,
                                  query=qstats)
 
-    def _run_pruned(
-        self, plan: GridQuery, program: MapReduceProgram, eta: int
+    def _run_blockwise(
+        self, program: MapReduceProgram, eta: int,
+        mask: Optional[np.ndarray], work: Sequence[_RegionWork],
+        qstats: QueryStats, family: str, qualifier: str, spec,
+        result_key: Tuple,
     ) -> Tuple[Any, RunReport]:
-        """Range/predicate plans: prune regions first, then assemble the
-        surviving regions' blocks into a layout (store-first, so blocks
-        shared with earlier plans or epochs never re-gather) and fold only
-        the selected slots through a device-side row mask."""
-        sig = plan.plan_signature(eta)
-        entry = self._scan_plans.get(sig)
-        hit = entry is not None and entry.predicate is plan.predicate
-        if hit:
-            self.metrics.plan_hits += 1
-            acct = _BlockAccount.all_reused(len(entry.blocks))
-        else:
-            self.metrics.plan_misses += 1
-            entry, acct = self._gather_pruned(plan, eta)
-            self._scan_plans.put(sig, entry)
-        entry.last_used = self._epoch
-        result, mr = self.engine.run(program, entry.values, entry.dvalid, eta,
-                                     row_mask=entry.row_mask)
+        """Block-at-a-time map phase + one merge/finalize reduce.
+
+        Per foldable block: partial-cache lookup first; on a miss the block
+        is fetched store-first (reused / transferred / gathered classified
+        by the BlockStore) and folded ON ITS OWNER DEVICE, and the partial
+        is cached under the block's lineage.  Blocks with no selected rows
+        contribute the monoid identity — neither payload nor partial is
+        ever touched for them.
+        """
+        prog_key = program.cache_key()
+        acct = _BlockAccount()
+        partials: List[Any] = []
+        p_total = p_reused = rows_folded = local_rows = chunks = 0
+        rounds: Dict[Optional[int], int] = {}
+        for w in work:
+            if w.selected == 0:
+                acct.total += 1
+                acct.reused += 1
+                continue
+            p_total += 1
+            pkey = self.blocks.partial_key(
+                w.region, family, qualifier, prog_key, w.mask_sig, eta)
+            partial = self.blocks.get_partial(pkey)
+            if partial is not None:
+                p_reused += 1
+                acct.total += 1
+                acct.reused += 1
+            else:
+                blk, reused, gathered = self._fetch_block(
+                    w.region, family, qualifier, owner=w.owner)
+                acct.add(blk, reused, gathered)
+                src = blk.device if blk.device is not None else blk.host
+                bmask = None if w.mask_sig == "full" else mask[w.rows]
+                partial = self.engine.fold_block(
+                    program, src, bmask, eta, spec.shape, spec.dtype)
+                self.blocks.put_partial(pkey, partial)
+                rows_folded += blk.rows
+                local_rows += w.selected
+                c = -(-blk.rows // eta)
+                chunks += c
+                rounds[w.owner] = rounds.get(w.owner, 0) + c
+            partials.append(partial)
+        result = self.engine.merge_finalize(program, partials,
+                                            spec.shape, spec.dtype)
+        self._results.put(result_key, _ResultEntry(
+            result=result, partials_total=p_total, blocks_total=acct.total,
+            region_ids=frozenset(w.region.rid for w in work),
+            last_used=self._epoch))
+
+        self.metrics.partials_folded += p_total - p_reused
+        self.metrics.partials_reused += p_reused
+        self.metrics.rows_folded += rows_folded
+        self.metrics.rows_gathered += acct.rows_gathered
+        if mask is not None:
+            self.metrics.pushdown_rows_gathered += acct.rows_gathered
+        if acct.gathered:
+            self.metrics.payload_gathers += 1
+
+        pb = self.engine.partial_nbytes(program, spec.shape, spec.dtype)
+        # local_* use the layout path's logical convention (selected rows ×
+        # row bytes); the PHYSICAL rows the folds traversed are the
+        # rows_folded oracle on QueryStats
+        mr = MapReduceStats(
+            local_rows_read=local_rows,
+            local_bytes_read=local_rows * spec.row_nbytes,
+            shuffle_bytes=pb * len(partials),
+            rounds=max(rounds.values(), default=0),
+            chunks=chunks,
+            chunk_size=eta)
+        qstats = dataclasses.replace(
+            acct.apply(qstats), gather_path="blocks",
+            partials_total=p_total, partials_reused=p_reused,
+            rows_folded=rows_folded)
         return result, RunReport(epoch=self._epoch, eta=eta,
-                                 plan_cache_hit=hit, mapreduce=mr,
-                                 query=acct.apply(entry.qstats))
+                                 plan_cache_hit=False, mapreduce=mr,
+                                 query=qstats)
 
     def _scan_mask(
         self, plan: GridQuery
@@ -673,84 +903,55 @@ class GridSession:
                 regions_scanned=len(regions), regions_pruned=pruned_count)
         return mask, qstats, regions
 
-    def _gather_pruned(
-        self, plan: GridQuery, eta: int
-    ) -> Tuple[_ScanPlan, _BlockAccount]:
-        """One store-first assembly pass: per device, ITS OWN surviving
-        regions' blocks — pruned regions untouched, shared blocks reused."""
-        family, qualifier = plan.compute_column()
-        # range clipping lives entirely in the row mask below — blocks keep
-        # whole regions so the payload stays shareable across ranges
-        mask, qstats, regions = self._scan_mask(plan)
-        per_dev = self._per_device_regions(regions)
-        blocks_per_dev, acct = self._fetch_blocks(per_dev, family, qualifier)
-
-        spec = self.table.column_spec(family, qualifier)
-        rows_per_dev = [sum(b.rows for b in blks) for blks in blocks_per_dev]
-        cap = self._capacity_for(rows_per_dev, eta)
-        values, valid, _ = self._assemble(blocks_per_dev, rows_per_dev, cap,
-                                          spec.shape, spec.dtype)
-        # slot-level selection: real slot AND in scan range AND predicate —
-        # blocks hold whole regions, so range edges and predicates both land
-        # in the mask, never in the (shared, reusable) payload
-        row_mask = np.zeros_like(valid)
-        for d, regs in enumerate(per_dev):
-            if regs:
-                rows = np.concatenate(
-                    [self.table.region_positions(r) for r in regs])
-                row_mask[d, : len(rows)] = mask[rows]
-        sh = Placement.data_sharding(self.mesh, self.data_axis)
-        qstats = dataclasses.replace(
-            qstats,
-            payload_bytes_moved=qstats.rows_selected * spec.row_nbytes)
-        self.metrics.pushdown_rows_gathered += acct.rows_gathered
-        if acct.gathered:
-            self.metrics.payload_gathers += 1
-        entry = _ScanPlan(
-            predicate=plan.predicate, values=values,
-            dvalid=jax.device_put(valid, sh),
-            row_mask=jax.device_put(row_mask, sh), qstats=qstats,
-            blocks=tuple(b for blks in blocks_per_dev for b in blks),
-            region_ids=frozenset(r.rid for r in regions),
-            owners=tuple((r.rid, self.placement.alloc.get(r.rid))
-                         for r in regions))
-        return entry, acct
-
     def _collect_rows(
         self, plan: GridQuery, eta: int
     ) -> Tuple[Tuple[np.ndarray, Dict[str, np.ndarray]], RunReport]:
         """Program-less plans are pruned retrieves: host-side rowkeys plus
-        every selected column's values, charging only the selected rows."""
-        mask, qstats, _ = self._scan_mask(plan)
+        every selected column's values, charging only the selected rows.
+
+        Retrieves route through the BlockStore's host blocks
+        (:meth:`BlockStore.fetch_host`): each surviving region's column is
+        read from the table once per content version, so retrieve-heavy
+        workloads — and later folds over the same regions — share one
+        gather.  In the accounting, ``reused`` is a content hit and
+        ``transferred``/``gather_count`` a fresh table read (host-side;
+        nothing ships to a device on this path).
+        """
+        mask, qstats, regions = self._scan_mask(plan)
         sel = np.nonzero(mask)[0]
-        cols = {
-            f"{f}:{q}": self.table.column(f, q)[sel].copy()
-            for f, q in plan.resolved_columns()
-        }
+        acct = _BlockAccount()
+        cols: Dict[str, np.ndarray] = {}
+        for f, q in plan.resolved_columns():
+            spec = self.table.column_spec(f, q)
+            parts = []
+            for region in regions:
+                rows = self.table.region_rows(region)
+                if rows.stop <= rows.start:
+                    continue
+                sub = mask[rows]
+                if not sub.any():
+                    continue
+                blk, gathered = self.blocks.fetch_host(
+                    region, f, q,
+                    gather_host=lambda r=region, fa=f, qu=q:
+                        self.table.region_column(r, fa, qu))
+                acct.add(blk, not gathered, gathered)
+                parts.append(blk.host[sub])
+            cols[f"{f}:{q}"] = (
+                np.concatenate(parts) if parts
+                else np.empty((0,) + tuple(spec.shape), spec.dtype))
         per_row = sum(self.table.column_spec(f, q).row_nbytes
                       for f, q in plan.resolved_columns())
         qstats = dataclasses.replace(
-            qstats, payload_bytes_moved=len(sel) * per_row)
+            acct.apply(qstats), gather_path="retrieve",
+            payload_bytes_moved=len(sel) * per_row)
         report = RunReport(epoch=self._epoch, eta=eta, plan_cache_hit=False,
                            mapreduce=None, query=qstats)
         return (self.table.keys[sel].copy(), cols), report
 
     # ------------------------------------------------------------------
-    # block fetch + layout assembly (the BlockStore plumbing)
+    # block fetch (the BlockStore plumbing)
     # ------------------------------------------------------------------
-
-    def _per_device_regions(
-        self, regions: Sequence[Region]
-    ) -> List[List[Region]]:
-        """Group regions by owning device, preserving start-key order (so a
-        shard's slots are ascending in rowkey, exactly as placement's
-        ``rows_for_node`` orders them)."""
-        per: List[List[Region]] = [[] for _ in self.placement.nodes]
-        for region in regions:
-            d = self._node_index.get(self.placement.alloc.get(region.rid))
-            if d is not None:
-                per[d].append(region)
-        return per
 
     @staticmethod
     def _capacity_for(rows_per_dev: List[int], chunk: int) -> int:
@@ -759,43 +960,13 @@ class GridSession:
         need = max(rows_per_dev, default=0)
         return max(chunk, -(-max(need, 1) // chunk) * chunk)
 
-    def _fetch_blocks(
-        self,
-        per_dev: List[List[Region]],
-        family: str,
-        qualifier: str,
-        skip: Optional[List[bool]] = None,
-    ) -> Tuple[List[List[DeviceBlock]], _BlockAccount]:
-        """Store-first fetch of every listed region's block, grouped per
-        device, with one account covering the whole pass.
-
-        ``skip[d]`` marks devices whose assembled shard will be reused
-        as-is: their regions are accounted as reused without touching the
-        store (no fetch, no LRU churn) and their block list stays empty.
-        """
-        acct = _BlockAccount()
-        blocks_per_dev: List[List[DeviceBlock]] = []
-        for d, regs in enumerate(per_dev):
-            if skip is not None and skip[d]:
-                acct.total += len(regs)
-                acct.reused += len(regs)
-                blocks_per_dev.append([])
-                continue
-            blks = []
-            for region in regs:
-                blk, reused, gathered = self._fetch_block(
-                    region, family, qualifier, owner=d)
-                acct.add(blk, reused, gathered)
-                blks.append(blk)
-            blocks_per_dev.append(blks)
-        return blocks_per_dev, acct
-
     def _fetch_block(
-        self, region: Region, family: str, qualifier: str, owner: int
+        self, region: Region, family: str, qualifier: str,
+        owner: Optional[int],
     ) -> Tuple[DeviceBlock, bool, bool]:
         """Store-first block access; ``owner`` is the region's device index
-        (the _per_device_regions group the caller is filling — derived once
-        there, not re-derived per block)."""
+        (derived once per plan in ``_plan_work``, not re-derived per
+        block)."""
         blk, reused, gathered = self.blocks.fetch(
             region, family, qualifier, owner,
             gather_host=lambda: self.table.region_column(
@@ -806,139 +977,10 @@ class GridSession:
 
     def _put_block(self, host: np.ndarray, owner_index: Optional[int]):
         """Commit one block to its owner shard's device (the per-shard
-        ``device_put`` half of the multi-chip transfer path)."""
+        ``device_put`` half of the multi-chip transfer path; the per-block
+        fold then runs where the committed array lives)."""
         dev = None if owner_index is None else self._devices[owner_index]
         return jax.device_put(host, dev)
-
-    def _assemble(
-        self,
-        blocks_per_dev: List[List[DeviceBlock]],
-        rows_per_dev: List[int],
-        cap: int,
-        row_shape: Tuple[int, ...],
-        dtype,
-        reuse: Optional[List[Optional[Any]]] = None,
-    ) -> Tuple[Any, np.ndarray, Optional[List[Any]]]:
-        """Blocks → ``(global [D, cap, ...] device array, host validity,
-        per-device shards)``.
-
-        Per-shard path (1-D data mesh): each device's blocks are already
-        resident on it, so assembly is an on-device concat + pad and the
-        global array is stitched with
-        ``jax.make_array_from_single_device_arrays`` — clean blocks never
-        re-cross the host↔device boundary.  ``reuse[d]`` (a prior build's
-        shard whose composition is unchanged) skips even the concat, and
-        its block list may be empty.  Fallback (exotic meshes): host concat
-        + one sharded ``device_put``, shards ``None``.
-        """
-        D = len(blocks_per_dev)
-        valid = np.zeros((D, cap), dtype=bool)
-        for d, n in enumerate(rows_per_dev):
-            valid[d, :n] = True
-        sh = Placement.data_sharding(self.mesh, self.data_axis)
-        global_shape = (D, cap) + tuple(row_shape)
-        if self._devices is None:
-            host = np.zeros(global_shape, dtype)
-            for d, blks in enumerate(blocks_per_dev):
-                off = 0
-                for b in blks:
-                    host[d, off: off + b.rows] = b.host
-                    off += b.rows
-            return jax.device_put(host, sh), valid, None
-        shards = [
-            reuse[d] if reuse is not None and reuse[d] is not None
-            else self._assemble_shard(blks, cap, row_shape, dtype, d)
-            for d, blks in enumerate(blocks_per_dev)
-        ]
-        values = jax.make_array_from_single_device_arrays(
-            global_shape, sh, shards)
-        return values, valid, shards
-
-    def _assemble_shard(
-        self,
-        blks: List[DeviceBlock],
-        cap: int,
-        row_shape: Tuple[int, ...],
-        dtype,
-        d: int,
-    ):
-        """One device's ``[1, cap, ...]`` shard from its resident blocks."""
-        parts = [b.device for b in blks if b.rows]
-        n = sum(b.rows for b in blks)
-        if not parts:
-            shard = jax.device_put(
-                np.zeros((cap,) + tuple(row_shape), dtype), self._devices[d])
-        else:
-            shard = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
-            if n < cap:
-                shard = jnp.pad(
-                    shard, [(0, cap - n)] + [(0, 0)] * len(row_shape))
-        return shard.reshape((1, cap) + tuple(row_shape))
-
-    # ------------------------------------------------------------------
-    # layouts (incremental placement materialization over blocks)
-    # ------------------------------------------------------------------
-
-    def _layout(
-        self, family: str, qualifier: str, chunk: int
-    ) -> Tuple[_Layout, _BlockAccount]:
-        key = (family, qualifier, int(chunk))
-        lay = self._layouts.get(key)
-        if lay is not None and lay.epoch == self._epoch:
-            lay.last_used = self._epoch
-            return lay, _BlockAccount.all_reused(lay.n_blocks)
-
-        per_dev = self._per_device_regions(self.table.regions.regions)
-        D = len(per_dev)
-        keys = self.table.keys
-        rows_per_dev = [sum(r.num_rows(keys) for r in regs)
-                        for regs in per_dev]
-        # composition comes from lineage alone — deciding which shards to
-        # reuse must not touch the store, or clean shards' blocks would be
-        # re-fetched (and under cap pressure re-gathered) just to be
-        # discarded by the reuse path
-        composition = tuple(self.blocks.lineage(regs) for regs in per_dev)
-
-        cap_needed = self._capacity_for(rows_per_dev, chunk)
-        spec = self.table.column_spec(family, qualifier)
-        full = lay is None or cap_needed > lay.capacity
-        cap = cap_needed if full else lay.capacity
-
-        # a shard whose block composition (and capacity) is unchanged is
-        # reused object-for-object — no concat, no pad, no device_put,
-        # and its blocks are never pulled through the store
-        reuse: Optional[List[Optional[Any]]] = None
-        if not full and lay.shards is not None:
-            reuse = [lay.shards[d] if composition[d] == lay.composition[d]
-                     else None for d in range(D)]
-        skip = None if reuse is None else [r is not None for r in reuse]
-        blocks_per_dev, acct = self._fetch_blocks(per_dev, family, qualifier,
-                                                  skip=skip)
-        values, valid, shards = self._assemble(
-            blocks_per_dev, rows_per_dev, cap, spec.shape, spec.dtype,
-            reuse=reuse)
-        kept = sum(1 for r in reuse if r is not None) if reuse else 0
-        self.metrics.devices_reused += kept
-        self.metrics.devices_regathered += D - kept
-
-        if full:
-            self.metrics.layout_full_builds += 1
-        else:
-            self.metrics.layout_refreshes += 1
-        self.metrics.rows_gathered += acct.rows_gathered
-        if acct.gathered:
-            self.metrics.payload_gathers += 1
-
-        sh = Placement.data_sharding(self.mesh, self.data_axis)
-        lay = _Layout(
-            epoch=self._epoch, chunk=int(chunk), capacity=cap,
-            valid=valid, values=values,
-            dvalid=jax.device_put(valid, sh),
-            composition=composition, shards=shards,
-            n_blocks=acct.total, last_used=self._epoch,
-        )
-        self._layouts[key] = lay
-        return lay, acct
 
     # ------------------------------------------------------------------
     # helpers / diagnostics
@@ -969,15 +1011,15 @@ class GridSession:
             f"GridSession(table={self.table.name!r}, epoch={self._epoch}, "
             f"eta={self.default_eta}, imbalance={self.imbalance():.3f})",
             self.placement.describe(),
-            f"  plans: {m.plan_hits} hits / {m.plan_misses} misses; "
+            f"  results: {m.plan_hits} hits / {m.plan_misses} misses; "
             f"engine compiles: {self.engine.compile_count}",
-            f"  layouts: {m.layout_full_builds} full builds, "
-            f"{m.layout_refreshes} refreshes "
-            f"({m.devices_regathered} reassembled / {m.devices_reused} reused "
-            f"device shards, {m.rows_gathered} rows gathered)",
+            f"  folds: {m.partials_folded} block partials folded "
+            f"({m.rows_folded} rows), {m.partials_reused} reused, "
+            f"{m.compact_scans} compact one-shots",
             f"  blocks: {self.blocks.describe()}",
             f"  queries: {m.scans} plans executed, {m.programs_fused} "
             f"programs fused, {m.payload_gathers} payload gather passes "
-            f"({m.pushdown_rows_gathered} pushdown rows)",
+            f"({m.rows_gathered} rows gathered, "
+            f"{m.pushdown_rows_gathered} pushdown rows)",
         ]
         return "\n".join(lines)

@@ -21,19 +21,32 @@ Programs are associative-merge folds (monoids), which is exactly the structure
 the paper's ANTS AverageImages use case has, and what makes chunk size η a
 free *performance* parameter with no effect on the result (a property test
 asserts chunk-size invariance up to float associativity).
+
+Two execution granularities share the program interface:
+
+- :meth:`MapReduceEngine.run` — the layout-at-a-time path: one ``shard_map``
+  fold over an assembled ``[D, C, ...]`` array (used by standalone layouts
+  and the compact one-shot gather path);
+- :meth:`MapReduceEngine.fold_block` + :meth:`MapReduceEngine.merge_finalize`
+  — the block-at-a-time path :class:`~repro.core.grid.GridSession` drives:
+  each region's device block folds independently on its owner device (the
+  jitted fold runs where the committed block lives — the map phase), the
+  tiny partials move to one device and merge+finalize in a single jitted
+  reduce.  Because partials are per-block, they are cacheable per block
+  lineage in the :class:`~repro.core.blockstore.BlockStore` — a repeat
+  query merges cached partials and folds zero payload rows.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.blockstore import LRUCache
 from repro.utils import shard_map_compat
@@ -53,6 +66,12 @@ class MapReduceProgram:
 
     ``additive`` marks programs whose partials combine by elementwise sum,
     enabling the single-``psum`` reduce path.
+
+    Programs whose statistic is a projection of the raw power sums may also
+    declare :meth:`requires` / :meth:`finalize_shared`; a CSE'd
+    :class:`~repro.core.stats.FusedProgram` then computes each shared
+    accumulator once per chunk and projects per-member results, instead of
+    re-folding the chunk once per member.
     """
 
     additive: bool = False
@@ -76,6 +95,21 @@ class MapReduceProgram:
         raise NotImplementedError
 
     def finalize(self, partial: PyTree) -> PyTree:
+        raise NotImplementedError
+
+    # --- common-subexpression sharing protocol (optional) -------------
+
+    def requires(self) -> Tuple[str, ...]:
+        """Raw shared accumulators this program's result projects from
+        (a subset of ``repro.core.stats.SHARED_ACCUMULATORS``: ``count``,
+        ``s1`` .. ``s4``).  Empty (the default) means the program folds its
+        own private accumulator even inside a CSE'd fusion."""
+        return ()
+
+    def finalize_shared(self, shared: Mapping[str, jax.Array]) -> PyTree:
+        """Project the user-facing result from the shared accumulators
+        named by :meth:`requires`.  Must agree with
+        ``finalize(own fold)`` up to float associativity."""
         raise NotImplementedError
 
 
@@ -102,6 +136,9 @@ class MapReduceEngine:
         # LRU-capped: one entry per (program, row signature, eta, C); an
         # evicted executable rebuilds on next use (compile_count bumps again)
         self._compiled = LRUCache(executable_cache_cap)
+        # partial byte sizes per (program, row signature): plain dict — tiny
+        # ints, not executables, so no cap and no compile_count coupling
+        self._partial_bytes: dict = {}
         # builds of new executables (the recompile oracle GridSession's plan
         # cache is tested against): bumped only on an executable-cache miss.
         self.compile_count = 0
@@ -166,6 +203,161 @@ class MapReduceEngine:
             return program.finalize(partial)
 
         return jax.jit(run)
+
+    # ------------------------------------------------------------------
+    # block-at-a-time path: per-block folds + one merge/finalize reduce
+    # ------------------------------------------------------------------
+
+    @property
+    def _merge_device(self):
+        """Where partials meet for the reduce phase (the paper's "combine on
+        one node"): the mesh's first device.  Only ``O(#blocks · |partial|)``
+        bytes ever travel here."""
+        return list(np.asarray(self.mesh.devices).flat)[0]
+
+    def _get_or_build(self, key, build: Callable[[], Any]):
+        fn = self._compiled.get(key)
+        if fn is None:
+            self.compile_count += 1
+            fn = build()
+            self._compiled.put(key, fn)
+        return fn
+
+    def _block_fold_fn(self, program: MapReduceProgram, rows: int,
+                       row_shape, dtype, eta: int, masked: bool):
+        """The jitted fold for one block signature ``(rows, row_shape,
+        dtype, η)``.  Padding to a chunk multiple happens inside the jit, so
+        a committed device block folds on its own device with no host trip.
+        Executables are shape-keyed: blocks of equal row count (the common
+        case under a byte-bounded split policy) share one compile."""
+        pad = -rows % eta
+        n_chunks = (rows + pad) // eta
+        shape = tuple(row_shape)
+
+        def fold(block, mask):
+            m = (jnp.ones((rows,), bool) if mask is None
+                 else mask.astype(bool))
+            v = block
+            if pad:
+                v = jnp.pad(v, [(0, pad)] + [(0, 0)] * len(shape))
+                m = jnp.pad(m, [(0, pad)])
+            v = v.reshape((n_chunks, eta) + shape)
+            m = m.reshape((n_chunks, eta))
+
+            def body(carry, xs):
+                chunk, cm = xs
+                return program.merge(carry, program.map_chunk(chunk, cm)), None
+
+            partial, _ = jax.lax.scan(
+                body, program.zero(shape, dtype), (v, m))
+            return partial
+
+        if masked:
+            return jax.jit(fold)
+        return jax.jit(lambda block: fold(block, None))
+
+    def fold_block(
+        self,
+        program: MapReduceProgram,
+        block: Any,                      # [rows, ...] device or host array
+        mask: Optional[Any],             # [rows] bool; None = every row
+        eta: int,
+        row_shape: Tuple[int, ...],
+        dtype,
+    ) -> PyTree:
+        """Fold one block into a partial — the map phase at block granularity.
+
+        ``block`` committed to a device keeps the fold there (jit follows
+        committed inputs), which is the colocation property: the block's
+        payload bytes never leave its owner; only the partial will.
+        """
+        rows = int(block.shape[0])
+        key = ("bfold", program.cache_key(), rows, tuple(row_shape),
+               str(dtype), int(eta), mask is not None)
+        fn = self._get_or_build(
+            key, lambda: self._block_fold_fn(
+                program, rows, row_shape, dtype, eta, mask is not None))
+        return fn(block, mask) if mask is not None else fn(block)
+
+    def merge_finalize(
+        self,
+        program: MapReduceProgram,
+        partials: Sequence[PyTree],
+        row_shape: Tuple[int, ...],
+        dtype,
+    ) -> PyTree:
+        """Reduce phase: move the partials to the merge device and run one
+        jitted merge+finalize.  Zero partials finalize the monoid identity
+        (the empty-selection result).  Additive programs sum a stacked tree;
+        general merges reduce pairwise with log-depth."""
+        n = len(partials)
+        key = ("bmerge", program.cache_key(), n, tuple(row_shape), str(dtype))
+
+        def build():
+            shape = tuple(row_shape)
+
+            def mf(*ps):
+                if not ps:
+                    acc = program.zero(shape, dtype)
+                elif program.additive and len(ps) > 1:
+                    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+                    acc = jax.tree.map(lambda s: s.sum(axis=0), stacked)
+                else:
+                    items: List[PyTree] = list(ps)
+                    while len(items) > 1:
+                        items = [
+                            program.merge(items[i], items[i + 1])
+                            if i + 1 < len(items) else items[i]
+                            for i in range(0, len(items), 2)
+                        ]
+                    acc = items[0]
+                return program.finalize(acc)
+
+            return jax.jit(mf)
+
+        fn = self._get_or_build(key, build)
+        dev = self._merge_device
+        moved = [jax.device_put(p, dev) for p in partials]
+        return fn(*moved)
+
+    def partial_nbytes(self, program: MapReduceProgram,
+                       row_shape: Tuple[int, ...], dtype) -> int:
+        """Bytes of one partial (the unit of reduce-phase shuffle traffic).
+        Cached outside the executable LRU — shape arithmetic is not a
+        compile, so it must not move ``compile_count``."""
+        key = (program.cache_key(), tuple(row_shape), str(dtype))
+        nbytes = self._partial_bytes.get(key)
+        if nbytes is None:
+            tree = jax.eval_shape(
+                lambda: program.zero(tuple(row_shape), dtype))
+            nbytes = sum(
+                int(np.prod(x.shape, dtype=np.int64)) * x.dtype.itemsize
+                for x in jax.tree.leaves(tree))
+            self._partial_bytes[key] = nbytes
+        return nbytes
+
+    def fold_cost(
+        self,
+        program: MapReduceProgram,
+        rows: int,
+        row_shape: Tuple[int, ...],
+        dtype,
+        eta: int,
+        masked: bool = False,
+    ) -> Mapping[str, float]:
+        """XLA ``cost_analysis`` of the per-block fold executable (FLOPs /
+        bytes accessed) — the oracle the CSE bench and property test use to
+        show shared accumulators are computed once per chunk."""
+        fn = self._block_fold_fn(program, rows, row_shape, dtype, eta, masked)
+        args = [jax.ShapeDtypeStruct((rows,) + tuple(row_shape),
+                                     jnp.dtype(dtype))]
+        if masked:
+            args.append(jax.ShapeDtypeStruct((rows,), jnp.dtype(bool)))
+        cost = fn.lower(*args).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):   # JAX 0.4.x wraps it in a list
+            cost = cost[0] if cost else {}
+        return {"flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0))}
 
     # ------------------------------------------------------------------
 

@@ -15,8 +15,11 @@ before any bytes move:
    layout; index families are read exclusively by the predicate.
 3. **Program fusion** — every ``.map(program)`` statistic joins one
    :class:`~repro.core.stats.FusedProgram`, so mean+variance+histogram run in
-   a single ``shard_map`` pass over a single gather, sharing one compiled
-   executable and one plan-cache entry.
+   a single engine pass over a single gather, sharing one compiled
+   executable per block shape and one result-cache entry.  Members that
+   declare shared accumulators (``requires()``) are CSE'd: count and the
+   raw power sums fold once per chunk, however many statistics project from
+   them.
 
 Build plans through :meth:`GridSession.scan`::
 
@@ -30,8 +33,9 @@ Build plans through :meth:`GridSession.scan`::
     print(report.query.regions_pruned, "regions never touched")
 
 Builder methods are pure — each returns a new plan, so a scan can be reused
-as the base of several queries.  Results are memoized per (η, epoch): a
-repeated ``.collect()`` at an unchanged table is a pure plan-cache hit.
+as the base of several queries.  Results are memoized per (η, epoch) on the
+plan object; across plan objects the session's content-addressed result and
+partial caches make an equivalent re-execution fold zero payload rows.
 """
 
 from __future__ import annotations
@@ -199,33 +203,3 @@ class GridQuery:
             raise ValueError(
                 f"compute plans fold over exactly one column, got {cols}")
         return cols[0]
-
-    def plan_signature(self, eta: int) -> Tuple:
-        """The compiled-plan cache key: (programs, pruned-region
-        *epoch-lineage*, the pruned regions' owner devices, mesh shape, η)
-        plus projection/range/predicate identity.
-
-        Lineage — ``(rid, version)`` per surviving region, from the
-        session's :class:`~repro.core.blockstore.BlockStore` — replaces the
-        global epoch: a bound plan survives every mutation that does not
-        touch its own regions, which is what lets overlapping pruned scans
-        keep sharing device blocks across epochs.  Region moves fold in as
-        the plan's OWN regions' owner assignments (not a global placement
-        version), so a rebalance that moves other regions doesn't unbind
-        this plan either.  The predicate contributes ``id()``; the cache
-        entry pins the object so the id cannot be recycled while the entry
-        lives (the session verifies identity on every hit).
-        """
-        pruned = self.session.table.regions.prune(self.start, self.stop)
-        alloc = self.session.placement.alloc
-        return (
-            tuple(p.cache_key() for p in self.programs),
-            self.session.blocks.lineage(pruned),
-            tuple(alloc.get(r.rid) for r in pruned),
-            self.session._mesh_shape(),
-            int(eta),
-            self.resolved_columns(),
-            (self.start, self.stop),
-            None if self.predicate is None
-            else (id(self.predicate), self.index_qualifiers),
-        )

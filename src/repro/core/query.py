@@ -60,6 +60,16 @@ class QueryStats:
     blocks_transferred: int = 0   # crossed host→device for this execution
     gather_count: int = 0         # blocks whose host payload was re-read
     payload_bytes_transferred: int = 0  # physical bytes of the transfers
+    # --- fold-engine oracles (block-granular partial caching) ------------
+    # The fold is block-at-a-time: each surviving block with selected rows
+    # is one *partial*, either served from the partial cache or re-folded:
+    partials_total: int = 0       # foldable (selected-row) blocks the plan spans
+    partials_reused: int = 0      # partials served from the cache (zero rows read)
+    rows_folded: int = 0          # payload rows the map phase actually read
+    # which physical gather/fold path the planner chose for this execution:
+    # "blocks" (block-granular fold), "compact" (one-shot compacted gather),
+    # "retrieve" (host-side collect), "" for pre-fold stats objects.
+    gather_path: str = ""
 
     @property
     def total_bytes_scanned(self) -> int:
@@ -72,6 +82,19 @@ class QueryStats:
         assert self.blocks_reused + self.blocks_transferred == \
             self.blocks_total, self
         assert 0 <= self.gather_count <= self.blocks_transferred, self
+
+    def check_partial_invariant(self) -> None:
+        """Partial-cache consistency: a fully-reused plan folds zero rows,
+        any fold implies a non-reused partial, and the compact path never
+        touches blocks or partials (the differential harness asserts this
+        after every executed plan)."""
+        assert 0 <= self.partials_reused <= self.partials_total, self
+        if self.partials_total and self.partials_reused == self.partials_total:
+            assert self.rows_folded == 0, self
+        if self.gather_path == "blocks" and self.rows_folded > 0:
+            assert self.partials_reused < self.partials_total, self
+        if self.gather_path == "compact":
+            assert self.partials_total == 0 and self.blocks_total == 0, self
 
 
 def _scan_range(

@@ -14,7 +14,7 @@ jnp.float64`` on CPU for reference-grade accumulation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +26,47 @@ def _masked(rows: jax.Array, valid: jax.Array, acc_dtype) -> jax.Array:
     """Zero out invalid rows and cast to the accumulator dtype."""
     v = valid.reshape(valid.shape + (1,) * (rows.ndim - 1))
     return jnp.where(v, rows, 0).astype(acc_dtype)
+
+
+#: The shared-accumulator vocabulary of the CSE protocol: the masked row
+#: count and the elementwise raw power sums Σx..Σx⁴.  Every statistic that
+#: is a projection of these (mean, variance, moments, ...) can declare
+#: ``requires()`` and ride one shared fold inside a CSE'd FusedProgram.
+SHARED_ACCUMULATORS: Tuple[str, ...] = ("count", "s1", "s2", "s3", "s4")
+
+
+def shared_zero(names: Tuple[str, ...], row_shape, acc_dtype
+                ) -> Dict[str, jax.Array]:
+    z = jnp.zeros(row_shape, acc_dtype)
+    return {n: (jnp.zeros((), acc_dtype) if n == "count" else z)
+            for n in names}
+
+
+def shared_map_chunk(rows: jax.Array, valid: jax.Array,
+                     names: Tuple[str, ...], acc_dtype
+                     ) -> Dict[str, jax.Array]:
+    """Fold one chunk into exactly the requested shared accumulators.
+
+    This is the CSE: the masked cast ``x`` and the square ``x²`` are each
+    materialized once and reused across every moment that needs them,
+    however many member programs asked.
+    """
+    out: Dict[str, jax.Array] = {}
+    if "count" in names:
+        out["count"] = valid.sum().astype(acc_dtype)
+    if any(n in names for n in ("s1", "s2", "s3", "s4")):
+        x = _masked(rows, valid, acc_dtype)
+        if "s1" in names:
+            out["s1"] = x.sum(axis=0)
+        if any(n in names for n in ("s2", "s3", "s4")):
+            x2 = x * x
+            if "s2" in names:
+                out["s2"] = x2.sum(axis=0)
+            if "s3" in names:
+                out["s3"] = (x2 * x).sum(axis=0)
+            if "s4" in names:
+                out["s4"] = (x2 * x2).sum(axis=0)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +93,12 @@ class MeanProgram(MapReduceProgram):
 
     def finalize(self, p):
         return p["sum"] / jnp.maximum(p["count"], 1)
+
+    def requires(self):
+        return ("count", "s1")
+
+    def finalize_shared(self, shared):
+        return self.finalize({"sum": shared["s1"], "count": shared["count"]})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +146,18 @@ class VarianceProgram(MapReduceProgram):
         var = p["m2"] / jnp.maximum(p["count"], 1)
         return {"mean": p["mean"], "var": var, "count": p["count"]}
 
+    def requires(self):
+        # inside a CSE'd fusion the Chan partial gives way to the shared
+        # raw sums (count, Σx, Σx²): same result up to float associativity,
+        # and the shared path is additive — the fusion keeps the psum reduce
+        return ("count", "s1", "s2")
+
+    def finalize_shared(self, shared):
+        n = jnp.maximum(shared["count"], 1)
+        mean = shared["s1"] / n
+        var = jnp.maximum(shared["s2"] / n - mean * mean, 0)
+        return {"mean": mean, "var": var, "count": shared["count"]}
+
 
 @dataclasses.dataclass(frozen=True)
 class MomentsProgram(MapReduceProgram):
@@ -142,6 +201,13 @@ class MomentsProgram(MapReduceProgram):
             "count": p["count"],
         }
 
+    def requires(self):
+        return ("count", "s1", "s2", "s3", "s4")
+
+    def finalize_shared(self, shared):
+        # the private partial IS the raw power sums — reuse finalize as-is
+        return self.finalize(dict(shared))
+
 
 @dataclasses.dataclass(frozen=True)
 class CountProgram(MapReduceProgram):
@@ -154,7 +220,9 @@ class CountProgram(MapReduceProgram):
     Accumulates in int32 (``psum`` is exact on integers; int64 would need
     x64 mode), not the float32 the statistic programs default to — callers
     assert exact equality and float32 loses integer exactness past 2^24
-    rows."""
+    rows.  Deliberately NOT in the CSE pool: the shared ``count``
+    accumulates in the pool's float dtype, which would re-lose that
+    exactness — the private int32 fold is the whole point."""
 
     acc_dtype: jnp.dtype = jnp.int32
     additive = True
@@ -177,33 +245,80 @@ class FusedProgram(MapReduceProgram):
     """The monoid product of N statistic programs — one pass, N answers.
 
     ``GridQuery`` fuses every ``.map(program)`` on a plan into one of these,
-    so mean+variance+histogram share a single gather and a single
-    ``shard_map`` fold: partials are tuples, merged component-wise.  The
-    fused program is additive (single-``psum`` reduce) only when every
-    component is; one non-additive member moves the whole tuple onto the
-    all-gather path, which is still one executable and one data pass.
+    so mean+variance+histogram share a single gather and a single engine
+    pass.  With ``cse=True`` (the default) members that declare
+    :meth:`~repro.core.mapreduce.MapReduceProgram.requires` pool their raw
+    accumulators: each shared accumulator (count, Σx, Σx², ...) is folded
+    ONCE per chunk — via :func:`shared_map_chunk`, which also reuses the
+    masked cast and the square across moments — and ``finalize`` projects
+    every member's result from the pool.  Members without ``requires()``
+    (histogram, the exact int32 count) keep their private folds alongside.
+
+    The partial is ``{"shared": {dtype: {name: acc}}, "private": (...)}``;
+    shared accumulators merge by sum, so the fusion is additive (single
+    ``psum``) unless a *private* member is non-additive.  ``cse=False``
+    recovers the naive product (every member folds the chunk itself) — kept
+    for the FLOP-comparison bench and as an escape hatch.
     """
 
     programs: Tuple[MapReduceProgram, ...] = ()
+    cse: bool = True
 
     def __post_init__(self):
         if not self.programs:
             raise ValueError("FusedProgram needs at least one program")
         object.__setattr__(self, "programs", tuple(self.programs))
+        # role per member: the index into the private tuple, or the shared
+        # pool key (accumulator dtype) it projects from
+        private: Tuple[MapReduceProgram, ...] = ()
+        roles = []
+        groups: Dict[str, Tuple[str, ...]] = {}
+        for p in self.programs:
+            req = p.requires() if self.cse else ()
+            if req:
+                dt = str(jnp.dtype(getattr(p, "acc_dtype", jnp.float32)))
+                merged = set(groups.get(dt, ())) | set(req)
+                groups[dt] = tuple(n for n in SHARED_ACCUMULATORS
+                                   if n in merged)
+                roles.append(("shared", dt))
+            else:
+                roles.append(("private", len(private)))
+                private = private + (p,)
+        object.__setattr__(self, "_roles", tuple(roles))
+        object.__setattr__(self, "_private", private)
+        object.__setattr__(self, "_shared_groups",
+                           tuple(sorted(groups.items())))
         object.__setattr__(
-            self, "additive", all(p.additive for p in self.programs))
+            self, "additive", all(p.additive for p in private))
 
     def zero(self, row_shape, dtype):
-        return tuple(p.zero(row_shape, dtype) for p in self.programs)
+        shared = {dt: shared_zero(names, row_shape, jnp.dtype(dt))
+                  for dt, names in self._shared_groups}
+        return {"shared": shared,
+                "private": tuple(p.zero(row_shape, dtype)
+                                 for p in self._private)}
 
     def map_chunk(self, rows, valid):
-        return tuple(p.map_chunk(rows, valid) for p in self.programs)
+        shared = {dt: shared_map_chunk(rows, valid, names, jnp.dtype(dt))
+                  for dt, names in self._shared_groups}
+        return {"shared": shared,
+                "private": tuple(p.map_chunk(rows, valid)
+                                 for p in self._private)}
 
     def merge(self, a, b):
-        return tuple(p.merge(x, y) for p, x, y in zip(self.programs, a, b))
+        shared = jax.tree.map(jnp.add, a["shared"], b["shared"])
+        private = tuple(p.merge(x, y) for p, x, y in
+                        zip(self._private, a["private"], b["private"]))
+        return {"shared": shared, "private": private}
 
     def finalize(self, partial):
-        return tuple(p.finalize(x) for p, x in zip(self.programs, partial))
+        out = []
+        for p, (kind, ref) in zip(self.programs, self._roles):
+            if kind == "shared":
+                out.append(p.finalize_shared(partial["shared"][ref]))
+            else:
+                out.append(p.finalize(partial["private"][ref]))
+        return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -73,3 +73,58 @@ class KernelMeanProgram(MapReduceProgram):
 
     def finalize(self, p):
         return p["sum"] / jnp.maximum(p["count"], 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSecondMomentProgram(MapReduceProgram):
+    """Mean/variance/count from the kernel's ``(Σx, Σx², n)`` — the
+    Pallas-backed analogue of ``VarianceProgram``'s finalize contract
+    (raw-sums form instead of the Chan merge; equal up to float
+    associativity, and additive so the reduce stays one ``psum``)."""
+
+    interpret: bool = True
+    additive = True
+
+    def zero(self, row_shape, dtype):
+        z = jnp.zeros(row_shape, jnp.float32)
+        return {"s1": z, "s2": z, "count": jnp.zeros((), jnp.float32)}
+
+    def map_chunk(self, rows, valid):
+        s, sq, c = streaming_stats(rows, valid, interpret=self.interpret)
+        return {"s1": s, "s2": sq, "count": c}
+
+    def merge(self, a, b):
+        return jax.tree.map(jnp.add, a, b)
+
+    def finalize(self, p):
+        n = jnp.maximum(p["count"], 1)
+        mean = p["s1"] / n
+        var = jnp.maximum(p["s2"] / n - mean * mean, 0)
+        return {"mean": mean, "var": var, "count": p["count"]}
+
+
+def kernel_map_program(program: MapReduceProgram, impl: str = "pallas",
+                       interpret: bool = True) -> MapReduceProgram:
+    """The Pallas map-phase twin of a sum/count-family program.
+
+    ``GridSession.run(..., impl="pallas")`` routes through here: the
+    returned program folds each chunk with :func:`streaming_stats` (one
+    HBM→VMEM streaming pass producing Σx/Σx²/count) and finalizes to the
+    same result contract as the jnp reference program.  Kernel programs
+    accumulate fp32 (the kernel's VMEM accumulator dtype).  Programs whose
+    statistic is not a projection of (Σx, Σx², n) have no kernel twin —
+    ask for them with the default reference impl.
+    """
+    from repro.core.stats import MeanProgram, VarianceProgram
+
+    if impl != "pallas":
+        raise ValueError(f"unknown map-phase impl {impl!r}; "
+                         "use impl='pallas' or the default reference path")
+    if isinstance(program, MeanProgram):
+        return KernelMeanProgram(interpret=interpret)
+    if isinstance(program, VarianceProgram):
+        return KernelSecondMomentProgram(interpret=interpret)
+    raise ValueError(
+        f"no pallas map phase for {type(program).__name__}: the "
+        "streaming_stats kernel covers the sum/count family "
+        "(MeanProgram, VarianceProgram)")

@@ -272,21 +272,26 @@ class TestStaleStateReleased:
         live = {r.rid for r in t.regions}
         stored = {k[0][0] for k in s.blocks._blocks.keys()}
         assert stored <= live, "split parents' blocks must be forgotten"
+        # cached results spanning the split parent are keyed on its dead
+        # lineage — they must be evicted eagerly, not ride the LRU to TTL
+        for entry in s._results.values():
+            assert entry.region_ids <= live, \
+                "split parents' results must be forgotten"
         res, rep = s.run(MeanProgram())
         rep.query.check_block_invariant()
         np.testing.assert_allclose(
             np.asarray(res), t.column("img", "data").mean(0), atol=1e-5)
 
-    def test_dead_scan_plans_evicted_on_their_regions_mutation(self):
+    def test_dead_results_evicted_on_their_regions_mutation(self):
         t = make_table()
         s = GridSession(t, default_eta=4)
         s.scan(prefix="b").map(MeanProgram()).stats()
         s.scan(prefix="d").map(MeanProgram()).stats()
-        assert len(s._scan_plans) == 2
-        s.remove(rowkey=b"b0000")       # kills ONLY the b-plan's lineage
-        assert len(s._scan_plans) == 1
+        assert len(s._results) == 2
+        s.remove(rowkey=b"b0000")       # kills ONLY the b-result's lineage
+        assert len(s._results) == 1
         s.remove(rowkey=b"d0000")
-        assert len(s._scan_plans) == 0
+        assert len(s._results) == 0
 
 
 # ----------------------------------------------------------------------
@@ -329,9 +334,11 @@ class TestCacheCaps:
             t.column("img", "data")[:8].mean(0), atol=1e-5)
 
     def test_caps_are_configurable(self):
-        s = GridSession(make_table(), plan_cache_cap=7, block_cache_cap=11)
-        assert s._scan_plans.cap == 7 and s._plans.cap == 7
+        s = GridSession(make_table(), plan_cache_cap=7, block_cache_cap=11,
+                        partial_cache_cap=13)
+        assert s._results.cap == 7
         assert s.blocks.cap == 11
+        assert s.blocks._partials.cap == 13
 
     def test_engine_executable_cache_is_bounded(self):
         t = make_table(per=4)
@@ -367,7 +374,7 @@ class TestRebalanceRehomesBlocks:
             from repro.core.balancer import NodeSpec
             from repro.core.grid import GridSession
             from repro.core.regions import HierarchicalSplitPolicy
-            from repro.core.stats import MeanProgram
+            from repro.core.stats import MeanProgram, VarianceProgram
             from repro.core.table import make_mip_table
 
             rng = np.random.default_rng(0)
@@ -389,14 +396,25 @@ class TestRebalanceRehomesBlocks:
             assert moved, "power skew must force region moves"
             res, rep = s.run(MeanProgram())
             q = rep.query
-            # moved regions re-ship their cached host blocks; NOTHING is
-            # re-read from the table (content versions are untouched)
-            assert q.gather_count == 0, q
-            assert q.blocks_transferred == len(moved), (q, moved)
-            assert q.blocks_reused == q.blocks_total - len(moved), q
+            # fold partials are placement-independent: the repeat query
+            # after the move folds nothing and ships nothing at all
+            assert q.rows_folded == 0, q
+            assert q.partials_reused == q.partials_total, q
+            assert q.gather_count == 0 and q.blocks_transferred == 0, q
             np.testing.assert_allclose(np.asarray(res),
                                        t.column("img", "data").mean(0),
                                        atol=1e-5)
+            # a NEW program must fold, so it needs the blocks: moved
+            # regions re-ship their cached host copies to the new owners;
+            # NOTHING is re-read from the table (content untouched)
+            res2, rep2 = s.run(VarianceProgram())
+            q2 = rep2.query
+            assert q2.gather_count == 0, q2
+            assert q2.blocks_transferred == len(moved), (q2, moved)
+            assert q2.blocks_reused == q2.blocks_total - len(moved), q2
+            np.testing.assert_allclose(np.asarray(res2["var"]),
+                                       t.column("img", "data").var(0),
+                                       atol=1e-4)
             print("REBALANCE_BLOCKS_OK", len(moved))
         """
         proc = subprocess.run(

@@ -158,6 +158,14 @@ class DifferentialDriver:
                 np.asarray(res), self.oracle_column(keys).mean(0), atol=3e-4)
         else:
             assert np.all(np.isfinite(np.asarray(res)))
+        # the fold-engine acceptance invariant, pinned inside the walk: an
+        # immediate repeat at an unchanged table folds ZERO payload rows
+        res2, rep2 = self.session.run(MeanProgram())
+        self._check_report(rep2)
+        q2 = rep2.query
+        assert q2.rows_folded == 0, q2
+        assert q2.partials_reused == q2.partials_total, q2
+        np.testing.assert_array_equal(np.asarray(res), np.asarray(res2))
 
     def op_query_prefix(self, seed):
         rng = np.random.default_rng(seed)
@@ -213,7 +221,8 @@ class DifferentialDriver:
 
     def _check_report(self, rep):
         q = rep.query
-        q.check_block_invariant()   # reused + transferred == total
+        q.check_block_invariant()    # reused + transferred == total
+        q.check_partial_invariant()  # all-reused ⟹ zero rows folded, etc.
         assert q.regions_scanned + q.regions_pruned == len(self.table.regions)
         assert rep.epoch == self.session.epoch
 
@@ -230,7 +239,9 @@ class DifferentialDriver:
         assert self.table.num_rows == len(self.rows)
         self.table.check_invariants()
         s = self.session.blocks.stats
-        assert s.hits + s.transfers >= s.gathers   # a gather always ships
+        # a gather is followed by a device transfer (fold path) or is a
+        # host-only retrieve read (fetch_host) — never silently dropped
+        assert s.hits + s.transfers + s.host_reads >= s.gathers
 
     OPS = ("upload", "upload_overwrite", "remove_key", "remove_range",
            "rebalance", "query_full", "query_prefix", "query_predicate",

@@ -130,25 +130,40 @@ class TestPlanCache:
         assert s.metrics.plan_misses == 2
 
 
-class TestIncrementalLayouts:
-    def test_overwrite_refreshes_instead_of_rebuilding(self):
+class TestIncrementalFolds:
+    def test_repeat_stats_folds_zero_rows(self):
+        # the fold-engine acceptance criterion: a repeat query at an
+        # unchanged table reads zero payload rows
         s = GridSession(make_population(48), default_eta=8)
+        _, r1 = s.run(MeanProgram())
+        assert r1.query.rows_folded == 48
+        _, r2 = s.run(MeanProgram())
+        q = r2.query
+        assert q.rows_folded == 0
+        assert q.partials_total > 0
+        assert q.partials_reused == q.partials_total
+        assert r2.mapreduce.local_rows_read == 0
+
+    def test_overwrite_refolds_only_dirty_region(self):
+        s = GridSession(make_population(64, split_bytes=40_000_000),
+                        default_eta=8)
+        assert len(s.table.regions) > 1
         s.run(MeanProgram())
-        assert s.metrics.layout_full_builds == 1
         s.upload(["img00002"], row_batch(["img00002"], seed=3),
                  on_duplicate="overwrite")
-        s.run(MeanProgram())
-        assert s.metrics.layout_full_builds == 1
-        assert s.metrics.layout_refreshes == 1
+        _, r = s.run(MeanProgram())
+        q = r.query
+        assert q.partials_reused == q.partials_total - 1
+        dirty = s.table.regions.region_for(b"img00002")
+        assert q.rows_folded == dirty.num_rows(s.table.keys)
 
-    def test_capacity_growth_forces_full_rebuild(self):
+    def test_partials_are_eta_keyed(self):
         s = GridSession(make_population(16), default_eta=4)
         s.run(MeanProgram())
-        # plenty of new rows: per-device need exceeds cached capacity
-        keys = [f"xx{i:04d}" for i in range(64)]
-        s.upload(keys, row_batch(keys))
-        s.run(MeanProgram())
-        assert s.metrics.layout_full_builds == 2
+        _, r2 = s.run(MeanProgram(), eta=8)   # new chunking → re-fold
+        assert not r2.plan_cache_hit and r2.query.rows_folded == 16
+        _, r3 = s.run(MeanProgram(), eta=8)   # now cached at η=8 too
+        assert r3.plan_cache_hit and r3.query.rows_folded == 0
 
     def test_dirty_regions_counted(self):
         s = GridSession(make_population(32))
@@ -164,17 +179,22 @@ class TestIncrementalLayouts:
         assert s.upload(batch, row_batch(batch)) == 1
         assert s.metrics.regions_dirtied == 1
 
-    def test_stale_layouts_evicted(self):
-        s = GridSession(make_population(16), default_eta=4)
-        s.run(MeanProgram())
-        s.run(MeanProgram(), eta=8)  # a second cached layout
-        for i in range(GridSession.LAYOUT_TTL_EPOCHS + 2):
-            k = f"n{i:03d}"
+    def test_stale_results_evicted(self):
+        s = GridSession(make_population(64, split_bytes=40_000_000),
+                        default_eta=8)
+        q = s.scan(prefix="img0000").map(MeanProgram())
+        q.collect()
+        assert len(s._results) == 1
+        # mutations far from the scanned regions never unbind the entry —
+        # only idling past the TTL evicts it
+        for i in range(GridSession.RESULT_TTL_EPOCHS + 2):
+            k = f"zz{i:03d}"
             s.upload([k], row_batch([k], seed=i))
-        assert not s._layouts       # both idle past the TTL
-        res, _ = s.run(MeanProgram())  # rebuilds cleanly
+        assert len(s._results) == 0
+        res, _ = s.scan(prefix="img0000").map(MeanProgram()).collect()
         np.testing.assert_allclose(
-            np.asarray(res), s.table.column("img", "data").mean(0), atol=1e-5)
+            np.asarray(res),
+            s.table.column("img", "data")[:10].mean(0), atol=1e-5)
 
 
 class TestAdoption:

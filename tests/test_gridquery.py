@@ -141,14 +141,19 @@ class TestPruningAcceptance:
             np.asarray(res), t.column("img", "data")[10:20].mean(0),
             atol=1e-5)
 
-    def test_fused_mean_variance_one_compile_one_gather(self):
+    def test_fused_mean_variance_compiles_like_one_program(self):
         t = make_table(per=10)
-        s = GridSession(t, default_eta=4)
-        c0, g0 = s.engine.compile_count, s.metrics.payload_gathers
-        (mean, var), rep = (s.scan().map(MeanProgram())
+        # fusion means N statistics cost the SAME executable set as one
+        # program (one per-block fold + one merge), not N of each
+        s1 = GridSession(t, default_eta=4)
+        s1.run(MeanProgram())
+        single = s1.engine.compile_count
+        s2 = GridSession(t, default_eta=4)
+        g0 = s2.metrics.payload_gathers
+        (mean, var), rep = (s2.scan().map(MeanProgram())
                             .map(VarianceProgram()).reduce().collect())
-        assert s.engine.compile_count - c0 == 1
-        assert s.metrics.payload_gathers - g0 == 1
+        assert s2.engine.compile_count == single
+        assert s2.metrics.payload_gathers - g0 == 1
         data = t.column("img", "data")
         np.testing.assert_allclose(np.asarray(mean), data.mean(0), atol=1e-5)
         np.testing.assert_allclose(np.asarray(var["var"]), data.var(0),
@@ -157,15 +162,17 @@ class TestPruningAcceptance:
 
     def test_fused_three_statistics_single_pass(self):
         t = make_table(per=8)
+        s1 = GridSession(t, default_eta=4)
+        s1.scan(prefix="c").map(MeanProgram()).collect()
+        single = s1.engine.compile_count
         s = GridSession(t, default_eta=4)
-        c0 = s.engine.compile_count
         (mean, var, hist), _ = (
             s.scan(prefix="c")
             .map(MeanProgram())
             .map(VarianceProgram())
             .map(HistogramProgram(lo=-4.0, hi=4.0, bins=16))
             .collect())
-        assert s.engine.compile_count - c0 == 1
+        assert s.engine.compile_count == single
         assert s.metrics.programs_fused == 3
         sub = t.column("img", "data")[16:24]
         np.testing.assert_allclose(np.asarray(mean), sub.mean(0), atol=1e-5)
@@ -179,7 +186,12 @@ class TestPruningAcceptance:
 class TestFusedProgram:
     def test_additivity_follows_members(self):
         assert FusedProgram((MeanProgram(), HistogramProgram())).additive
-        assert not FusedProgram((MeanProgram(), VarianceProgram())).additive
+        # CSE pools variance's raw sums (count, Σx, Σx²), which merge by
+        # sum — the fusion keeps the single-psum reduce
+        assert FusedProgram((MeanProgram(), VarianceProgram())).additive
+        # the naive product follows the weakest member
+        assert not FusedProgram((MeanProgram(), VarianceProgram()),
+                                cse=False).additive
 
     def test_needs_programs(self):
         with pytest.raises(ValueError):

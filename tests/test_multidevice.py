@@ -90,9 +90,10 @@ def test_colocated_mapreduce_8dev():
 
 @pytest.mark.slow
 def test_grid_session_incremental_8dev():
-    """A mutation into ONE region re-gathers only the owning device's
-    payload block; the other 7 devices' blocks are reused byte-for-byte,
-    and the repeated program never recompiles at a fixed layout shape."""
+    """A mutation into ONE region re-gathers, re-ships, and RE-FOLDS only
+    that region's block on its owner device; every other device's block and
+    fold partial is reused, and the repeated program never recompiles at a
+    fixed block shape."""
     out = run_snippet("""
         import numpy as np, jax
         from repro.core.grid import GridSession
@@ -118,10 +119,11 @@ def test_grid_session_incremental_8dev():
         t.upload([f'img{i:05d}' for i in range(n)], batch(n, 0))
 
         s = GridSession(t, default_eta=8)
-        res, _ = s.run(MeanProgram())
+        res, rep1 = s.run(MeanProgram())
         assert np.allclose(np.asarray(res), t.column('img', 'data').mean(0),
                            atol=1e-5)
-        assert s.metrics.layout_full_builds == 1
+        q1 = rep1.query
+        assert q1.rows_folded == n and q1.partials_reused == 0, q1
         compiles = s.engine.compile_count
 
         # overwrite one existing row: exactly one region (one node) dirty
@@ -129,17 +131,20 @@ def test_grid_session_incremental_8dev():
         res2, rep2 = s.run(MeanProgram())
         assert np.allclose(np.asarray(res2),
                            t.column('img', 'data').mean(0), atol=1e-5)
-        assert s.metrics.layout_refreshes == 1
-        assert s.metrics.devices_regathered == 8 + 1   # full build + 1 dirty
-        assert s.metrics.devices_reused == 7           # the other 7 reused
+        q2 = rep2.query
+        assert q2.partials_reused == q2.partials_total - 1, q2
+        assert q2.blocks_transferred == 1 and q2.gather_count == 1, q2
+        dirty = t.regions.region_for(b'img00000')
+        assert q2.rows_folded == dirty.num_rows(t.keys), q2
         assert s.engine.compile_count == compiles      # no recompile
-        assert not rep2.plan_cache_hit                 # but a fresh plan
+        assert not rep2.plan_cache_hit                 # but a fresh result
 
-        # rebalance dirties only source+dest nodes of moved regions
+        # rebalance: partials are placement-independent, nothing re-folds
         moved = s.rebalance(tolerance=0.01)
-        res3, _ = s.run(MeanProgram())
+        res3, rep3 = s.run(MeanProgram())
         assert np.allclose(np.asarray(res3),
                            t.column('img', 'data').mean(0), atol=1e-5)
+        assert rep3.query.rows_folded == 0, rep3.query
         print('GRID_INCREMENTAL_OK', len(moved))
     """)
     assert "GRID_INCREMENTAL_OK" in out
