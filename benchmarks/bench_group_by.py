@@ -1,0 +1,278 @@
+"""Grouped analytics microbench — one-pass group_by vs a per-group loop,
+and tree-reduce vs funnel merge at high region counts.
+
+Two comparisons back the PR's perf claims:
+
+1. **grouped vs per-group loop** — ``scan().group_by("idx:site")
+   .map(mean).map(variance)`` computes all G strata in ONE block pass
+   (group-keyed partials, segment-summed CSE pool) against the workload it
+   replaces: G separate predicate queries, each re-scanning the index and
+   re-folding its subset.  Cold (fresh session) and warm (repeat on the
+   same session) walls for both.
+2. **tree vs funnel merge** — ``merge_finalize`` over many per-block
+   partials on an 8-device mesh (subprocess with
+   ``--xla_force_host_platform_device_count=8``), psum-tree against the
+   forced single-device funnel.  Skipped gracefully (reported as 0) where
+   the subprocess is unavailable.
+
+Artifact: ``BENCH_group_by.json`` via benchmarks/run.py (also in
+``--smoke``; CI uploads it and the perf gate checks the headline
+``grouped_speedup_vs_loop``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.grid import GridSession
+from repro.core.regions import HierarchicalSplitPolicy
+from repro.core.stats import MeanProgram, VarianceProgram
+from repro.core.table import ColumnSpec, make_mip_table
+
+N_REGIONS = 16
+ROWS_PER_REGION = 32
+PAYLOAD = (16, 16)
+N_SITES = 8
+ETA = 8
+REPS = 10
+
+MERGE_SNIPPET = """
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.mapreduce import MapReduceEngine
+from repro.core.stats import MeanProgram
+from repro.utils import make_mesh
+
+D, P, PAYLOAD, REPS = 8, %(n_partials)d, %(payload)s, %(reps)d
+assert jax.device_count() == D
+mesh = make_mesh((D,), ("data",))
+devices = list(np.asarray(mesh.devices).flat)
+program = MeanProgram()
+rng = np.random.default_rng(0)
+partials = []
+owners = []
+for i in range(P):
+    owner = i %% D
+    p = {"sum": jnp.asarray(rng.normal(size=PAYLOAD).astype(np.float32)),
+         "count": jnp.asarray(np.float32(4.0))}
+    partials.append(jax.device_put(p, devices[owner]))
+    owners.append(owner)
+
+def timed(eng, **kw):
+    eng.merge_finalize(program, partials, PAYLOAD, np.float32, **kw)  # compile
+    samples = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            eng.merge_finalize(program, partials, PAYLOAD, np.float32, **kw))
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+tree_eng = MapReduceEngine(mesh)
+funnel_eng = MapReduceEngine(mesh, merge_strategy="funnel")
+tree_s = timed(tree_eng, owners=owners)
+funnel_s = timed(funnel_eng, owners=owners)
+assert tree_eng.merge_path_counts["tree"] > 0
+assert funnel_eng.merge_path_counts["funnel"] > 0
+print("MERGE_JSON " + json.dumps({"tree_s": tree_s, "funnel_s": funnel_s}))
+"""
+
+
+def _make_table(seed=0):
+    rng = np.random.default_rng(seed)
+    groups = [f"g{i:02d}" for i in range(N_REGIONS)]
+    t = make_mip_table(
+        payload_shape=PAYLOAD,
+        extra_index_columns=[ColumnSpec("site", (), np.int32)],
+        split_policy=HierarchicalSplitPolicy(max_region_bytes=10**18),
+        presplit_keys=groups[1:])
+    keys = [f"{g}x{i:04d}" for g in groups for i in range(ROWS_PER_REGION)]
+    n = len(keys)
+    t.upload(keys, {
+        "img": {"data": rng.normal(size=(n,) + PAYLOAD).astype(np.float32)},
+        "idx": {"size": rng.integers(6_000_000, 20_000_001, n),
+                "site": rng.integers(0, N_SITES, n).astype(np.int32)}})
+    return t
+
+
+def _timed(fn, reps=REPS):
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def _clear_data_caches(s):
+    """Forget results, partials, and resident blocks (compiled executables
+    stay): the next query pays the full gather+fold, not the compile —
+    the steady-state "cold data" regime a long-lived service sees."""
+    s._results.clear()
+    s.blocks.clear()
+
+
+def _timed_cold_data(s, fn, reps=REPS):
+    samples = []
+    for _ in range(reps):
+        _clear_data_caches(s)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def _site_predicate(site):
+    return lambda cols: cols["site"] == site
+
+
+def _grouped_query(s):
+    return (s.scan().select("img:data").group_by("idx:site")
+            .map(MeanProgram()).map(VarianceProgram()).reduce())
+
+
+def _loop_queries(s, sites):
+    """The workload group_by replaces: one fused mean+variance query per
+    stratum — each pass re-scans the index and re-folds its subset."""
+    out = []
+    for k in sites:
+        (mean, var), _ = (s.scan().select("img:data")
+                          .where(_site_predicate(int(k)), ["site"])
+                          .map(MeanProgram()).map(VarianceProgram())
+                          .reduce().collect())
+        out.append((mean, var))
+    return out
+
+
+def _merge_bench():
+    """tree vs funnel merge on 8 forced host devices (subprocess)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    snippet = MERGE_SNIPPET % {
+        "n_partials": 256, "payload": repr(PAYLOAD), "reps": 20}
+    try:
+        proc = subprocess.run([sys.executable, "-c", snippet],
+                              capture_output=True, text=True, env=env,
+                              timeout=300)
+    except (subprocess.SubprocessError, OSError):
+        return {}
+    if proc.returncode != 0:
+        return {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("MERGE_JSON "):
+            return json.loads(line[len("MERGE_JSON "):])
+    return {}
+
+
+def run(verbose: bool = True):
+    t = _make_table()
+    sites = np.unique(t.column("idx", "site"))
+    data = t.column("img", "data")
+    site_col = t.column("idx", "site")
+
+    # --- grouped one-pass: cold then warm -------------------------------
+    s = GridSession(t, default_eta=ETA, compact_gather_threshold=0.0)
+    t0 = time.perf_counter()
+    res, rep_cold = _grouped_query(s).collect()
+    jax.block_until_ready(res.values)
+    grouped_cold_s = time.perf_counter() - t0
+    assert rep_cold.query.num_groups == len(sites)
+    assert rep_cold.query.gather_count == N_REGIONS   # ONE gather per block
+    # correctness vs the groupby oracle
+    mean, var = res.values
+    for g, k in enumerate(res.keys):
+        sel = data[site_col == k]
+        np.testing.assert_allclose(np.asarray(mean)[g], sel.mean(0),
+                                   atol=1e-3)
+        np.testing.assert_allclose(np.asarray(var["var"])[g], sel.var(0),
+                                   rtol=1e-3, atol=1e-3)
+
+    def warm():
+        r, rep = _grouped_query(s).collect()
+        assert rep.query.rows_folded == 0, rep.query    # acceptance
+        return r.values
+    grouped_warm_s = _timed(warm)
+    # cold DATA, warm jit: caches cleared each rep, executables kept —
+    # the steady-state fold+gather cost the one-pass claim is about
+    grouped_data_s = _timed_cold_data(
+        s, lambda: _grouped_query(s).collect()[0].values)
+
+    # --- per-group-loop baseline: G predicate queries -------------------
+    s_loop = GridSession(t, default_eta=ETA, compact_gather_threshold=0.0)
+    t0 = time.perf_counter()
+    loop_res = _loop_queries(s_loop, sites)
+    jax.block_until_ready(loop_res[-1][0])
+    loop_cold_s = time.perf_counter() - t0
+    loop_warm_s = _timed(lambda: _loop_queries(s_loop, sites)[-1][0])
+    loop_data_s = _timed_cold_data(
+        s_loop, lambda: _loop_queries(s_loop, sites)[-1][0])
+    # the loop answers must agree with the grouped ones (same statistics)
+    for g, k in enumerate(res.keys):
+        np.testing.assert_allclose(np.asarray(loop_res[g][0]),
+                                   np.asarray(mean)[g], atol=1e-3)
+
+    # headline: cold-data regime (per-rep cleared caches, jit warm) — the
+    # loop re-scans the index and re-folds every block once PER STRATUM,
+    # the grouped pass folds each block once for all strata.  No hard
+    # assert here: the committed baseline in perf_baselines.json is the
+    # single regression mechanism (check_regression.py reports properly
+    # instead of crashing the artifact write on a noisy runner).
+    grouped_speedup = loop_data_s / max(grouped_data_s, 1e-9)
+    warm_speedup = loop_warm_s / max(grouped_warm_s, 1e-9)
+
+    # --- merge phase: tree reduce vs funnel at high region count --------
+    merge = _merge_bench()
+    tree_s = float(merge.get("tree_s", 0.0))
+    funnel_s = float(merge.get("funnel_s", 0.0))
+
+    out = {
+        "n_rows": t.num_rows,
+        "n_regions": N_REGIONS,
+        "n_sites": int(len(sites)),
+        "eta": ETA,
+        "grouped_cold_s": grouped_cold_s,
+        "grouped_cold_data_s": grouped_data_s,
+        "grouped_warm_s": grouped_warm_s,
+        "loop_cold_s": loop_cold_s,
+        "loop_cold_data_s": loop_data_s,
+        "loop_warm_s": loop_warm_s,
+        "grouped_speedup_vs_loop": grouped_speedup,
+        "grouped_warm_speedup_vs_loop": warm_speedup,
+        "warm_rows_folded": 0,
+        "merge_tree_s": tree_s,
+        "merge_funnel_s": funnel_s,
+        "merge_tree_speedup": (funnel_s / tree_s) if tree_s > 0 else 0.0,
+        "merge_partials": 256 if merge else 0,
+    }
+    if verbose:
+        print(f"grouped one-pass: cold={grouped_cold_s*1e3:.1f}ms "
+              f"cold-data={grouped_data_s*1e3:.1f}ms "
+              f"warm={grouped_warm_s*1e3:.2f}ms over {len(sites)} sites")
+        print(f"per-group loop : cold={loop_cold_s*1e3:.1f}ms "
+              f"cold-data={loop_data_s*1e3:.1f}ms "
+              f"warm={loop_warm_s*1e3:.2f}ms "
+              f"({grouped_speedup:.1f}x cold-data win, "
+              f"{warm_speedup:.1f}x warm)")
+        if merge:
+            print(f"merge @256 partials x 8 dev: tree={tree_s*1e3:.2f}ms "
+                  f"funnel={funnel_s*1e3:.2f}ms "
+                  f"({out['merge_tree_speedup']:.2f}x)")
+        else:
+            print("merge bench skipped (8-device subprocess unavailable)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

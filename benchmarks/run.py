@@ -9,7 +9,9 @@ summary EXPERIMENTS.md quotes, and writes one JSON artifact per bench
 
 ``--smoke`` runs every artifact-emitting bench except the table-scheme
 sweep and the roofline (balancer, chunk model, kernels, query pruning,
-blockstore, fold engine) — CI uploads the JSON files from each run.
+blockstore, fold engine, group_by) — CI uploads the JSON files from each
+run and gates headline metrics against ``benchmarks/perf_baselines.json``
+via ``benchmarks/check_regression.py``.
 """
 
 from __future__ import annotations
@@ -120,6 +122,18 @@ def run_fold_engine() -> None:
                    f"cse_flops={b['cse_flop_ratio']:.2f}x"))
 
 
+def run_group_by() -> None:
+    from benchmarks import bench_group_by
+
+    _run_bench(
+        "group_by",
+        "[PR 5] Grouped analytics: one-pass group_by + tree-reduce merge",
+        bench_group_by.run,
+        lambda b: (f"grouped_x={b['grouped_speedup_vs_loop']:.1f};"
+                   f"warm_x={b['grouped_warm_speedup_vs_loop']:.1f};"
+                   f"merge_tree_x={b['merge_tree_speedup']:.2f}"))
+
+
 def run_kernels() -> None:
     from benchmarks import bench_kernels
 
@@ -151,6 +165,7 @@ def main() -> None:
         run_query_pruning()
         run_blockstore()
         run_fold_engine()
+        run_group_by()
         print("\nsmoke benchmarks complete")
         return
 
@@ -162,6 +177,7 @@ def main() -> None:
     run_query_pruning()
     run_blockstore()
     run_fold_engine()
+    run_group_by()
     run_kernels()
 
     print("\n--- Roofline (single-pod dry-run artifacts) ---")

@@ -55,6 +55,8 @@ from repro.core.stats import (
     MomentsProgram,
     HistogramProgram,
     FusedProgram,
+    GroupedProgram,
+    GroupedResult,
 )
 from repro.core.query import indexed_query, naive_query, QueryStats
 from repro.core.plan import GridQuery, prefix_range
@@ -72,7 +74,7 @@ __all__ = [
     "ChunkModelParams", "ChunkModel", "PAPER_PARAMS", "TPU_V5E_PARAMS",
     "MapReduceEngine", "MapReduceProgram",
     "CountProgram", "MeanProgram", "VarianceProgram", "MomentsProgram",
-    "HistogramProgram", "FusedProgram",
+    "HistogramProgram", "FusedProgram", "GroupedProgram", "GroupedResult",
     "indexed_query", "naive_query", "QueryStats",
     "GridQuery", "prefix_range",
     "BlockStore", "DeviceBlock", "LRUCache",

@@ -132,11 +132,16 @@ class DeviceBlock:
     family: str
     qualifier: str
     version: int
-    rows: int
-    nbytes: int
+    rows: int                      # logical rows (the region's real rows)
+    nbytes: int                    # logical host bytes (unpadded)
     host: np.ndarray
     device: Any = None             # jax.Array committed to the owner shard
     device_index: Optional[int] = None
+    # physical bytes of the committed device copy (0 while host-only) —
+    # larger than ``nbytes`` when the session commits blocks pre-padded to
+    # the fold bucket; transfer/residency oracles report THIS, not the
+    # logical size
+    device_nbytes: int = 0
 
 
 @dataclasses.dataclass
@@ -313,6 +318,7 @@ class BlockStore:
             blk = dataclasses.replace(blk)
         blk.device = to_device(blk.host, owner_index)
         blk.device_index = owner_index
+        blk.device_nbytes = int(getattr(blk.device, "nbytes", blk.nbytes))
         self.stats.transfers += 1
         self._blocks.put(key, blk)
         return blk, False, gathered
@@ -351,14 +357,22 @@ class BlockStore:
     # ------------------------------------------------------------------
 
     def partial_key(self, region: Region, family: str, qualifier: str,
-                    program_key: Tuple, mask_sig: str, eta: int) -> Tuple:
+                    program_key: Tuple, mask_sig: str, eta: int,
+                    group_sig: str = "") -> Tuple:
         """The content address of one block's fold partial: block lineage
-        (signature + version) × program × row-mask signature × η.  Any
-        mutation to the region bumps the embedded version; any change to
-        the selected-row subset changes ``mask_sig`` — either way the key
-        becomes unmatchable and the partial re-folds."""
+        (signature + version) × program × row-mask signature × η × group-key
+        signature.  Any mutation to the region bumps the embedded version;
+        any change to the selected-row subset changes ``mask_sig`` — either
+        way the key becomes unmatchable and the partial re-folds.
+
+        ``group_sig`` (grouped plans only) signs the group column AND the
+        global value→group-id mapping: a block's group-keyed partial is
+        only valid under the exact mapping it was folded with, since gid
+        assignment depends on which key values the whole selection
+        contains.  Ungrouped partials keep ``""``.
+        """
         return (self.key_of(region, family, qualifier),
-                program_key, mask_sig, int(eta))
+                program_key, mask_sig, int(eta), group_sig)
 
     @staticmethod
     def _partial_rid_version(key: Tuple) -> Tuple[int, int]:
@@ -398,6 +412,14 @@ class BlockStore:
         self._partials.clear()
         self._partial_index.clear()
 
+    def clear(self) -> None:
+        """Drop every cached block AND partial (versions survive, so
+        content addressing stays monotonic); consumers re-gather and
+        re-fold losslessly on next use.  Benchmarks use this to time the
+        cold-data regime without rebuilding sessions."""
+        self._blocks.clear()
+        self.clear_partials()
+
     @property
     def partial_count(self) -> int:
         return len(self._partials)
@@ -414,7 +436,9 @@ class BlockStore:
         return len(self._blocks)
 
     def resident_nbytes(self) -> int:
-        return sum(b.nbytes for b in self._blocks.values())
+        """Physical bytes the store pins: host copies plus committed device
+        copies (which may be fold-bucket padded beyond the logical size)."""
+        return sum(b.nbytes + b.device_nbytes for b in self._blocks.values())
 
     def describe(self) -> str:
         s = self.stats

@@ -58,9 +58,19 @@ take an **adaptive compact gather** (ship only the selected rows, cache
 nothing) instead of whole-region blocks — the block path's shareability tax
 is only paid where reuse can come (``compact_gather_threshold``).
 
+Plans stratify and widen without extra passes: ``.select([c1, c2])`` folds
+every mapped program over each selected column (per-column result-cache
+entries, one scan resolution), and ``.group_by(key)`` lifts the fusion to
+group-keyed partials (:class:`~repro.core.stats.GroupedProgram`) — each
+block segment-sums all G strata in its one fold, so groups never multiply
+gathers, folds, or compiles.
+
 On multi-chip meshes each block commits to its owner via per-shard
 ``device_put`` and folds there — payload never crosses the interconnect;
-only partials travel for the merge.  Meshes without a one-device-per-node
+only partials travel for the merge, which tree-reduces across the owner
+devices (owner-local pre-merge, one ``psum`` over the data axis) for
+additive programs and funnels to one device otherwise
+(``QueryStats.merge_path``).  Meshes without a one-device-per-node
 data axis fold host blocks on the default device (blocks still dedupe the
 gathers).
 """
@@ -90,7 +100,7 @@ from repro.core.plan import GridQuery, prefix_range
 from repro.core.query import Predicate, QueryStats, indexed_query
 from repro.core.regions import Region
 from repro.core.scheduler import GridScheduler
-from repro.core.stats import FusedProgram
+from repro.core.stats import FusedProgram, GroupedProgram, GroupedResult
 from repro.core.table import (
     DATA_FAMILY,
     INDEX_FAMILY,
@@ -176,7 +186,8 @@ class _BlockAccount:
             self.reused += 1
         else:
             self.transferred += 1
-            self.bytes_transferred += blk.nbytes
+            # physical: the committed device copy may be fold-bucket padded
+            self.bytes_transferred += blk.device_nbytes or blk.nbytes
         if gathered:
             self.gathered += 1
             self.rows_gathered += blk.rows
@@ -228,6 +239,58 @@ class _RegionWork:
     @property
     def n_rows(self) -> int:
         return self.rows.stop - self.rows.start
+
+
+@dataclasses.dataclass
+class _GroupInfo:
+    """A plan's resolved stratification: the group-key column, the dense
+    value→gid mapping over the *selected* rows, and the signature that
+    content-addresses group-keyed partials (a gid assignment is only
+    meaningful under the exact global mapping it was derived from).
+
+    Only the distinct values (``keys`` — needed every execution for the
+    result-cache key and the returned group labels) are materialized, and
+    even they are memoized per plan lineage; per-row gids are derived
+    lazily per region slice (:meth:`gids_for`), so result-cache hits and
+    reused partials never pay a full-column densification."""
+
+    family: str
+    qualifier: str
+    keys: np.ndarray           # [G] distinct selected values, ascending
+    sig: str                   # digest of (column identity, mapping)
+    row_nbytes: int            # per-row bytes of the key column (accounting)
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.keys)
+
+    def gids_for(self, values: np.ndarray) -> np.ndarray:
+        """Dense int32 group ids for one region's key-column rows —
+        computed only when a block actually folds (partial-cache miss).
+        ``values`` must be read from the table at call time (positions may
+        shift under unrelated mutations; the mapping itself is pinned by
+        the lineage-keyed memo).  Values outside the selected universe
+        land on a clipped (valid but masked-off) gid."""
+        if not len(self.keys):
+            return np.zeros(len(values), np.int32)
+        return np.searchsorted(self.keys, values).clip(
+            0, len(self.keys) - 1).astype(np.int32)
+
+
+@dataclasses.dataclass
+class _ColumnOutcome:
+    """One computed column's slice of a plan execution, combined by
+    ``_run_fold`` into the plan-level ``QueryStats``/``RunReport``."""
+
+    result: Any
+    hit: bool                          # served whole from the result cache
+    gather_path: str
+    merge_path: str
+    acct: _BlockAccount
+    partials_total: int
+    partials_reused: int
+    rows_folded: int
+    mr: MapReduceStats
 
 
 class GridSession:
@@ -289,6 +352,9 @@ class GridSession:
         self._results: LRUCache = LRUCache(plan_cache_cap)
         # (epoch, work list) for full-table plans — see _run_fold
         self._full_work: Optional[Tuple[int, List[_RegionWork]]] = None
+        # resolved group mappings keyed (column, plan lineage) — repeat
+        # grouped queries skip the unique+hash over the selection
+        self._groups: LRUCache = LRUCache(32)
         self._node_index = {n.node_id: d for d, n in enumerate(nodes)}
         # per-shard devices for block placement: available when the mesh is
         # exactly the 1-D data axis (one device per node); otherwise None
@@ -594,6 +660,10 @@ class GridSession:
         eta = int(eta or self.default_eta)
         self.metrics.scans += 1
         if not plan.programs:
+            if plan.group_key is not None:
+                raise ValueError(
+                    "group_by needs at least one map(program); a grouped "
+                    "retrieve has no statistic to stratify")
             return self._collect_rows(plan, eta)
         program: MapReduceProgram
         if len(plan.programs) == 1:
@@ -646,20 +716,60 @@ class GridSession:
             work.append(_RegionWork(region, owner, rows, sig, sel))
         return work
 
+    def _group_info(self, plan: GridQuery, mask: Optional[np.ndarray],
+                    work_sig: Tuple) -> _GroupInfo:
+        """Resolve a plan's ``group_by`` key to a dense gid mapping.
+
+        The key column is read like an index column (a few bytes per row,
+        never the payload); the distinct values among the *selected* rows
+        become group ids 0..G-1 in ascending value order — exactly the
+        grouping a NumPy ``np.unique``-based oracle produces.  The mapping
+        signature content-addresses every group-keyed partial: a selection
+        whose value universe differs folds under a different signature.
+
+        The resolved info is memoized on ``(column, work_sig)`` — the
+        plan's region lineage + row-mask signatures pin the selected key
+        values exactly, so a repeat grouped query costs an LRU lookup, not
+        an O(N log N) unique+hash over the selection.
+        """
+        gf, gq = plan.group_key
+        memo_key = (gf, gq, work_sig)
+        cached = self._groups.get(memo_key)
+        if cached is not None:
+            return cached
+        spec = self.table.column_spec(gf, gq)
+        if spec.shape != ():
+            raise ValueError(
+                f"group_by column {gf}:{gq} must be scalar per row, "
+                f"got shape {spec.shape}")
+        col = self.table.column(gf, gq)
+        sel_vals = col if mask is None else col[mask]
+        uniq = np.unique(sel_vals)
+        h = hashlib.blake2b(digest_size=12)
+        h.update(f"{gf}:{gq}:{uniq.dtype.str}".encode())
+        h.update(uniq.tobytes())
+        info = _GroupInfo(gf, gq, uniq, h.hexdigest(), spec.row_nbytes)
+        self._groups.put(memo_key, info)
+        return info
+
     def _run_fold(
         self, plan: GridQuery, program: MapReduceProgram, eta: int
     ) -> Tuple[Any, RunReport]:
         """The block-granular fold behind every compute plan.
 
-        Resolution order: (1) content-addressed result cache — a repeat
-        query at unchanged block lineage returns the finalized answer and
-        folds zero rows; (2) the adaptive compact gather for cold
-        low-selectivity one-shots; (3) block-at-a-time folding with the
-        partial cache — only blocks whose partial is missing are fetched
-        and folded, so a mutation re-folds exactly the dirty regions.
+        One scan resolution (range pruning + predicate mask + group-key
+        mapping) feeds every computed column; each column then resolves
+        independently through (1) the content-addressed result cache — a
+        repeat query at unchanged block lineage returns the finalized
+        answer and folds zero rows; (2) the adaptive compact gather for
+        cold low-selectivity ungrouped one-shots; (3) block-at-a-time
+        folding with the partial cache — only blocks whose partial is
+        missing are fetched and folded, so a mutation re-folds exactly the
+        dirty regions.  Grouped plans fold group-keyed partials (leaves
+        gain a leading group axis) in the same single pass per block —
+        grouping never multiplies gathers or folds.
         """
-        family, qualifier = plan.compute_column()
-        spec = self.table.column_spec(family, qualifier)
+        cols = plan.compute_columns()
         full = (plan.start is None and plan.stop is None
                 and plan.predicate is None)
         if full:
@@ -677,43 +787,121 @@ class GridSession:
             qstats = QueryStats(
                 rows_scanned=n, index_bytes_scanned=0,
                 payload_bytes_traversed=0, rows_selected=n,
-                payload_bytes_moved=n * spec.row_nbytes,
                 regions_scanned=len(work), regions_pruned=0)
         else:
             mask, qstats, regions = self._scan_mask(plan)
-            qstats = dataclasses.replace(
-                qstats,
-                payload_bytes_moved=qstats.rows_selected * spec.row_nbytes)
             work = self._plan_work(mask, regions)
 
+        # the plan's lineage signature: region content versions + row-mask
+        # signatures — shared by the group-mapping memo and every column's
+        # result-cache key
+        work_sig = tuple(
+            (w.region.signature, self.blocks.version_of(w.region.rid),
+             w.mask_sig) for w in work)
+
+        group: Optional[_GroupInfo] = None
+        if plan.group_key is not None:
+            group = self._group_info(plan, mask, work_sig)
+            program = GroupedProgram(program, group.num_groups)
+            # the key column is scanned like any index column
+            qstats = dataclasses.replace(
+                qstats, num_groups=group.num_groups,
+                index_bytes_scanned=qstats.index_bytes_scanned
+                + qstats.rows_scanned * group.row_nbytes)
+        per_row = sum(self.table.column_spec(f, q).row_nbytes
+                      for f, q in cols)
+        qstats = dataclasses.replace(
+            qstats, payload_bytes_moved=qstats.rows_selected * per_row)
+
+        outcomes = [
+            self._fold_column(program, eta, mask, work, work_sig, f, q,
+                              group)
+            for f, q in cols
+        ]
+
+        # --- combine per-column outcomes into the plan-level report -------
+        acct = _BlockAccount()
+        for o in outcomes:
+            a = o.acct
+            acct.total += a.total
+            acct.reused += a.reused
+            acct.transferred += a.transferred
+            acct.gathered += a.gathered
+            acct.rows_gathered += a.rows_gathered
+            acct.bytes_transferred += a.bytes_transferred
+
+        def _combine_paths(paths) -> str:
+            named = {p for p in paths if p}
+            if not named:
+                return ""
+            return named.pop() if len(named) == 1 else "mixed"
+
+        hit = all(o.hit for o in outcomes)
+        if hit:
+            self.metrics.plan_hits += 1
+        else:
+            self.metrics.plan_misses += 1
+        qstats = dataclasses.replace(
+            acct.apply(qstats),
+            gather_path=_combine_paths(o.gather_path for o in outcomes),
+            merge_path=_combine_paths(o.merge_path for o in outcomes),
+            partials_total=sum(o.partials_total for o in outcomes),
+            partials_reused=sum(o.partials_reused for o in outcomes),
+            rows_folded=sum(o.rows_folded for o in outcomes))
+        mr = MapReduceStats(
+            local_rows_read=sum(o.mr.local_rows_read for o in outcomes),
+            local_bytes_read=sum(o.mr.local_bytes_read for o in outcomes),
+            shuffle_bytes=sum(o.mr.shuffle_bytes for o in outcomes),
+            rounds=max(o.mr.rounds for o in outcomes),
+            chunks=sum(o.mr.chunks for o in outcomes),
+            chunk_size=eta)
+
+        def _wrap(o: _ColumnOutcome) -> Any:
+            if group is not None:
+                return GroupedResult(keys=group.keys.copy(), values=o.result)
+            return o.result
+
+        if len(cols) == 1:
+            results: Any = _wrap(outcomes[0])
+        else:
+            results = {f"{f}:{q}": _wrap(o)
+                       for (f, q), o in zip(cols, outcomes)}
+        return results, RunReport(epoch=self._epoch, eta=eta,
+                                  plan_cache_hit=hit, mapreduce=mr,
+                                  query=qstats)
+
+    def _fold_column(
+        self, program: MapReduceProgram, eta: int,
+        mask: Optional[np.ndarray], work: Sequence[_RegionWork],
+        work_sig: Tuple, family: str, qualifier: str,
+        group: Optional[_GroupInfo],
+    ) -> _ColumnOutcome:
+        """Resolve one computed column: result cache → compact → blockwise."""
+        spec = self.table.column_spec(family, qualifier)
         result_key = (
             "fold", program.cache_key(), family, qualifier, int(eta),
-            self._mesh_shape(),
-            tuple((w.region.signature, self.blocks.version_of(w.region.rid),
-                   w.mask_sig) for w in work),
+            self._mesh_shape(), group.sig if group is not None else "",
+            work_sig,
         )
         entry = self._results.get(result_key)
         if entry is not None:
             entry.last_used = self._epoch
-            self.metrics.plan_hits += 1
             self.metrics.partials_reused += entry.partials_total
-            acct = _BlockAccount.all_reused(entry.blocks_total)
-            qstats = dataclasses.replace(
-                acct.apply(qstats), gather_path=entry.gather_path,
-                partials_total=entry.partials_total,
-                partials_reused=entry.partials_total, rows_folded=0)
             # zero-work execution: nothing was read, folded, or shuffled
-            mr = MapReduceStats(0, 0, 0, 0, 0, eta)
-            return entry.result, RunReport(
-                epoch=self._epoch, eta=eta, plan_cache_hit=True,
-                mapreduce=mr, query=qstats)
-
-        self.metrics.plan_misses += 1
-        if mask is not None and self._should_compact(work, family, qualifier):
-            return self._run_compact(program, eta, mask, work, qstats,
+            return _ColumnOutcome(
+                result=entry.result, hit=True,
+                gather_path=entry.gather_path, merge_path="",
+                acct=_BlockAccount.all_reused(entry.blocks_total),
+                partials_total=entry.partials_total,
+                partials_reused=entry.partials_total, rows_folded=0,
+                mr=MapReduceStats(0, 0, 0, 0, 0, eta))
+        if (mask is not None and group is None
+                and self._should_compact(work, family, qualifier)):
+            return self._run_compact(program, eta, mask, work,
                                      family, qualifier, spec, result_key)
-        return self._run_blockwise(program, eta, mask, work, qstats,
-                                   family, qualifier, spec, result_key)
+        return self._run_blockwise(program, eta, mask, work,
+                                   family, qualifier, spec, result_key,
+                                   group)
 
     def _should_compact(self, work: Sequence[_RegionWork],
                         family: str, qualifier: str) -> bool:
@@ -741,9 +929,9 @@ class GridSession:
 
     def _run_compact(
         self, program: MapReduceProgram, eta: int, mask: np.ndarray,
-        work: Sequence[_RegionWork], qstats: QueryStats,
+        work: Sequence[_RegionWork],
         family: str, qualifier: str, spec, result_key: Tuple,
-    ) -> Tuple[Any, RunReport]:
+    ) -> _ColumnOutcome:
         """One-shot compacted gather: ONLY the selected rows ship, grouped
         by owner device (locality preserved), folded layout-at-a-time via
         the shard_map engine.  Nothing enters the block or partial caches —
@@ -784,19 +972,19 @@ class GridSession:
             result=result, partials_total=0, blocks_total=0,
             region_ids=frozenset(w.region.rid for w in work),
             gather_path="compact", last_used=self._epoch))
-        qstats = dataclasses.replace(
-            qstats, gather_path="compact", rows_folded=sel,
-            payload_bytes_transferred=sel * spec.row_nbytes)
-        return result, RunReport(epoch=self._epoch, eta=eta,
-                                 plan_cache_hit=False, mapreduce=mr,
-                                 query=qstats)
+        acct = _BlockAccount()
+        acct.bytes_transferred = sel * spec.row_nbytes
+        return _ColumnOutcome(
+            result=result, hit=False, gather_path="compact", merge_path="",
+            acct=acct, partials_total=0, partials_reused=0,
+            rows_folded=sel, mr=mr)
 
     def _run_blockwise(
         self, program: MapReduceProgram, eta: int,
         mask: Optional[np.ndarray], work: Sequence[_RegionWork],
-        qstats: QueryStats, family: str, qualifier: str, spec,
-        result_key: Tuple,
-    ) -> Tuple[Any, RunReport]:
+        family: str, qualifier: str, spec, result_key: Tuple,
+        group: Optional[_GroupInfo] = None,
+    ) -> _ColumnOutcome:
         """Block-at-a-time map phase + one merge/finalize reduce.
 
         Per foldable block: partial-cache lookup first; on a miss the block
@@ -804,11 +992,16 @@ class GridSession:
         by the BlockStore) and folded ON ITS OWNER DEVICE, and the partial
         is cached under the block's lineage.  Blocks with no selected rows
         contribute the monoid identity — neither payload nor partial is
-        ever touched for them.
+        ever touched for them.  Grouped plans fold group-keyed partials in
+        the same one pass per block: group ids ride beside the row mask, so
+        G strata never multiply gathers, folds, or partials.
         """
         prog_key = program.cache_key()
+        gsig = group.sig if group is not None else ""
+        n_groups = group.num_groups if group is not None else 0
         acct = _BlockAccount()
         partials: List[Any] = []
+        owners: List[Optional[int]] = []
         p_total = p_reused = rows_folded = local_rows = chunks = 0
         rounds: Dict[Optional[int], int] = {}
         for w in work:
@@ -818,7 +1011,8 @@ class GridSession:
                 continue
             p_total += 1
             pkey = self.blocks.partial_key(
-                w.region, family, qualifier, prog_key, w.mask_sig, eta)
+                w.region, family, qualifier, prog_key, w.mask_sig, eta,
+                group_sig=gsig)
             partial = self.blocks.get_partial(pkey)
             if partial is not None:
                 p_reused += 1
@@ -830,8 +1024,25 @@ class GridSession:
                 acct.add(blk, reused, gathered)
                 src = blk.device if blk.device is not None else blk.host
                 bmask = None if w.mask_sig == "full" else mask[w.rows]
+                gid_arr = None
+                if group is not None:
+                    key_col = self.table.column(group.family,
+                                                group.qualifier)
+                    gid_arr = group.gids_for(key_col[w.rows])
+                src_rows = int(src.shape[0])
+                if src_rows != blk.rows:
+                    # committed pre-padded to the fold bucket: extend the
+                    # (tiny) mask/gid arrays host-side to match
+                    m = np.zeros(src_rows, bool)
+                    m[:blk.rows] = True if bmask is None else bmask
+                    bmask = m
+                    if gid_arr is not None:
+                        g2 = np.zeros(src_rows, np.int32)
+                        g2[:blk.rows] = gid_arr
+                        gid_arr = g2
                 partial = self.engine.fold_block(
-                    program, src, bmask, eta, spec.shape, spec.dtype)
+                    program, src, bmask, eta, spec.shape, spec.dtype,
+                    gids=gid_arr, num_groups=n_groups)
                 self.blocks.put_partial(pkey, partial)
                 rows_folded += blk.rows
                 local_rows += w.selected
@@ -839,8 +1050,10 @@ class GridSession:
                 chunks += c
                 rounds[w.owner] = rounds.get(w.owner, 0) + c
             partials.append(partial)
+            owners.append(w.owner)
         result = self.engine.merge_finalize(program, partials,
-                                            spec.shape, spec.dtype)
+                                            spec.shape, spec.dtype,
+                                            owners=owners)
         self._results.put(result_key, _ResultEntry(
             result=result, partials_total=p_total, blocks_total=acct.total,
             region_ids=frozenset(w.region.rid for w in work),
@@ -866,13 +1079,11 @@ class GridSession:
             rounds=max(rounds.values(), default=0),
             chunks=chunks,
             chunk_size=eta)
-        qstats = dataclasses.replace(
-            acct.apply(qstats), gather_path="blocks",
+        return _ColumnOutcome(
+            result=result, hit=False, gather_path="blocks",
+            merge_path=self.engine.last_merge_path, acct=acct,
             partials_total=p_total, partials_reused=p_reused,
-            rows_folded=rows_folded)
-        return result, RunReport(epoch=self._epoch, eta=eta,
-                                 plan_cache_hit=False, mapreduce=mr,
-                                 query=qstats)
+            rows_folded=rows_folded, mr=mr)
 
     def _scan_mask(
         self, plan: GridQuery
@@ -978,7 +1189,19 @@ class GridSession:
     def _put_block(self, host: np.ndarray, owner_index: Optional[int]):
         """Commit one block to its owner shard's device (the per-shard
         ``device_put`` half of the multi-chip transfer path; the per-block
-        fold then runs where the committed array lives)."""
+        fold then runs where the committed array lives).
+
+        The committed copy is padded to the engine's bucketed row count
+        (next power of two), so every later fold hits an exact-shape
+        executable with NO per-fold pad copy — the pad memcpy is paid once
+        per gather, where it amortizes.  The block's ``host`` array and
+        ``rows`` stay logical; ``_run_blockwise`` extends row masks/gids to
+        the padded shape host-side (tiny bool/int32 arrays)."""
+        bucket = self.engine.bucket_rows(len(host))
+        if bucket != len(host):
+            host = np.concatenate(
+                [host, np.zeros((bucket - len(host),) + host.shape[1:],
+                                host.dtype)])
         dev = None if owner_index is None else self._devices[owner_index]
         return jax.device_put(host, dev)
 

@@ -30,11 +30,19 @@ Two execution granularities share the program interface:
 - :meth:`MapReduceEngine.fold_block` + :meth:`MapReduceEngine.merge_finalize`
   — the block-at-a-time path :class:`~repro.core.grid.GridSession` drives:
   each region's device block folds independently on its owner device (the
-  jitted fold runs where the committed block lives — the map phase), the
-  tiny partials move to one device and merge+finalize in a single jitted
-  reduce.  Because partials are per-block, they are cacheable per block
-  lineage in the :class:`~repro.core.blockstore.BlockStore` — a repeat
-  query merges cached partials and folds zero payload rows.
+  jitted fold runs where the committed block lives — the map phase), then
+  the tiny partials reduce.  Additive programs on a 1-D data mesh
+  **tree-reduce**: each owner pre-merges its own partials locally and one
+  ``psum`` over the data axis joins them (the ICI's hardware all-reduce);
+  everything else funnels to one device for a single jitted merge+finalize.
+  Because partials are per-block, they are cacheable per block lineage in
+  the :class:`~repro.core.blockstore.BlockStore` — a repeat query merges
+  cached partials and folds zero payload rows.  Fold executables are keyed
+  by block rows padded to the next power of two and funnel merges by the
+  pow2-bucketed partial count, so drifting region sizes and block counts
+  share a handful of compiles.  Grouped folds (``gids``/``num_groups``,
+  see :class:`~repro.core.stats.GroupedProgram`) produce group-keyed
+  partials in the same single pass.
 """
 
 from __future__ import annotations
@@ -46,7 +54,7 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.blockstore import LRUCache
 from repro.utils import shard_map_compat
@@ -130,7 +138,9 @@ class MapReduceEngine:
     """Executes MapReduce programs over ``[D, C, ...]`` colocated layouts."""
 
     def __init__(self, mesh: Mesh, data_axis: str = "data",
-                 executable_cache_cap: int = 64):
+                 executable_cache_cap: int = 64,
+                 block_pad: str = "pow2",
+                 merge_strategy: str = "auto"):
         self.mesh = mesh
         self.data_axis = data_axis
         # LRU-capped: one entry per (program, row signature, eta, C); an
@@ -142,6 +152,29 @@ class MapReduceEngine:
         # builds of new executables (the recompile oracle GridSession's plan
         # cache is tested against): bumped only on an executable-cache miss.
         self.compile_count = 0
+        #: per-block fold executables are shape-keyed; "pow2" pads block rows
+        #: up to the next power of two before the jitted fold, so the key
+        #: space stays O(log max_rows) however many distinct region sizes a
+        #: (grouped) workload produces.  "none" keys on exact row counts.
+        if block_pad not in ("pow2", "none"):
+            raise ValueError(f"unknown block_pad policy {block_pad!r}")
+        self.block_pad = block_pad
+        #: "auto" tree-reduces additive merges across owner devices when the
+        #: mesh allows it; "funnel" forces the single-device reduce (the
+        #: comparison baseline the merge bench uses).
+        if merge_strategy not in ("auto", "funnel"):
+            raise ValueError(f"unknown merge_strategy {merge_strategy!r}")
+        self.merge_strategy = merge_strategy
+        #: which physical reduce the last merge_finalize took: "tree" (psum
+        #: over the data axis) or "funnel" (partials meet on one device)
+        self.last_merge_path = ""
+        self.merge_path_counts: dict = {"tree": 0, "funnel": 0}
+        # the mesh's data-axis devices, in shard order — available only when
+        # the mesh is exactly the 1-D data axis (same condition the session
+        # uses for per-shard block placement); None disables the tree reduce
+        devs = np.asarray(mesh.devices).flat
+        self._axis_devices = (list(devs)
+                              if mesh.axis_names == (data_axis,) else None)
 
     # ------------------------------------------------------------------
 
@@ -223,38 +256,80 @@ class MapReduceEngine:
             self._compiled.put(key, fn)
         return fn
 
+    @staticmethod
+    def _next_pow2(n: int) -> int:
+        return 1 << max(0, int(n) - 1).bit_length()
+
+    def bucket_rows(self, rows: int) -> int:
+        """The padded row count a block folds at: the next power of two
+        under the "pow2" policy (bounding the executable key space to
+        O(log max_rows) however many distinct region sizes exist), the
+        exact count under "none".  ``GridSession`` commits device blocks
+        pre-padded to this bucket, so the per-fold hot path never pays a
+        pad copy — only freshly-shaped raw arrays do."""
+        if self.block_pad == "pow2":
+            return self._next_pow2(rows)
+        return rows
+
     def _block_fold_fn(self, program: MapReduceProgram, rows: int,
-                       row_shape, dtype, eta: int, masked: bool):
+                       row_shape, dtype, eta: int, masked: bool,
+                       groups: int = 0):
         """The jitted fold for one block signature ``(rows, row_shape,
-        dtype, η)``.  Padding to a chunk multiple happens inside the jit, so
-        a committed device block folds on its own device with no host trip.
-        Executables are shape-keyed: blocks of equal row count (the common
-        case under a byte-bounded split policy) share one compile."""
+        dtype, η[, groups])``.  Padding to a chunk multiple happens inside
+        the jit, so a committed device block folds on its own device with no
+        host trip.  Executables are shape-keyed: blocks of equal (bucketed)
+        row count share one compile.
+
+        With ``groups > 0`` the program is a
+        :class:`~repro.core.stats.GroupedProgram`: the fold additionally
+        takes ``[rows]`` int32 group ids, and each chunk's ``[G, eta]``
+        group mask (disjoint segment membership × validity) feeds the
+        grouped ``map_chunk`` — one pass produces G partials.
+        """
         pad = -rows % eta
         n_chunks = (rows + pad) // eta
         shape = tuple(row_shape)
 
-        def fold(block, mask):
+        def fold(block, mask, gids):
             m = (jnp.ones((rows,), bool) if mask is None
                  else mask.astype(bool))
             v = block
             if pad:
                 v = jnp.pad(v, [(0, pad)] + [(0, 0)] * len(shape))
                 m = jnp.pad(m, [(0, pad)])
+                if groups:
+                    gids = jnp.pad(gids, [(0, pad)])
             v = v.reshape((n_chunks, eta) + shape)
             m = m.reshape((n_chunks, eta))
+            init = program.zero(shape, dtype)
+
+            if groups:
+                g = gids.astype(jnp.int32).reshape((n_chunks, eta))
+
+                def gbody(carry, xs):
+                    chunk, cm, cg = xs
+                    gm = (cg[None, :] == jnp.arange(groups)[:, None]) \
+                        & cm[None, :]
+                    return program.merge(carry,
+                                         program.map_chunk(chunk, gm)), None
+
+                partial, _ = jax.lax.scan(gbody, init, (v, m, g))
+                return partial
 
             def body(carry, xs):
                 chunk, cm = xs
                 return program.merge(carry, program.map_chunk(chunk, cm)), None
 
-            partial, _ = jax.lax.scan(
-                body, program.zero(shape, dtype), (v, m))
+            partial, _ = jax.lax.scan(body, init, (v, m))
             return partial
 
+        if groups:
+            if masked:
+                return jax.jit(fold)
+            return jax.jit(lambda block, gids: fold(block, None, gids))
         if masked:
-            return jax.jit(fold)
-        return jax.jit(lambda block: fold(block, None))
+            return jax.jit(lambda block, mask: fold(block, mask, None))
+        return jax.jit(lambda block: fold(block, None, None))
 
     def fold_block(
         self,
@@ -264,19 +339,43 @@ class MapReduceEngine:
         eta: int,
         row_shape: Tuple[int, ...],
         dtype,
+        gids: Optional[Any] = None,      # [rows] int32 group ids (grouped)
+        num_groups: int = 0,
     ) -> PyTree:
         """Fold one block into a partial — the map phase at block granularity.
 
         ``block`` committed to a device keeps the fold there (jit follows
         committed inputs), which is the colocation property: the block's
         payload bytes never leave its owner; only the partial will.
+
+        Blocks are padded to the bucketed row count *outside* the jit (pad
+        rows masked off), so two regions of 9 and 12 rows share the 16-row
+        executable instead of compiling twice.  With ``gids``/``num_groups``
+        the fold is group-aware: the partial's leaves carry a leading group
+        axis (see :class:`~repro.core.stats.GroupedProgram`).
         """
         rows = int(block.shape[0])
-        key = ("bfold", program.cache_key(), rows, tuple(row_shape),
-               str(dtype), int(eta), mask is not None)
+        grouped = num_groups > 0
+        if grouped and gids is None:
+            raise ValueError("grouped fold needs per-row group ids")
+        bucket = self.bucket_rows(rows)
+        if bucket != rows:
+            padw = [(0, bucket - rows)]
+            block = jnp.pad(block, padw + [(0, 0)] * (block.ndim - 1))
+            mask = jnp.pad(jnp.ones((rows,), bool) if mask is None
+                           else jnp.asarray(mask, bool), padw)
+            if grouped:
+                gids = jnp.pad(jnp.asarray(gids, jnp.int32), padw)
+        key = ("bfold", program.cache_key(), bucket, tuple(row_shape),
+               str(dtype), int(eta), mask is not None, int(num_groups))
         fn = self._get_or_build(
             key, lambda: self._block_fold_fn(
-                program, rows, row_shape, dtype, eta, mask is not None))
+                program, bucket, row_shape, dtype, eta, mask is not None,
+                groups=int(num_groups)))
+        if grouped:
+            gids = jnp.asarray(gids, jnp.int32)
+            return fn(block, mask, gids) if mask is not None \
+                else fn(block, gids)
         return fn(block, mask) if mask is not None else fn(block)
 
     def merge_finalize(
@@ -285,13 +384,103 @@ class MapReduceEngine:
         partials: Sequence[PyTree],
         row_shape: Tuple[int, ...],
         dtype,
+        owners: Optional[Sequence[Optional[int]]] = None,
     ) -> PyTree:
-        """Reduce phase: move the partials to the merge device and run one
-        jitted merge+finalize.  Zero partials finalize the monoid identity
-        (the empty-selection result).  Additive programs sum a stacked tree;
-        general merges reduce pairwise with log-depth."""
+        """Reduce phase: combine the per-block partials and finalize.
+
+        Two physical reduces share this entry point:
+
+        - **tree** — additive programs on a 1-D data mesh with ``owners``
+          given: each owner device pre-merges its own partials locally (no
+          payload crosses the interconnect), the D per-device sums join via
+          one ``psum`` over the data axis (the ICI's hardware all-reduce —
+          log-depth, all links busy), and finalize runs replicated.  The
+          merge wall stops scaling with #blocks-on-one-device.
+        - **funnel** — the fallback (non-additive merges, single device,
+          exotic meshes, ``merge_strategy="funnel"``): partials move to one
+          device and a jitted merge+finalize reduces them there.
+
+        Zero partials finalize the monoid identity (the empty-selection
+        result).  Funnel executables are keyed by the partial count rounded
+        up to a power of two (identity-padded), so drifting block counts
+        don't multiply compiles.
+        """
+        if self._tree_merge_ok(program, partials, owners):
+            self.last_merge_path = "tree"
+            self.merge_path_counts["tree"] += 1
+            return self._merge_tree(program, partials, owners,
+                                    row_shape, dtype)
+        self.last_merge_path = "funnel"
+        self.merge_path_counts["funnel"] += 1
+        return self._merge_funnel(program, partials, row_shape, dtype)
+
+    def _tree_merge_ok(self, program, partials, owners) -> bool:
+        return (self.merge_strategy == "auto"
+                and program.additive
+                and self._axis_devices is not None
+                and len(self._axis_devices) > 1
+                and owners is not None
+                and len(owners) == len(partials)
+                and len(partials) > 1
+                and all(o is not None and 0 <= o < len(self._axis_devices)
+                        for o in owners))
+
+    def _merge_tree(self, program, partials, owners, row_shape, dtype):
+        """psum-over-mesh reduce: owner-local pre-merge, one all-reduce."""
+        D = len(self._axis_devices)
+        by_owner: List[List[PyTree]] = [[] for _ in range(D)]
+        for p, o in zip(partials, owners):
+            by_owner[o].append(p)
+        identity = None
+        shards = []
+        for d, ps in enumerate(by_owner):
+            dev = self._axis_devices[d]
+            if not ps:
+                if identity is None:
+                    identity = program.zero(tuple(row_shape), dtype)
+                acc = jax.device_put(identity, dev)
+            else:
+                # partials folded this execution already live on device d;
+                # cached partials from a pre-rebalance owner re-home here
+                # (tiny — a partial, never a payload block)
+                acc = jax.device_put(ps[0], dev)
+                for p in ps[1:]:
+                    acc = jax.tree.map(jnp.add, acc,
+                                       jax.device_put(p, dev))
+            shards.append(jax.tree.map(lambda x: x[None], acc))
+
+        sharding = NamedSharding(self.mesh, P(self.data_axis))
+
+        def assemble(*leaves):
+            shape = (D,) + tuple(leaves[0].shape[1:])
+            return jax.make_array_from_single_device_arrays(
+                shape, sharding, list(leaves))
+
+        stacked = jax.tree.map(assemble, *shards)
+
+        key = ("btree", program.cache_key(), tuple(row_shape), str(dtype))
+
+        def build():
+            def local(t):
+                return jax.tree.map(
+                    lambda x: jax.lax.psum(x[0], self.data_axis), t)
+
+            reduce_fn = shard_map_compat(
+                local, mesh=self.mesh, in_specs=P(self.data_axis),
+                out_specs=P(), check=False)
+            return jax.jit(lambda t: program.finalize(reduce_fn(t)))
+
+        return self._get_or_build(key, build)(stacked)
+
+    def _merge_funnel(self, program, partials, row_shape, dtype):
+        """Single-device reduce: partials meet on the merge device and one
+        jitted merge+finalize combines them (count bucketed to a power of
+        two with identity partials, so the executable key space stays
+        narrow as block counts drift)."""
         n = len(partials)
-        key = ("bmerge", program.cache_key(), n, tuple(row_shape), str(dtype))
+        bucket = n if n <= 1 else self._next_pow2(n)
+        key = ("bmerge", program.cache_key(), bucket, tuple(row_shape),
+               str(dtype))
 
         def build():
             shape = tuple(row_shape)
@@ -318,6 +507,10 @@ class MapReduceEngine:
         fn = self._get_or_build(key, build)
         dev = self._merge_device
         moved = [jax.device_put(p, dev) for p in partials]
+        if bucket > n:
+            identity = jax.device_put(
+                program.zero(tuple(row_shape), dtype), dev)
+            moved.extend([identity] * (bucket - n))
         return fn(*moved)
 
     def partial_nbytes(self, program: MapReduceProgram,

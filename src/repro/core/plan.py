@@ -11,15 +11,18 @@ before any bytes move:
    start keys (:meth:`RegionSet.prune`, two bisects), so regions outside the
    scan range are never scanned and their device blocks never gathered.
    ``QueryStats.regions_scanned``/``regions_pruned`` report the efficacy.
-2. **Projection pushdown** — only the selected column enters the device
-   layout; index families are read exclusively by the predicate.
+2. **Projection pushdown** — only the selected columns enter the device
+   layout; index families are read exclusively by the predicate (and the
+   ``group_by`` key column).
 3. **Program fusion** — every ``.map(program)`` statistic joins one
    :class:`~repro.core.stats.FusedProgram`, so mean+variance+histogram run in
    a single engine pass over a single gather, sharing one compiled
    executable per block shape and one result-cache entry.  Members that
    declare shared accumulators (``requires()``) are CSE'd: count and the
    raw power sums fold once per chunk, however many statistics project from
-   them.
+   them.  With ``.select([c1, c2])`` the fused stack folds over EACH
+   selected column; with ``.group_by(key)`` every block folds group-keyed
+   partials (segment-summed by group id) and results come back per group.
 
 Build plans through :meth:`GridSession.scan`::
 
@@ -102,6 +105,7 @@ class GridQuery:
     predicate: Optional[Predicate] = None
     index_qualifiers: Tuple[str, ...] = ()
     programs: Tuple[MapReduceProgram, ...] = ()
+    group_key: Optional[Tuple[str, str]] = None  # stratification column
     # (eta, epoch) -> (results, report); dropped by every builder call
     _memo: Dict[Tuple[int, int], Tuple[Any, "RunReport"]] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
@@ -114,15 +118,40 @@ class GridQuery:
         changes.setdefault("_memo", {})
         return dataclasses.replace(self, **changes)
 
-    def select(self, *columns: ColumnRef) -> "GridQuery":
+    def select(self, *columns) -> "GridQuery":
         """Projection pushdown: only these columns enter the layout.
 
-        Compute plans (any ``.map``) require exactly one selected column —
-        the one the programs fold over; plain ``.collect()`` retrieves every
-        selected column.  Default (no ``select``) is the session's payload
-        column.
+        Accepts ``"family:qualifier"`` strings, ``(family, qualifier)``
+        tuples, or a *list* of either to select several columns at once
+        (``select(["img:data", "idx:age"])`` ≡ ``select("img:data",
+        "idx:age")``).  Compute plans (any ``.map``) fold every mapped
+        program over EACH selected column in one pass; plain ``.collect()``
+        retrieves every selected column.  Default (no ``select``) is the
+        session's payload column.
         """
-        return self._fork(columns=tuple(_parse_column(c) for c in columns))
+        cols = []
+        for c in columns:
+            if isinstance(c, list):
+                cols.extend(_parse_column(x) for x in c)
+            else:
+                cols.append(_parse_column(c))
+        return self._fork(columns=tuple(cols))
+
+    def group_by(self, column: ColumnRef) -> "GridQuery":
+        """Stratify every mapped statistic by a scalar key column.
+
+        ``column`` (e.g. ``"idx:site"``) is read like an index column — a
+        few bytes per row, never the payload.  Execution assigns each
+        selected row a dense group id, the per-block folds segment-sum
+        group-keyed partials in the same single pass, and results come back
+        as one :class:`~repro.core.stats.GroupedResult` per computed column
+        (``keys`` = the distinct group values among selected rows,
+        ascending; result leaves gain a leading group axis).
+        """
+        if self.group_key is not None:
+            raise ValueError("plan already grouped; compose the keys into "
+                             "one column instead")
+        return self._fork(group_key=_parse_column(column))
 
     def where(self, predicate: Predicate,
               index_qualifiers: Sequence[str]) -> "GridQuery":
@@ -153,8 +182,11 @@ class GridQuery:
         """Compile + execute the plan; returns ``(results, RunReport)``.
 
         With programs, ``results`` follows map order (a bare value for a
-        single program, a tuple for a fused set).  Without programs this is
-        a pruned retrieve: ``results = (rowkeys, {"fam:qual": values})``.
+        single program, a tuple for a fused set); grouped plans wrap each
+        column's results in a :class:`~repro.core.stats.GroupedResult`, and
+        multi-column compute plans return ``{"fam:qual": per-column
+        results}``.  Without programs this is a pruned retrieve:
+        ``results = (rowkeys, {"fam:qual": values})``.
         """
         eta_key = int(eta or self.session.default_eta)
         memo_key = (eta_key, self.session.epoch)
@@ -182,8 +214,11 @@ class GridQuery:
             f"  select  {', '.join(f'{f}:{q}' for f, q in cols)}",
             f"  where   {self.predicate!r} over idx{list(self.index_qualifiers)}"
             if self.predicate is not None else "  where   -",
+            f"  group   {self.group_key[0]}:{self.group_key[1]}"
+            if self.group_key is not None else "  group   -",
             f"  map     {len(self.programs)} program(s) fused: "
             f"{[type(p).__name__ for p in self.programs]}"
+            f"{' x ' + str(len(cols)) + ' columns' if len(cols) > 1 else ''}"
             if self.programs else "  map     - (retrieve)",
         ]
         return "\n".join(lines)
@@ -197,8 +232,17 @@ class GridQuery:
             return self.columns
         return ((self.session.payload_family, self.session.payload_qualifier),)
 
-    def compute_column(self) -> Tuple[str, str]:
+    def compute_columns(self) -> Tuple[Tuple[str, str], ...]:
+        """The columns a compute plan folds over (≥1; duplicates rejected —
+        each column carries its own program stack in the one pass)."""
         cols = self.resolved_columns()
+        if len(set(cols)) != len(cols):
+            raise ValueError(f"duplicate compute columns in {cols}")
+        return cols
+
+    def compute_column(self) -> Tuple[str, str]:
+        """Back-compat accessor for single-column compute plans."""
+        cols = self.compute_columns()
         if len(cols) != 1:
             raise ValueError(
                 f"compute plans fold over exactly one column, got {cols}")

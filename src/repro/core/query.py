@@ -70,6 +70,16 @@ class QueryStats:
     # "blocks" (block-granular fold), "compact" (one-shot compacted gather),
     # "retrieve" (host-side collect), "" for pre-fold stats objects.
     gather_path: str = ""
+    # --- grouped-analytics oracles ---------------------------------------
+    # distinct group-key values among the selected rows (0 = ungrouped);
+    # grouping must never multiply gathers or folds — the per-block fold
+    # segment-sums all G groups in its one pass.
+    num_groups: int = 0
+    # which physical reduce combined the partials: "tree" (psum over the
+    # mesh's data axis, owner-local pre-merge) or "funnel" (single-device
+    # jitted merge); "" when no merge ran (result-cache hit, compact path,
+    # retrieve).
+    merge_path: str = ""
 
     @property
     def total_bytes_scanned(self) -> int:

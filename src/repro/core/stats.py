@@ -14,7 +14,9 @@ jnp.float64`` on CPU for reference-grade accumulation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Any, Dict, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -319,6 +321,144 @@ class FusedProgram(MapReduceProgram):
             else:
                 out.append(p.finalize(partial["private"][ref]))
         return tuple(out)
+
+
+def grouped_shared_map_chunk(rows: jax.Array, gmask: jax.Array,
+                             names: Tuple[str, ...], acc_dtype
+                             ) -> Dict[str, jax.Array]:
+    """Fold one chunk into per-group shared accumulators by segment-sum.
+
+    ``gmask`` is the ``[G, eta]`` per-group row mask (rows of a chunk are
+    partitioned across groups; invalid rows belong to no group).  Each raw
+    power of ``x`` is materialized ONCE and contracted against the group
+    weights in a single ``einsum`` — the grouped analogue of the CSE in
+    :func:`shared_map_chunk`: G groups share one masked cast, one square,
+    one cube, however many member statistics project from the pool.
+    """
+    out: Dict[str, jax.Array] = {}
+    w = gmask.astype(acc_dtype)                      # [G, eta] 0/1 weights
+    if "count" in names:
+        out["count"] = w.sum(axis=1)
+    if any(n in names for n in ("s1", "s2", "s3", "s4")):
+        # zero rows no group claims BEFORE raising powers, exactly like the
+        # ungrouped _masked path: a NaN/Inf payload in a masked-off row
+        # must not poison the segment sums (0-weight × NaN is NaN)
+        x = _masked(rows, gmask.any(axis=0), acc_dtype)  # [eta, ...]
+
+        def seg(v):                                  # [G, ...] segment sums
+            return jnp.einsum("ge,e...->g...", w, v)
+
+        if "s1" in names:
+            out["s1"] = seg(x)
+        if any(n in names for n in ("s2", "s3", "s4")):
+            x2 = x * x
+            if "s2" in names:
+                out["s2"] = seg(x2)
+            if "s3" in names:
+                out["s3"] = seg(x2 * x)
+            if "s4" in names:
+                out["s4"] = seg(x2 * x2)
+    return out
+
+
+@dataclasses.dataclass
+class GroupedResult:
+    """Per-group finalized statistics from a ``group_by`` plan.
+
+    ``keys[g]`` labels row ``g`` of every leaf in ``values`` (leaves carry a
+    leading group axis).  ``keys`` are the distinct group-key values among
+    the selected rows, ascending — the same order ``np.unique`` gives a
+    NumPy groupby oracle.
+    """
+
+    keys: np.ndarray               # [G] unique group-key values, sorted
+    values: Any                    # result tree; leaves are [G, ...]
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    def index_of(self, key) -> int:
+        pos = int(np.searchsorted(self.keys, key))
+        if pos >= len(self.keys) or self.keys[pos] != key:
+            raise KeyError(f"no group with key {key!r}")
+        return pos
+
+    def group(self, key) -> Any:
+        """The result tree of one group (leaves indexed at its row)."""
+        g = self.index_of(key)
+        return jax.tree.map(lambda x: x[g], self.values)
+
+    def asdict(self) -> Dict[Any, Any]:
+        """``{group key: result tree}`` with native-Python scalar keys."""
+        return {k.item() if hasattr(k, "item") else k: jax.tree.map(
+            lambda x, g=g: x[g], self.values)
+            for g, k in enumerate(self.keys)}
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedProgram(MapReduceProgram):
+    """Group-aware lift of a statistic program: one fold, G answers.
+
+    Wraps ``base`` (a single program or a :class:`FusedProgram`) so every
+    accumulator gains a leading group axis.  ``map_chunk`` receives the
+    ``[G, eta]`` per-group row mask the engine derives from the chunk's
+    group ids:
+
+    - members in the CSE pool fold through
+      :func:`grouped_shared_map_chunk` — the raw power sums are segment-
+      summed by group id, so each power is computed once per chunk however
+      many groups or member statistics there are;
+    - private members (histogram, the exact int32 count) ``vmap`` their own
+      fold over the group masks.
+
+    Additivity is inherited: a grouped additive program still merges by
+    elementwise sum (now ``[G, ...]``-shaped), so the tree-reduce/psum merge
+    path stays available.  ``finalize`` projects per-group results with the
+    base program's own finalizers (``vmap`` over the group axis).
+    """
+
+    base: MapReduceProgram = None  # type: ignore[assignment]
+    num_groups: int = 0
+
+    def __post_init__(self):
+        if self.base is None:
+            raise ValueError("GroupedProgram needs a base program")
+        if self.num_groups < 0:
+            raise ValueError(f"num_groups must be >= 0, got {self.num_groups}")
+        fused = (self.base if isinstance(self.base, FusedProgram)
+                 else FusedProgram((self.base,)))
+        object.__setattr__(self, "_fused", fused)
+        object.__setattr__(self, "_single",
+                           not isinstance(self.base, FusedProgram))
+        object.__setattr__(self, "additive", fused.additive)
+
+    def cache_key(self) -> Tuple:
+        return ("Grouped", int(self.num_groups), self.base.cache_key())
+
+    def zero(self, row_shape, dtype):
+        G = self.num_groups
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (G,) + x.shape),
+            self._fused.zero(row_shape, dtype))
+
+    def map_chunk(self, rows, gmask):
+        # gmask: [G, eta] bool — disjoint per-group row masks for the chunk
+        shared = {dt: grouped_shared_map_chunk(rows, gmask, names,
+                                               jnp.dtype(dt))
+                  for dt, names in self._fused._shared_groups}
+        private = tuple(
+            jax.vmap(p.map_chunk, in_axes=(None, 0))(rows, gmask)
+            for p in self._fused._private)
+        return {"shared": shared, "private": private}
+
+    def merge(self, a, b):
+        if self.additive:
+            return jax.tree.map(jnp.add, a, b)
+        return jax.vmap(self._fused.merge)(a, b)
+
+    def finalize(self, partial):
+        out = jax.vmap(self._fused.finalize)(partial)
+        return out[0] if self._single else out
 
 
 @dataclasses.dataclass(frozen=True)

@@ -29,4 +29,14 @@ try:
     settings.load_profile(os.environ.get(
         "HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI") else "dev"))
 except ImportError:
-    pass
+    # A CI run that EXPLICITLY selected the hypothesis "ci" profile must
+    # not silently drop the property/state-machine tests to 0 examples —
+    # that is how a broken `pip install` once shipped a suite that "passed"
+    # while the differential state machine never ran.  Local containers
+    # without hypothesis (no profile requested) still degrade gracefully.
+    if os.environ.get("HYPOTHESIS_PROFILE") == "ci":
+        raise RuntimeError(
+            "HYPOTHESIS_PROFILE=ci is set but the 'hypothesis' package is "
+            "missing: the CI environment must `pip install -r "
+            "requirements.txt` (which pins it). Refusing to skip the "
+            "property tests silently.")

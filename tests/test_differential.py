@@ -215,6 +215,63 @@ class DifferentialDriver:
         np.testing.assert_array_equal(cols["img:data"],
                                       self.oracle_column(want))
 
+    def _check_grouped(self, res, keys, col="img"):
+        """One GroupedResult (mean, count) vs the NumPy groupby oracle."""
+        vals = self.oracle_column(keys, col)
+        sexes = self.oracle_column(keys, "sex").astype(np.int8)
+        want = {int(k): vals[sexes == k] for k in np.unique(sexes)}
+        assert [int(k) for k in res.keys] == sorted(want)
+        mean, count = res.values
+        for g, k in enumerate(res.keys):
+            rows = want[int(k)]
+            assert int(np.asarray(count)[g]) == len(rows)
+            np.testing.assert_allclose(np.asarray(mean)[g], rows.mean(0),
+                                       atol=3e-4)
+
+    def op_query_grouped(self, seed):
+        """Grouped stats vs a NumPy groupby oracle, plus the acceptance
+        invariants: repeat folds zero rows, grouping never multiplies
+        gathers (each gathered block is gathered once, however many
+        groups)."""
+        rng = np.random.default_rng(seed)
+        prefix = b"" if rng.integers(0, 2) else \
+            PREFIXES[int(rng.integers(0, len(PREFIXES)))].encode()
+
+        def q():
+            scan = (self.session.scan(prefix=prefix) if prefix
+                    else self.session.scan())
+            return (scan.select("img:data").group_by("idx:sex")
+                    .map(MeanProgram()).map(CountProgram()).reduce())
+
+        res, rep = q().collect()
+        self._check_report(rep)
+        keys = self.oracle_keys(prefix=prefix)
+        assert rep.query.num_groups == len(
+            set(int(self.rows[k]["sex"]) for k in keys))
+        # one pass: every gathered block was gathered exactly once
+        assert rep.query.gather_count <= max(rep.query.partials_total, 0)
+        self._check_grouped(res, keys)
+        # acceptance: immediate repeat on the clean epoch folds ZERO rows
+        res2, rep2 = q().collect()
+        self._check_report(rep2)
+        assert rep2.query.rows_folded == 0, rep2.query
+        assert rep2.query.partials_reused == rep2.query.partials_total
+        for a, b in zip(res.values, res2.values):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def op_query_grouped_multicol(self, seed):
+        """Multi-column grouped plan: every program × every column in one
+        pass, each column matching its own groupby oracle."""
+        res, rep = (self.session.scan()
+                    .select(["img:data", "idx:age"]).group_by("idx:sex")
+                    .map(MeanProgram()).map(CountProgram())
+                    .reduce().collect())
+        self._check_report(rep)
+        keys = self.oracle_keys()
+        assert set(res) == {"img:data", "idx:age"}
+        self._check_grouped(res["img:data"], keys, "img")
+        self._check_grouped(res["idx:age"], keys, "age")
+
     # ------------------------------------------------------------------
     # invariants
     # ------------------------------------------------------------------
@@ -245,7 +302,7 @@ class DifferentialDriver:
 
     OPS = ("upload", "upload_overwrite", "remove_key", "remove_range",
            "rebalance", "query_full", "query_prefix", "query_predicate",
-           "collect_rows")
+           "collect_rows", "query_grouped", "query_grouped_multicol")
 
     def apply(self, op: str, seed: int):
         if op == "upload":
@@ -266,6 +323,10 @@ class DifferentialDriver:
             self.op_query_predicate(seed)
         elif op == "collect_rows":
             self.op_collect_rows(seed)
+        elif op == "query_grouped":
+            self.op_query_grouped(seed)
+        elif op == "query_grouped_multicol":
+            self.op_query_grouped_multicol(seed)
         else:                            # pragma: no cover
             raise AssertionError(op)
         self.steps += 1
@@ -283,7 +344,7 @@ def test_differential_random_walk(walk_seed):
     drv = DifferentialDriver()
     rng = np.random.default_rng(walk_seed)
     ops = list(DifferentialDriver.OPS)
-    weights = np.array([4, 2, 2, 1, 1, 2, 3, 2, 2], dtype=float)
+    weights = np.array([4, 2, 2, 1, 1, 2, 3, 2, 2, 2, 1], dtype=float)
     weights /= weights.sum()
     for _ in range(70):
         op = rng.choice(ops, p=weights)
@@ -341,6 +402,14 @@ if HAVE_HYPOTHESIS:
         @rule(seed=seeds)
         def collect_rows(self, seed):
             self.drv.op_collect_rows(seed)
+
+        @rule(seed=seeds)
+        def query_grouped(self, seed):
+            self.drv.op_query_grouped(seed)
+
+        @rule(seed=seeds)
+        def query_grouped_multicol(self, seed):
+            self.drv.op_query_grouped_multicol(seed)
 
         @invariant()
         def state_consistent(self):

@@ -265,9 +265,24 @@ class TestScanEdges:
         with pytest.raises(ValueError):
             s.scan().reduce()
 
-    def test_compute_needs_single_column(self):
-        s = GridSession(make_table(per=4))
+    def test_multi_column_compute_runs_per_column(self):
+        # the PR-2 single-column restriction is lifted: every mapped
+        # program folds over EACH selected column in one pass
+        t = make_table(per=4)
+        s = GridSession(t)
         q = s.scan().select("img:data", "idx:age").map(MeanProgram())
+        res, rep = q.collect()
+        assert set(res) == {"img:data", "idx:age"}
+        np.testing.assert_allclose(np.asarray(res["img:data"]),
+                                   t.column("img", "data").mean(0), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res["idx:age"]),
+                                   t.column("idx", "age").mean(0), atol=1e-3)
+        rep.query.check_block_invariant()
+        rep.query.check_partial_invariant()
+
+    def test_duplicate_compute_columns_rejected(self):
+        s = GridSession(make_table(per=4))
+        q = s.scan().select("img:data", "img:data").map(MeanProgram())
         with pytest.raises(ValueError):
             q.collect()
 

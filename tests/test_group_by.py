@@ -1,0 +1,533 @@
+"""Grouped multi-column analytics: group-aware fold partials, the grouped
+CSE segment-sum, bucketed power-of-two fold padding, and merge-path
+accounting.
+
+The PR acceptance oracles live here and in test_differential /
+test_multidevice: ``scan().select([c1, c2]).group_by(k).stats(...)``
+matches a NumPy groupby oracle in ONE pass (each (column, region) block
+gathers exactly once however many groups exist); a repeat grouped
+``.stats()`` on a clean epoch folds zero rows; a mutation re-folds only the
+dirty regions' blocks.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grid import GridSession
+from repro.core.mapreduce import MapReduceEngine
+from repro.core.query import age_sex_predicate
+from repro.core.regions import HierarchicalSplitPolicy
+from repro.core.stats import (
+    CountProgram,
+    FusedProgram,
+    GroupedProgram,
+    GroupedResult,
+    HistogramProgram,
+    MeanProgram,
+    MomentsProgram,
+    VarianceProgram,
+)
+from repro.core.table import ColumnSpec, make_mip_table
+from repro.utils import make_mesh
+
+PAYLOAD = (3, 4)
+N_SITES = 5
+
+
+def make_table(regions=("a", "b", "c", "d"), per=10, seed=0, sites=N_SITES):
+    rng = np.random.default_rng(seed)
+    t = make_mip_table(
+        payload_shape=PAYLOAD,
+        extra_index_columns=[ColumnSpec("age", (), np.float32),
+                             ColumnSpec("sex", (), np.int8),
+                             ColumnSpec("site", (), np.int32)],
+        split_policy=HierarchicalSplitPolicy(max_region_bytes=10**18),
+        presplit_keys=list(regions)[1:],
+    )
+    keys = [f"{g}{i:04d}" for g in regions for i in range(per)]
+    n = len(keys)
+    t.upload(keys, {
+        "img": {"data": rng.normal(size=(n,) + PAYLOAD).astype(np.float32)},
+        "idx": {"size": rng.integers(6_000_000, 20_000_001, n),
+                "age": rng.uniform(4, 80, n).astype(np.float32),
+                "sex": rng.integers(0, 2, n).astype(np.int8),
+                "site": rng.integers(0, sites, n).astype(np.int32)}})
+    return t
+
+
+def groupby_oracle(values: np.ndarray, keys: np.ndarray):
+    """{key: rows} — the plain-NumPy groupby every test compares against."""
+    return {k: values[keys == k] for k in np.unique(keys)}
+
+
+# ----------------------------------------------------------------------
+# correctness vs the NumPy groupby oracle
+# ----------------------------------------------------------------------
+
+class TestGroupedCorrectness:
+    def test_grouped_stats_match_groupby_oracle(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        res, rep = (s.scan().select("img:data").group_by("idx:site")
+                    .map(MeanProgram()).map(VarianceProgram())
+                    .map(CountProgram()).reduce().collect())
+        data = t.column("img", "data")
+        sites = t.column("idx", "site")
+        oracle = groupby_oracle(data, sites)
+        assert isinstance(res, GroupedResult)
+        assert list(res.keys) == sorted(oracle)
+        assert rep.query.num_groups == len(oracle)
+        mean, var, count = res.values
+        for g, k in enumerate(res.keys):
+            want = oracle[k]
+            np.testing.assert_allclose(np.asarray(mean)[g], want.mean(0),
+                                       atol=1e-4)
+            np.testing.assert_allclose(np.asarray(var["var"])[g],
+                                       want.var(0), atol=1e-3)
+            assert int(np.asarray(count)[g]) == len(want)
+        rep.query.check_block_invariant()
+        rep.query.check_partial_invariant()
+
+    def test_one_pass_acceptance_single_region(self):
+        """Acceptance: a COLD grouped multi-statistic query gathers each
+        block exactly once — gather_count == 1 on a one-region table, no
+        matter how many groups the key column holds."""
+        t = make_table(regions=("a",), per=24)
+        s = GridSession(t, default_eta=4)
+        res, rep = (s.scan().select(["img:data"]).group_by("idx:site")
+                    .map(MeanProgram()).map(VarianceProgram())
+                    .reduce().collect())
+        q = rep.query
+        assert q.gather_count == 1, q          # one gather, G groups
+        assert q.blocks_transferred <= 1
+        assert q.num_groups == len(np.unique(t.column("idx", "site")))
+        assert q.rows_folded == t.num_rows
+
+    def test_multi_column_grouped_one_gather_per_block(self):
+        """select([c1, c2]).group_by(k): every program folds over every
+        column; gathers stay one per (column, region) — grouping never
+        multiplies them."""
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        res, rep = (s.scan().select(["img:data", "idx:age"])
+                    .group_by("idx:sex").map(MeanProgram())
+                    .map(VarianceProgram()).reduce().collect())
+        n_regions = len(t.regions)
+        q = rep.query
+        assert q.gather_count == 2 * n_regions, q   # 2 columns × regions
+        assert q.partials_total == 2 * n_regions
+        sexes = t.column("idx", "sex")
+        for col, ref in (("img:data", t.column("img", "data")),
+                         ("idx:age", t.column("idx", "age"))):
+            gr = res[col]
+            oracle = groupby_oracle(ref, sexes)
+            assert list(gr.keys) == sorted(oracle)
+            mean, var = gr.values
+            for g, k in enumerate(gr.keys):
+                np.testing.assert_allclose(np.asarray(mean)[g],
+                                           oracle[k].mean(0), atol=1e-3)
+                np.testing.assert_allclose(np.asarray(var["var"])[g],
+                                           oracle[k].var(0), rtol=2e-3,
+                                           atol=1e-2)
+
+    def test_grouped_with_predicate(self):
+        t = make_table(per=16, seed=3)
+        s = GridSession(t, default_eta=4, compact_gather_threshold=0.0)
+        pred = age_sex_predicate(20, 60, None)
+        res, rep = (s.scan().where(pred, ["age", "sex"])
+                    .group_by("idx:site").map(CountProgram())
+                    .reduce().collect())
+        ages = t.column("idx", "age")
+        mask = (ages >= 20) & (ages < 60)
+        sites = t.column("idx", "site")[mask]
+        oracle = groupby_oracle(sites, sites)
+        assert list(res.keys) == sorted(oracle)
+        for g, k in enumerate(res.keys):
+            assert int(np.asarray(res.values)[g]) == len(oracle[k])
+
+    def test_grouped_with_prefix_range(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        res, rep = (s.scan(prefix="b").group_by("idx:sex")
+                    .map(MeanProgram()).reduce().collect())
+        keys = t.keys
+        in_b = np.array([k.startswith(b"b") for k in keys])
+        data = t.column("img", "data")[in_b]
+        sexes = t.column("idx", "sex")[in_b]
+        oracle = groupby_oracle(data, sexes)
+        for g, k in enumerate(res.keys):
+            np.testing.assert_allclose(np.asarray(res.values)[g],
+                                       oracle[k].mean(0), atol=1e-4)
+        assert rep.query.regions_pruned > 0
+
+    def test_single_group_and_float_keys(self):
+        t = make_table(sites=1)                    # every row in one site
+        s = GridSession(t, default_eta=4)
+        res, rep = (s.scan().group_by("idx:site").map(MeanProgram())
+                    .reduce().collect())
+        assert len(res) == 1 and rep.query.num_groups == 1
+        np.testing.assert_allclose(np.asarray(res.values)[0],
+                                   t.column("img", "data").mean(0),
+                                   atol=1e-4)
+        # float-valued key column groups by exact value
+        resf, _ = (s.scan().group_by("idx:age").map(CountProgram())
+                   .reduce().collect())
+        assert rep.query.num_groups <= len(resf) == t.num_rows
+
+    def test_empty_selection_yields_zero_groups(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        res, rep = (s.scan(prefix=b"zzz").group_by("idx:site")
+                    .map(MeanProgram()).reduce().collect())
+        assert len(res) == 0 and rep.query.num_groups == 0
+        rep.query.check_partial_invariant()
+
+    def test_grouped_count_is_exact_int(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        res, _ = (s.scan().group_by("idx:sex").map(CountProgram())
+                  .reduce().collect())
+        counts = np.asarray(res.values)
+        assert counts.dtype == np.int32
+        assert counts.sum() == t.num_rows
+
+
+class TestGroupedValidation:
+    def test_group_by_needs_scalar_column(self):
+        s = GridSession(make_table(per=4))
+        with pytest.raises(ValueError):
+            (s.scan().group_by("img:data").map(MeanProgram())
+             .reduce().collect())
+
+    def test_group_by_without_map_raises(self):
+        s = GridSession(make_table(per=4))
+        with pytest.raises(ValueError):
+            s.scan().group_by("idx:site").collect()
+
+    def test_double_group_by_raises(self):
+        s = GridSession(make_table(per=4))
+        with pytest.raises(ValueError):
+            s.scan().group_by("idx:site").group_by("idx:sex")
+
+    def test_explain_shows_group(self):
+        s = GridSession(make_table(per=4))
+        text = (s.scan().group_by("idx:site").map(MeanProgram())
+                .reduce().explain())
+        assert "idx:site" in text
+
+
+# ----------------------------------------------------------------------
+# caching: group-keyed partials ride the same content-addressed machinery
+# ----------------------------------------------------------------------
+
+class TestGroupedCaching:
+    def grouped(self, s):
+        return (s.scan().select("img:data").group_by("idx:site")
+                .map(MeanProgram()).map(VarianceProgram()).reduce())
+
+    def test_repeat_grouped_stats_folds_zero_rows(self):
+        """Acceptance: repeat grouped .stats() on a clean epoch folds 0."""
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        r1 = self.grouped(s).stats()
+        assert r1.query.rows_folded == t.num_rows
+        r2 = self.grouped(s).stats()                # fresh plan object
+        q = r2.query
+        assert r2.plan_cache_hit
+        assert q.rows_folded == 0, q
+        assert q.partials_reused == q.partials_total
+        q.check_partial_invariant()
+
+    def test_mutation_refolds_only_dirty_region(self):
+        """Acceptance: a mutation that keeps the group universe stable
+        re-folds exactly the dirty region's blocks."""
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        self.grouped(s).stats()
+        rng = np.random.default_rng(9)
+        # overwrite one row, PRESERVING its index columns (group universe
+        # and row masks unchanged -> only the region's version bumps)
+        key = b"b0003"
+        _, age = s.retrieve("idx", "age", rowkey=key)
+        _, sex = s.retrieve("idx", "sex", rowkey=key)
+        _, site = s.retrieve("idx", "site", rowkey=key)
+        _, size = s.retrieve("idx", "size", rowkey=key)
+        s.upload([key], {
+            "img": {"data": rng.normal(size=(1,) + PAYLOAD)
+                    .astype(np.float32)},
+            "idx": {"size": size, "age": age, "sex": sex, "site": site}},
+            on_duplicate="overwrite")
+        res, rep = self.grouped(s).collect()
+        q = rep.query
+        dirty = t.regions.region_for(key)
+        assert q.partials_reused == q.partials_total - 1, q
+        assert q.rows_folded == dirty.num_rows(t.keys), q
+        # and the answer is right
+        data, sites = t.column("img", "data"), t.column("idx", "site")
+        mean = res.values[0]
+        for g, k in enumerate(res.keys):
+            np.testing.assert_allclose(np.asarray(mean)[g],
+                                       data[sites == k].mean(0), atol=1e-4)
+
+    def test_group_universe_change_invalidates_but_stays_correct(self):
+        """A mutation that changes the distinct key values re-signs the
+        mapping (gid assignment is global), so group-keyed partials under
+        the old mapping can't be misused — and results stay correct."""
+        t = make_table(sites=3)
+        s = GridSession(t, default_eta=4)
+        self.grouped(s).stats()
+        rng = np.random.default_rng(4)
+        _, age = s.retrieve("idx", "age", rowkey=b"a0000")
+        s.upload([b"a0000"], {
+            "img": {"data": rng.normal(size=(1,) + PAYLOAD)
+                    .astype(np.float32)},
+            "idx": {"size": np.array([7_000_000]), "age": age,
+                    "sex": np.array([0], np.int8),
+                    "site": np.array([77], np.int32)}},   # NEW site value
+            on_duplicate="overwrite")
+        res, rep = self.grouped(s).collect()
+        data, sites = t.column("img", "data"), t.column("idx", "site")
+        assert 77 in res.keys
+        assert rep.query.num_groups == len(np.unique(sites))
+        mean = res.values[0]
+        for g, k in enumerate(res.keys):
+            np.testing.assert_allclose(np.asarray(mean)[g],
+                                       data[sites == k].mean(0), atol=1e-4)
+
+    def test_distinct_group_columns_keep_distinct_partials(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        (s.scan().group_by("idx:site").map(MeanProgram()).reduce().stats())
+        r = (s.scan().group_by("idx:sex").map(MeanProgram()).reduce()
+             .stats())
+        q = r.query
+        assert q.partials_reused == 0 and q.rows_folded > 0, q
+        # ...but the payload BLOCKS are shared: no re-gather
+        assert q.gather_count == 0 and q.blocks_reused == q.blocks_total
+
+    def test_grouped_and_ungrouped_partials_are_distinct(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        s.run(MeanProgram())
+        r = (s.scan().group_by("idx:site").map(MeanProgram()).reduce()
+             .stats())
+        assert r.query.partials_reused == 0 and r.query.rows_folded > 0
+        assert r.query.gather_count == 0       # blocks shared
+
+    def test_rebalance_refolds_nothing_grouped(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        self.grouped(s).stats()
+        s.rebalance(tolerance=0.0)
+        r = self.grouped(s).stats()
+        assert r.query.rows_folded == 0, r.query
+
+    def test_masked_out_nan_rows_do_not_poison_groups(self):
+        """A NaN/Inf payload in a predicate-EXCLUDED row must not leak into
+        any group's segment sums (the grouped CSE zeroes unclaimed rows
+        before raising powers, like the ungrouped _masked path)."""
+        t = make_table()
+        bad = np.full((1,) + PAYLOAD, np.nan, np.float32)
+        t.upload([b"a0000"], {
+            "img": {"data": bad},
+            "idx": {"size": np.array([7_000_000]),
+                    "age": np.array([1.0], np.float32),   # below the window
+                    "sex": np.array([0], np.int8),
+                    "site": np.array([0], np.int32)}},
+            on_duplicate="overwrite")
+        s = GridSession(t, default_eta=4, compact_gather_threshold=0.0)
+        pred = age_sex_predicate(4, None, None)           # excludes the NaN row
+        res, rep = (s.scan().where(pred, ["age", "sex"])
+                    .group_by("idx:site")
+                    .map(MeanProgram()).map(VarianceProgram())
+                    .reduce().collect())
+        ages = t.column("idx", "age")
+        sel = ages >= 4
+        data, sites = t.column("img", "data")[sel], t.column("idx",
+                                                             "site")[sel]
+        mean, var = res.values
+        assert np.isfinite(np.asarray(mean)).all()
+        assert np.isfinite(np.asarray(var["var"])).all()
+        for g, k in enumerate(res.keys):
+            np.testing.assert_allclose(np.asarray(mean)[g],
+                                       data[sites == k].mean(0), atol=1e-4)
+
+    def test_group_mapping_memoized_per_lineage(self):
+        """Repeat grouped queries reuse the resolved mapping (no per-repeat
+        unique+hash over the selection); mutations re-resolve."""
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        self.grouped(s).stats()
+        assert len(s._groups) == 1
+        self.grouped(s).stats()
+        assert len(s._groups) == 1                 # memo hit, no new entry
+        s.remove(rowkey=b"a0000")
+        self.grouped(s).stats()
+        assert len(s._groups) == 2                 # new lineage, new entry
+
+    def test_grouped_skips_compact_path(self):
+        # grouping always takes block granularity (partials are the point)
+        t = make_table(per=32, seed=5)
+        s = GridSession(t, default_eta=4, compact_gather_threshold=0.5)
+        r = (s.scan().where(age_sex_predicate(None, 10.0, None),
+                            ["age", "sex"])
+             .group_by("idx:sex").map(MeanProgram()).reduce().stats())
+        assert r.query.gather_path == "blocks", r.query
+
+
+# ----------------------------------------------------------------------
+# GroupedProgram / GroupedResult units
+# ----------------------------------------------------------------------
+
+class TestGroupedProgram:
+    def fold_grouped(self, program, data, gids, G, eta=4):
+        eng = MapReduceEngine(make_mesh((1,), ("data",)))
+        gp = GroupedProgram(program, G)
+        p = eng.fold_block(gp, jnp.asarray(data), None, eta, PAYLOAD,
+                           np.float32, gids=jnp.asarray(gids), num_groups=G)
+        return eng.merge_finalize(gp, [p], PAYLOAD, np.float32)
+
+    @pytest.mark.parametrize("program", [
+        MeanProgram(), VarianceProgram(), MomentsProgram(),
+        HistogramProgram(lo=-4, hi=4, bins=8), CountProgram(),
+    ])
+    def test_grouped_fold_equals_per_group_fold(self, program):
+        """Property: a grouped fold == the base program folded over each
+        group's rows separately, for CSE'd and private members alike."""
+        rng = np.random.default_rng(0)
+        n, G = 22, 3
+        data = rng.normal(size=(n,) + PAYLOAD).astype(np.float32)
+        gids = rng.integers(0, G, n).astype(np.int32)
+        got = self.fold_grouped(program, data, gids, G)
+        eng = MapReduceEngine(make_mesh((1,), ("data",)))
+        for g in range(G):
+            sub = data[gids == g]
+            p = eng.fold_block(program, jnp.asarray(sub), None, 4,
+                               PAYLOAD, np.float32)
+            want = eng.merge_finalize(program, [p], PAYLOAD, np.float32)
+            jax.tree.map(
+                lambda a, b: np.testing.assert_allclose(
+                    np.asarray(a)[g], np.asarray(b), rtol=2e-4, atol=2e-3),
+                got, want)
+
+    def test_grouped_fused_additive_and_cse(self):
+        fused = FusedProgram((MeanProgram(), VarianceProgram(),
+                              MomentsProgram()))
+        gp = GroupedProgram(fused, 4)
+        assert gp.additive                      # CSE keeps the psum reduce
+        zero = gp.zero(PAYLOAD, np.float32)
+        assert zero["private"] == ()
+        (dt, pool), = ((k, v) for k, v in zero["shared"].items())
+        assert pool["count"].shape == (4,)      # per-group counts
+        assert pool["s1"].shape == (4,) + PAYLOAD
+
+    def test_cache_key_includes_group_count(self):
+        a = GroupedProgram(MeanProgram(), 3).cache_key()
+        b = GroupedProgram(MeanProgram(), 4).cache_key()
+        assert a != b
+        assert GroupedProgram(MeanProgram(), 3).cache_key() == a
+
+    def test_grouped_result_api(self):
+        vals = jnp.arange(6.0).reshape(3, 2)
+        r = GroupedResult(keys=np.array([2, 5, 9]), values=vals)
+        assert len(r) == 3
+        np.testing.assert_array_equal(np.asarray(r.group(5)), [2.0, 3.0])
+        d = r.asdict()
+        assert set(d) == {2, 5, 9}
+        with pytest.raises(KeyError):
+            r.index_of(4)
+
+    def test_grouped_program_validation(self):
+        with pytest.raises(ValueError):
+            GroupedProgram(MeanProgram(), -1)
+        with pytest.raises(ValueError):
+            GroupedProgram(None, 3)
+
+
+# ----------------------------------------------------------------------
+# bucketed power-of-two fold padding
+# ----------------------------------------------------------------------
+
+class TestBucketedPadding:
+    def test_distinct_block_sizes_share_pow2_executables(self):
+        eng = MapReduceEngine(make_mesh((1,), ("data",)))
+        c0 = eng.compile_count
+        for r in (5, 6, 7, 8, 9, 12, 13, 15, 16):
+            eng.fold_block(MeanProgram(), jnp.ones((r,) + PAYLOAD), None,
+                           4, PAYLOAD, np.float32)
+        # buckets 8, 8, 8, 8*, 16, 16, 16, 16, 16* — *unmasked exact-pow2
+        # blocks skip the mask, so 2 bucket sizes × (masked, unmasked)
+        assert eng.compile_count - c0 <= 4, eng.compile_count - c0
+
+    def test_padded_fold_matches_unpadded(self):
+        rng = np.random.default_rng(1)
+        data = rng.normal(size=(11,) + PAYLOAD).astype(np.float32)
+        mask = rng.integers(0, 2, 11).astype(bool)
+        mask[0] = True
+        ref_eng = MapReduceEngine(make_mesh((1,), ("data",)),
+                                  block_pad="none")
+        pow2_eng = MapReduceEngine(make_mesh((1,), ("data",)))
+        for m in (None, jnp.asarray(mask)):
+            a = ref_eng.fold_block(MeanProgram(), jnp.asarray(data), m, 4,
+                                   PAYLOAD, np.float32)
+            b = pow2_eng.fold_block(MeanProgram(), jnp.asarray(data), m, 4,
+                                    PAYLOAD, np.float32)
+            jax.tree.map(lambda x, y: np.testing.assert_allclose(
+                np.asarray(x), np.asarray(y), atol=1e-5), a, b)
+
+    def test_grouped_padded_fold_correct(self):
+        rng = np.random.default_rng(2)
+        n, G = 13, 3                               # pads to 16
+        data = rng.normal(size=(n,) + PAYLOAD).astype(np.float32)
+        gids = rng.integers(0, G, n).astype(np.int32)
+        eng = MapReduceEngine(make_mesh((1,), ("data",)))
+        gp = GroupedProgram(CountProgram(), G)
+        p = eng.fold_block(gp, jnp.asarray(data), None, 4, PAYLOAD,
+                           np.float32, gids=jnp.asarray(gids), num_groups=G)
+        got = eng.merge_finalize(gp, [p], PAYLOAD, np.float32)
+        for g in range(G):
+            assert int(np.asarray(got)[g]) == int((gids == g).sum())
+
+    def test_funnel_merge_buckets_partial_count(self):
+        eng = MapReduceEngine(make_mesh((1,), ("data",)))
+        mk = lambda: eng.fold_block(MeanProgram(), jnp.ones((4,) + PAYLOAD),
+                                    None, 4, PAYLOAD, np.float32)
+        ps = [mk() for _ in range(9)]
+        c0 = eng.compile_count
+        for n in (3, 4, 5, 6, 7, 8):
+            eng.merge_finalize(MeanProgram(), ps[:n], PAYLOAD, np.float32)
+        # counts bucket to 4 and 8: two merge executables, not six
+        assert eng.compile_count - c0 == 2, eng.compile_count - c0
+
+    def test_invalid_policies_rejected(self):
+        with pytest.raises(ValueError):
+            MapReduceEngine(make_mesh((1,), ("data",)), block_pad="pow3")
+        with pytest.raises(ValueError):
+            MapReduceEngine(make_mesh((1,), ("data",)),
+                            merge_strategy="ring")
+
+
+# ----------------------------------------------------------------------
+# merge-path accounting (the tree reduce itself needs >1 device: see
+# test_multidevice.py::test_tree_reduce_merge_8dev)
+# ----------------------------------------------------------------------
+
+class TestMergePath:
+    def test_single_device_funnels(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        r = s.scan().map(MeanProgram()).reduce().stats()
+        if jax.device_count() == 1:
+            assert r.query.merge_path == "funnel", r.query
+        assert s.engine.merge_path_counts["funnel"] + \
+            s.engine.merge_path_counts["tree"] >= 1
+
+    def test_result_cache_hit_reports_no_merge(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)
+        s.run(MeanProgram())
+        _, rep = s.run(MeanProgram())
+        assert rep.plan_cache_hit and rep.query.merge_path == ""

@@ -151,6 +151,74 @@ def test_grid_session_incremental_8dev():
 
 
 @pytest.mark.slow
+def test_tree_reduce_merge_8dev():
+    """The merge phase tree-reduces across owner devices: each device
+    pre-merges its own partials locally, one psum over the data axis joins
+    them, and finalize runs replicated — no single-device funnel.  Grouped
+    and ungrouped additive programs take it; non-additive merges and a
+    forced ``merge_strategy="funnel"`` fall back, with identical results."""
+    out = run_snippet("""
+        import numpy as np, jax
+        from repro.core.grid import GridSession
+        from repro.core.stats import (CountProgram, MeanProgram,
+                                      VarianceProgram)
+        from repro.core.table import make_mip_table, ColumnSpec
+
+        assert jax.device_count() == 8
+        rng = np.random.default_rng(0)
+        groups = [f'g{i:02d}' for i in range(32)]       # high region count
+        t = make_mip_table(
+            payload_shape=(4, 4),
+            extra_index_columns=[ColumnSpec('site', (), np.int32)],
+            presplit_keys=groups[1:])
+        keys = [f'{g}x{i:03d}' for g in groups for i in range(6)]
+        n = len(keys)
+        data = rng.normal(size=(n, 4, 4)).astype(np.float32)
+        t.upload(keys, {'img': {'data': data},
+                        'idx': {'size': rng.integers(6_000_000, 20_000_001, n),
+                                'site': rng.integers(0, 4, n).astype(np.int32)}})
+        s = GridSession(t, default_eta=4)
+
+        # additive ungrouped: tree
+        res, rep = s.run(MeanProgram())
+        assert rep.query.merge_path == 'tree', rep.query
+        assert np.allclose(np.asarray(res), data.mean(0), atol=1e-5)
+
+        # grouped additive: tree, values match the groupby oracle
+        gr, grep = (s.scan().group_by('idx:site').map(MeanProgram())
+                    .map(VarianceProgram()).map(CountProgram())
+                    .reduce().collect())
+        assert grep.query.merge_path == 'tree', grep.query
+        sites = t.column('idx', 'site'); d2 = t.column('img', 'data')
+        m, v, c = gr.values
+        for g, k in enumerate(gr.keys):
+            sel = d2[sites == k]
+            assert np.allclose(np.asarray(m)[g], sel.mean(0), atol=1e-4)
+            assert np.allclose(np.asarray(v['var'])[g], sel.var(0), atol=1e-3)
+            assert int(np.asarray(c)[g]) == len(sel)
+
+        # forced funnel agrees bit-for-bit-ish with the tree reduce
+        s2 = GridSession(t, default_eta=4)
+        s2.engine.merge_strategy = 'funnel'
+        res_f, rep_f = s2.run(MeanProgram())
+        assert rep_f.query.merge_path == 'funnel'
+        assert np.allclose(np.asarray(res_f), np.asarray(res), atol=1e-6)
+
+        # non-additive (Chan variance standalone) falls back to funnel
+        _, rep_v = s.run(VarianceProgram())
+        assert rep_v.query.merge_path == 'funnel', rep_v.query
+
+        # rebalance re-homes cached partials into the tree merge
+        s.rebalance(tolerance=0.0)
+        res3, rep3 = s.run(MeanProgram())
+        assert rep3.query.rows_folded == 0, rep3.query
+        assert np.allclose(np.asarray(res3), data.mean(0), atol=1e-5)
+        print('TREE_REDUCE_OK', s.engine.merge_path_counts)
+    """)
+    assert "TREE_REDUCE_OK" in out
+
+
+@pytest.mark.slow
 def test_int8_pod_compressed_train_step_8dev():
     """2 pods × 2 data × 2 model: the int8-DCN gradient sync must train
     equivalently (within quantization error) to the plain step."""
