@@ -141,7 +141,13 @@ def run_kernels() -> None:
         "kernels",
         "Kernels (interpret-mode validation)",
         bench_kernels.run,
+        lambda b: (f"fused_fold_bytes_x="
+                   f"{b['fused_fold_speedup_grouped']:.2f};"
+                   f"bw_frac={b['fused_fold_roofline_bw_frac']:.2f}"),
+        # rows become dicts for the artifact; every scalar metric (the
+        # gated fused_fold ratios) passes through untouched
         payload=lambda b: {
+            **{k: v for k, v in b.items() if k != "rows"},
             "rows": [{"name": n, "us": us, "derived": derived}
                      for n, us, derived in b["rows"]],
         })

@@ -157,6 +157,8 @@ class BlockStoreStats:
     host_reads: int = 0     # host-only fetches that re-read the table
     partial_hits: int = 0   # per-block fold partials served from the cache
     folds: int = 0          # per-block fold partials computed and stored
+    gid_hits: int = 0       # per-region gid blocks served from the cache
+    gid_builds: int = 0     # gid blocks densified (searchsorted) and stored
 
 
 class BlockStore:
@@ -190,6 +192,12 @@ class BlockStore:
         # (rid, version) -> live partial count: keeps has_partials O(1)
         # (it runs once per surviving region on every cold selective scan)
         self._partial_index: Dict[Tuple[int, int], int] = {}
+        # densified per-region gid blocks keyed (key-column block lineage,
+        # mapping signature): a dirty-region re-fold touches OTHER regions'
+        # partials but still needs THIS region's gids — caching them skips
+        # the np.searchsorted re-densification on every such fold.  Tiny
+        # (int32 per row), so a few hundred entries cost ~nothing.
+        self._gids: LRUCache = LRUCache(512)
         # region id -> mutation epoch that last changed its content
         self._versions: Dict[int, int] = {}
 
@@ -228,6 +236,12 @@ class BlockStore:
                     and k[0][3] != self._versions[k[0][0][0]]]
         for k in doomed_p:
             self._pop_partial(k)
+        # superseded gid blocks die with their key-column block lineage
+        doomed_g = [k for k in self._gids.keys()
+                    if k[0][0][0] in touched
+                    and k[0][3] != self._versions[k[0][0][0]]]
+        for k in doomed_g:
+            self._gids.pop(k)
 
     def drop_regions(self, rids: Iterable[int]) -> None:
         """Forget regions that no longer exist (split parents): their rids
@@ -241,6 +255,8 @@ class BlockStore:
         for k in [k for k in self._partials.keys()
                   if k[0][0][0] in doomed_rids]:
             self._pop_partial(k)
+        for k in [k for k in self._gids.keys() if k[0][0][0] in doomed_rids]:
+            self._gids.pop(k)
         for rid in doomed_rids:
             self._versions.pop(rid, None)
 
@@ -358,21 +374,28 @@ class BlockStore:
 
     def partial_key(self, region: Region, family: str, qualifier: str,
                     program_key: Tuple, mask_sig: str, eta: int,
-                    group_sig: str = "") -> Tuple:
+                    group_sig: str = "", impl: str = "") -> Tuple:
         """The content address of one block's fold partial: block lineage
         (signature + version) × program × row-mask signature × η × group-key
-        signature.  Any mutation to the region bumps the embedded version;
-        any change to the selected-row subset changes ``mask_sig`` — either
-        way the key becomes unmatchable and the partial re-folds.
+        signature × fold implementation.  Any mutation to the region bumps
+        the embedded version; any change to the selected-row subset changes
+        ``mask_sig`` — either way the key becomes unmatchable and the
+        partial re-folds.
 
         ``group_sig`` (grouped plans only) signs the group column AND the
         global value→group-id mapping: a block's group-keyed partial is
         only valid under the exact mapping it was folded with, since gid
         assignment depends on which key values the whole selection
         contains.  Ungrouped partials keep ``""``.
+
+        ``impl`` distinguishes fold implementations whose partials agree
+        only up to float accumulation order (the fused Pallas kernel vs
+        the XLA scan): flipping ``engine.fold_impl`` mid-session must not
+        merge partials folded under different orders.  The XLA path keeps
+        ``""``, so existing keys are unchanged.
         """
         return (self.key_of(region, family, qualifier),
-                program_key, mask_sig, int(eta), group_sig)
+                program_key, mask_sig, int(eta), group_sig, impl)
 
     @staticmethod
     def _partial_rid_version(key: Tuple) -> Tuple[int, int]:
@@ -408,9 +431,42 @@ class BlockStore:
         signal the adaptive gather consults before going compact)."""
         return (rid, self.version_of(rid)) in self._partial_index
 
+    # ------------------------------------------------------------------
+    # gid blocks (densified group ids per region × mapping)
+    # ------------------------------------------------------------------
+
+    def gid_key(self, region: Region, family: str, qualifier: str,
+                group_sig: str) -> Tuple:
+        """Content address of one region's densified gid block: the KEY
+        column's block lineage × the global value→gid mapping signature.
+        A mutation to the region bumps the embedded version; a selection
+        whose value universe differs carries another ``group_sig`` —
+        either way the stale gids can never be served again."""
+        return (self.key_of(region, family, qualifier), group_sig)
+
+    def get_gids(self, region: Region, family: str, qualifier: str,
+                 group_sig: str) -> Optional[np.ndarray]:
+        g = self._gids.get(self.gid_key(region, family, qualifier,
+                                        group_sig))
+        if g is not None:
+            self.stats.gid_hits += 1
+        return g
+
+    def put_gids(self, region: Region, family: str, qualifier: str,
+                 group_sig: str, gids: np.ndarray) -> None:
+        self.stats.gid_builds += 1
+        g = np.ascontiguousarray(gids, dtype=np.int32)
+        g.flags.writeable = False
+        self._gids.put(self.gid_key(region, family, qualifier, group_sig), g)
+
+    @property
+    def gid_count(self) -> int:
+        return len(self._gids)
+
     def clear_partials(self) -> None:
         self._partials.clear()
         self._partial_index.clear()
+        self._gids.clear()
 
     def clear(self) -> None:
         """Drop every cached block AND partial (versions survive, so

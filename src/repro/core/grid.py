@@ -316,6 +316,8 @@ class GridSession:
         block_cache_cap: int = 256,
         partial_cache_cap: int = 1024,
         compact_gather_threshold: float = 0.05,
+        fold_impl: str = "pallas",
+        fold_interpret: bool = False,
     ):
         self.table = table
         self.mesh = (mesh if mesh is not None
@@ -339,7 +341,15 @@ class GridSession:
 
         self.placement = Placement.from_strategy(table, nodes, strategy)
         self.table.split_log.clear()  # from_strategy saw the current regions
-        self.engine = MapReduceEngine(self.mesh, data_axis)
+        #: ``fold_impl="pallas"`` (default) streams CSE-eligible block
+        #: folds through the fused Pallas kernel where the platform
+        #: supports it, falling back per fold signature (see
+        #: ``MapReduceEngine.fold_path``); ``"xla"`` forces the reference
+        #: fold.  ``fold_interpret=True`` runs the kernel in interpret
+        #: mode off-TPU (the test/bench harness on CPU).
+        self.engine = MapReduceEngine(self.mesh, data_axis,
+                                      fold_impl=fold_impl,
+                                      fold_interpret=fold_interpret)
         self.metrics = SessionMetrics()
         self.blocks = BlockStore(cap=block_cache_cap,
                                  partial_cap=partial_cache_cap)
@@ -606,6 +616,12 @@ class GridSession:
         ``impl="ref"``/``None`` keeps the jnp reference fold.  The kernel
         program has its own cache identity, so ref and pallas runs keep
         separate partials and can be compared side by side.
+
+        Orthogonally, the *fold phase itself* runs on the fused Pallas
+        fold kernel whenever the session-level ``fold_impl="pallas"``
+        switch is on and the fold signature is eligible (see
+        ``MapReduceEngine.fold_path``) — that path needs no per-call
+        opt-in here.
         """
         if impl is not None and impl != "ref":
             from repro.kernels.streaming_stats.ops import kernel_map_program
@@ -999,6 +1015,13 @@ class GridSession:
         prog_key = program.cache_key()
         gsig = group.sig if group is not None else ""
         n_groups = group.num_groups if group is not None else 0
+        # Partials from the fused Pallas fold and the XLA fold agree only
+        # to fp32 accumulation tolerance, so they must not share cache
+        # slots.  The path is deterministic per (program, dtype, G) —
+        # resolve it once and key partials on it ("" keeps xla keys
+        # identical to pre-kernel sessions).
+        fold_impl = self.engine.fold_path(program, spec.dtype, n_groups)
+        impl_sig = fold_impl if fold_impl != "xla" else ""
         acct = _BlockAccount()
         partials: List[Any] = []
         owners: List[Optional[int]] = []
@@ -1012,7 +1035,7 @@ class GridSession:
             p_total += 1
             pkey = self.blocks.partial_key(
                 w.region, family, qualifier, prog_key, w.mask_sig, eta,
-                group_sig=gsig)
+                group_sig=gsig, impl=impl_sig)
             partial = self.blocks.get_partial(pkey)
             if partial is not None:
                 p_reused += 1
@@ -1026,9 +1049,19 @@ class GridSession:
                 bmask = None if w.mask_sig == "full" else mask[w.rows]
                 gid_arr = None
                 if group is not None:
-                    key_col = self.table.column(group.family,
-                                                group.qualifier)
-                    gid_arr = group.gids_for(key_col[w.rows])
+                    # Densified gid blocks depend only on (region lineage,
+                    # mapping), not on the program — cache them so
+                    # dirty-region re-folds across plans skip the
+                    # factorize pass.
+                    gid_arr = self.blocks.get_gids(
+                        w.region, group.family, group.qualifier, group.sig)
+                    if gid_arr is None:
+                        key_col = self.table.column(group.family,
+                                                    group.qualifier)
+                        gid_arr = group.gids_for(key_col[w.rows])
+                        self.blocks.put_gids(
+                            w.region, group.family, group.qualifier,
+                            group.sig, gid_arr)
                 src_rows = int(src.shape[0])
                 if src_rows != blk.rows:
                     # committed pre-padded to the fold bucket: extend the

@@ -120,6 +120,26 @@ class MapReduceProgram:
         ``finalize(own fold)`` up to float associativity."""
         raise NotImplementedError
 
+    # --- fused-kernel fold protocol (optional) ------------------------
+
+    def shared_fold_spec(self) -> Optional[Tuple[str, ...]]:
+        """The shared-accumulator names whose fp32 pool fully determines
+        this program's partial, or ``None`` if the partial needs anything
+        outside the pool (private accumulators, non-fp32 pools).  Non-None
+        makes the program eligible for the engine's fused Pallas fold
+        (``fold_impl="pallas"``): the kernel emits the pool in one HBM pass
+        and :meth:`partial_from_shared` shapes it into the program's
+        native partial — bitwise-compatible with the XLA fold up to fp32
+        accumulation order."""
+        return None
+
+    def partial_from_shared(self, shared: Mapping[str, jax.Array]) -> PyTree:
+        """Build this program's partial from the kernel-folded shared
+        pool (``{name: acc}``; grouped folds carry a leading group axis on
+        every leaf).  Must merge/finalize identically to a partial the
+        program folded itself, up to float associativity."""
+        raise NotImplementedError
+
 
 @dataclasses.dataclass
 class MapReduceStats:
@@ -140,7 +160,9 @@ class MapReduceEngine:
     def __init__(self, mesh: Mesh, data_axis: str = "data",
                  executable_cache_cap: int = 64,
                  block_pad: str = "pow2",
-                 merge_strategy: str = "auto"):
+                 merge_strategy: str = "auto",
+                 fold_impl: str = "pallas",
+                 fold_interpret: bool = False):
         self.mesh = mesh
         self.data_axis = data_axis
         # LRU-capped: one entry per (program, row signature, eta, C); an
@@ -165,6 +187,21 @@ class MapReduceEngine:
         if merge_strategy not in ("auto", "funnel"):
             raise ValueError(f"unknown merge_strategy {merge_strategy!r}")
         self.merge_strategy = merge_strategy
+        #: "pallas" streams each CSE-eligible block fold through the fused
+        #: Pallas kernel (one HBM pass emits the whole grouped accumulator
+        #: pool); "xla" forces the reference scan-of-chunks fold.  The
+        #: pallas setting falls back per fold signature — see
+        #: :meth:`fold_path` — so it is always safe to leave on.
+        if fold_impl not in ("pallas", "xla"):
+            raise ValueError(f"unknown fold_impl {fold_impl!r}")
+        self.fold_impl = fold_impl
+        #: run the Pallas kernel in interpret mode off-TPU (tests/benches on
+        #: the CPU container).  Off by default: without it, non-TPU
+        #: platforms take the XLA fold — interpret mode is a correctness
+        #: harness, not a fast path.
+        self.fold_interpret = bool(fold_interpret)
+        #: folds dispatched per implementation (observability + tests)
+        self.fold_path_counts: dict = {"pallas": 0, "xla": 0}
         #: which physical reduce the last merge_finalize took: "tree" (psum
         #: over the data axis) or "funnel" (partials meet on one device)
         self.last_merge_path = ""
@@ -271,6 +308,71 @@ class MapReduceEngine:
             return self._next_pow2(rows)
         return rows
 
+    def fold_path(self, program: MapReduceProgram, dtype,
+                  num_groups: int = 0) -> str:
+        """Which implementation :meth:`fold_block` takes for this fold
+        signature: ``"pallas"`` (the fused one-HBM-pass kernel) or
+        ``"xla"`` (the reference scan of chunks).  Deterministic per
+        (engine config, program, dtype, G), so the session can key cached
+        partials on it.  Falls back to XLA when:
+
+        - the program needs accumulators outside the fp32 CSE pool
+          (``shared_fold_spec() is None`` — private members, int32 count,
+          histograms, non-fp32 pools);
+        - the platform lacks Pallas support and interpret mode was not
+          requested (``fold_interpret`` covers CPU tests);
+        - the payload dtype is not real-valued;
+        - G exceeds the VMEM-budget threshold from the chunk model
+          (``fused_fold.ops.max_groups_for_vmem``).
+        """
+        if self.fold_impl != "pallas":
+            return "xla"
+        if not (self.fold_interpret or jax.default_backend() == "tpu"):
+            return "xla"
+        names = program.shared_fold_spec()
+        if not names:
+            return "xla"
+        dt = jnp.dtype(dtype)
+        if not (jnp.issubdtype(dt, jnp.floating)
+                or jnp.issubdtype(dt, jnp.integer)
+                or dt == jnp.dtype(bool)):
+            return "xla"
+        from repro.kernels.fused_fold.ops import max_groups_for_vmem
+        if max(1, int(num_groups)) > max_groups_for_vmem(names=names):
+            return "xla"
+        return "pallas"
+
+    def _pallas_fold_fn(self, program: MapReduceProgram, rows: int,
+                        row_shape, dtype, masked: bool, groups: int = 0):
+        """The jitted fused-kernel fold for one block signature.  One
+        streaming pass emits the whole shared pool; ``eta`` does not enter
+        the executable key — the kernel is chunk-free, so every chunk size
+        shares one compile per (bucketed rows, G).  Tile sizes divide the
+        pow2 row bucket (both are powers of two), so executables stay
+        keyed on ``bucket_rows`` exactly like the XLA path."""
+        from repro.kernels.fused_fold.ops import fused_fold
+
+        names = program.shared_fold_spec()
+        grouped = groups > 0
+        G = max(1, groups)
+        interpret = self.fold_interpret or jax.default_backend() != "tpu"
+
+        def fold(block, mask, gids):
+            shared = fused_fold(
+                block, mask, gids, num_groups=G, names=names,
+                interpret=interpret)
+            if not grouped:   # ungrouped folds are the G=1 degenerate case
+                shared = {n: a[0] for n, a in shared.items()}
+            return program.partial_from_shared(shared)
+
+        if grouped:
+            if masked:
+                return jax.jit(fold)
+            return jax.jit(lambda block, gids: fold(block, None, gids))
+        if masked:
+            return jax.jit(lambda block, mask: fold(block, mask, None))
+        return jax.jit(lambda block: fold(block, None, None))
+
     def _block_fold_fn(self, program: MapReduceProgram, rows: int,
                        row_shape, dtype, eta: int, masked: bool,
                        groups: int = 0):
@@ -366,12 +468,24 @@ class MapReduceEngine:
                            else jnp.asarray(mask, bool), padw)
             if grouped:
                 gids = jnp.pad(jnp.asarray(gids, jnp.int32), padw)
-        key = ("bfold", program.cache_key(), bucket, tuple(row_shape),
-               str(dtype), int(eta), mask is not None, int(num_groups))
-        fn = self._get_or_build(
-            key, lambda: self._block_fold_fn(
-                program, bucket, row_shape, dtype, eta, mask is not None,
-                groups=int(num_groups)))
+        impl = self.fold_path(program, dtype, num_groups)
+        self.fold_path_counts[impl] += 1
+        if impl == "pallas":
+            # chunk-free: eta is absent from the key — every η shares the
+            # one fused-kernel executable per (bucket, G) signature
+            key = ("pfold", program.cache_key(), bucket, tuple(row_shape),
+                   str(dtype), mask is not None, int(num_groups))
+            fn = self._get_or_build(
+                key, lambda: self._pallas_fold_fn(
+                    program, bucket, row_shape, dtype, mask is not None,
+                    groups=int(num_groups)))
+        else:
+            key = ("bfold", program.cache_key(), bucket, tuple(row_shape),
+                   str(dtype), int(eta), mask is not None, int(num_groups))
+            fn = self._get_or_build(
+                key, lambda: self._block_fold_fn(
+                    program, bucket, row_shape, dtype, eta, mask is not None,
+                    groups=int(num_groups)))
         if grouped:
             gids = jnp.asarray(gids, jnp.int32)
             return fn(block, mask, gids) if mask is not None \
@@ -425,6 +539,24 @@ class MapReduceEngine:
                 and all(o is not None and 0 <= o < len(self._axis_devices)
                         for o in owners))
 
+    def _presum_fn(self, program, count: int, row_shape, dtype):
+        """One jitted per-device sum over ``count`` stacked partials — the
+        owner-local pre-merge of the tree reduce.  Keyed by the pow2-
+        bucketed partial count (identity-padded), so drifting per-owner
+        block counts share a handful of compiles instead of dispatching a
+        Python loop of adds per partial."""
+        key = ("bpresum", program.cache_key(), int(count), tuple(row_shape),
+               str(dtype))
+
+        def build():
+            def presum(*ps):
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+                return jax.tree.map(lambda s: s.sum(axis=0), stacked)
+
+            return jax.jit(presum)
+
+        return self._get_or_build(key, build)
+
     def _merge_tree(self, program, partials, owners, row_shape, dtype):
         """psum-over-mesh reduce: owner-local pre-merge, one all-reduce."""
         D = len(self._axis_devices)
@@ -432,21 +564,31 @@ class MapReduceEngine:
         for p, o in zip(partials, owners):
             by_owner[o].append(p)
         identity = None
+
+        def ident(dev):
+            nonlocal identity
+            if identity is None:
+                identity = program.zero(tuple(row_shape), dtype)
+            return jax.device_put(identity, dev)
+
         shards = []
         for d, ps in enumerate(by_owner):
             dev = self._axis_devices[d]
             if not ps:
-                if identity is None:
-                    identity = program.zero(tuple(row_shape), dtype)
-                acc = jax.device_put(identity, dev)
-            else:
+                acc = ident(dev)
+            elif len(ps) == 1:
                 # partials folded this execution already live on device d;
                 # cached partials from a pre-rebalance owner re-home here
                 # (tiny — a partial, never a payload block)
                 acc = jax.device_put(ps[0], dev)
-                for p in ps[1:]:
-                    acc = jax.tree.map(jnp.add, acc,
-                                       jax.device_put(p, dev))
+            else:
+                # one jitted stack+sum per owner (tree path ⇒ additive),
+                # identity-padded to the pow2 count bucket
+                moved = [jax.device_put(p, dev) for p in ps]
+                bucket = self._next_pow2(len(moved))
+                moved.extend([ident(dev)] * (bucket - len(moved)))
+                acc = self._presum_fn(program, bucket, row_shape,
+                                      dtype)(*moved)
             shards.append(jax.tree.map(lambda x: x[None], acc))
 
         sharding = NamedSharding(self.mesh, P(self.data_axis))
@@ -537,15 +679,21 @@ class MapReduceEngine:
         dtype,
         eta: int,
         masked: bool = False,
+        groups: int = 0,
     ) -> Mapping[str, float]:
         """XLA ``cost_analysis`` of the per-block fold executable (FLOPs /
         bytes accessed) — the oracle the CSE bench and property test use to
-        show shared accumulators are computed once per chunk."""
-        fn = self._block_fold_fn(program, rows, row_shape, dtype, eta, masked)
+        show shared accumulators are computed once per chunk, and the
+        measured bytes-read the fused-kernel bench compares its one-pass
+        analytic bytes against (grouped folds via ``groups > 0``)."""
+        fn = self._block_fold_fn(program, rows, row_shape, dtype, eta,
+                                 masked, groups=int(groups))
         args = [jax.ShapeDtypeStruct((rows,) + tuple(row_shape),
                                      jnp.dtype(dtype))]
         if masked:
             args.append(jax.ShapeDtypeStruct((rows,), jnp.dtype(bool)))
+        if groups:
+            args.append(jax.ShapeDtypeStruct((rows,), jnp.dtype(jnp.int32)))
         cost = fn.lower(*args).compile().cost_analysis()
         if isinstance(cost, (list, tuple)):   # JAX 0.4.x wraps it in a list
             cost = cost[0] if cost else {}

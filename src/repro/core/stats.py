@@ -102,6 +102,14 @@ class MeanProgram(MapReduceProgram):
     def finalize_shared(self, shared):
         return self.finalize({"sum": shared["s1"], "count": shared["count"]})
 
+    def shared_fold_spec(self):
+        if jnp.dtype(self.acc_dtype) != jnp.float32:
+            return None
+        return self.requires()
+
+    def partial_from_shared(self, shared):
+        return {"sum": shared["s1"], "count": shared["count"]}
+
 
 @dataclasses.dataclass(frozen=True)
 class VarianceProgram(MapReduceProgram):
@@ -160,6 +168,20 @@ class VarianceProgram(MapReduceProgram):
         var = jnp.maximum(shared["s2"] / n - mean * mean, 0)
         return {"mean": mean, "var": var, "count": shared["count"]}
 
+    def shared_fold_spec(self):
+        if jnp.dtype(self.acc_dtype) != jnp.float32:
+            return None
+        return self.requires()
+
+    def partial_from_shared(self, shared):
+        # raw sums -> the Chan partial: mean = Σx/n, M2 = Σx² - n·mean²
+        # (equal up to float associativity; merge stays the Chan merge)
+        n = shared["count"]
+        safe_n = jnp.maximum(n, 1)
+        mean = shared["s1"] / safe_n
+        m2 = jnp.maximum(shared["s2"] - mean * shared["s1"], 0)
+        return {"count": n, "mean": mean, "m2": m2}
+
 
 @dataclasses.dataclass(frozen=True)
 class MomentsProgram(MapReduceProgram):
@@ -209,6 +231,14 @@ class MomentsProgram(MapReduceProgram):
     def finalize_shared(self, shared):
         # the private partial IS the raw power sums — reuse finalize as-is
         return self.finalize(dict(shared))
+
+    def shared_fold_spec(self):
+        if jnp.dtype(self.acc_dtype) != jnp.float32:
+            return None
+        return self.requires()
+
+    def partial_from_shared(self, shared):
+        return dict(shared)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -321,6 +351,20 @@ class FusedProgram(MapReduceProgram):
             else:
                 out.append(p.finalize(partial["private"][ref]))
         return tuple(out)
+
+    def shared_fold_spec(self):
+        # kernel-eligible iff the fusion is pure pool: no private member
+        # folds alongside, and the pool is the kernel's fp32 accumulator
+        if self._private or len(self._shared_groups) != 1:
+            return None
+        dt, names = self._shared_groups[0]
+        if dt != "float32":
+            return None
+        return names
+
+    def partial_from_shared(self, shared):
+        dt, _ = self._shared_groups[0]
+        return {"shared": {dt: dict(shared)}, "private": ()}
 
 
 def grouped_shared_map_chunk(rows: jax.Array, gmask: jax.Array,
@@ -459,6 +503,14 @@ class GroupedProgram(MapReduceProgram):
     def finalize(self, partial):
         out = jax.vmap(self._fused.finalize)(partial)
         return out[0] if self._single else out
+
+    def shared_fold_spec(self):
+        # the grouped partial is the fused partial with a leading group
+        # axis on every leaf — exactly what the kernel's [G, F] pool is
+        return self._fused.shared_fold_spec()
+
+    def partial_from_shared(self, shared):
+        return self._fused.partial_from_shared(shared)
 
 
 @dataclasses.dataclass(frozen=True)

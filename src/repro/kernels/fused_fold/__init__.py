@@ -1,0 +1,12 @@
+"""Fused Pallas fold kernel: one HBM pass per block for the grouped CSE
+shared-accumulator pool.  See ``kernel.py`` for the tiling story,
+``ops.py`` for the public op + cost/VMEM helpers, ``ref.py`` for the
+NumPy oracle."""
+
+from repro.kernels.fused_fold.ops import (   # noqa: F401
+    fused_fold,
+    kernel_flops,
+    kernel_hbm_bytes,
+    max_groups_for_vmem,
+)
+from repro.kernels.fused_fold.ref import fused_fold_numpy  # noqa: F401

@@ -1,0 +1,156 @@
+"""Public op: fused grouped power-sum fold over a block of rows.
+
+Handles arbitrary row shapes (flattens features), pads rows/features/groups
+to tile multiples (padded rows carry zero mask, padded groups receive no
+rows), dispatches to the Pallas kernel, and exposes the analytic cost and
+VMEM-budget helpers the engine's ``fold_path`` dispatch and the roofline
+probe consult.
+
+The op's contract is the CSE shared-accumulator pool of
+``repro.core.stats``: ``{name: array}`` with ``count`` of shape ``[G]`` and
+``s1..s4`` of shape ``[G, *feature_shape]``, all fp32 — exactly what
+``FusedProgram``/``GroupedProgram`` partials hold, so the engine can wrap a
+kernel result into a cacheable partial without reshuffling.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.chunk_model import VMEM_BYTES
+from repro.kernels.fused_fold.kernel import (
+    ACC_ORDER,
+    DEFAULT_BLOCK_FEATURES,
+    DEFAULT_BLOCK_ROWS,
+    fused_fold_pallas,
+)
+
+#: fraction of per-core VMEM the grouped accumulator pool may claim (the
+#: other half stays for double-buffered input tiles and the one-hot
+#: weights), mirroring the chunk model's "stats may only claim half" rule
+VMEM_FRACTION = 0.5
+
+
+def canonical_names(names: Tuple[str, ...]) -> Tuple[str, ...]:
+    """Validate and order accumulator names along ``ACC_ORDER``."""
+    bad = set(names) - set(ACC_ORDER)
+    if bad:
+        raise ValueError(f"unknown shared accumulators {sorted(bad)}; "
+                         f"supported: {ACC_ORDER}")
+    if not names:
+        raise ValueError("fused_fold needs at least one accumulator name")
+    return tuple(n for n in ACC_ORDER if n in set(names))
+
+
+def _pad_groups(num_groups: int) -> int:
+    """Groups padded to an fp32 sublane multiple (min tile is 8 rows)."""
+    return max(8, -(-int(num_groups) // 8) * 8)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "names", "block_rows", "block_features",
+                     "interpret"))
+def fused_fold(
+    rows: jax.Array,                 # [R, *feature_shape]
+    mask: Optional[jax.Array] = None,   # [R] bool/float; None = all valid
+    gids: Optional[jax.Array] = None,   # [R] int32; None = all group 0
+    num_groups: int = 1,
+    names: Tuple[str, ...] = ACC_ORDER,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_features: int = DEFAULT_BLOCK_FEATURES,
+    interpret: bool = True,          # CPU container: interpret by default
+) -> Dict[str, jax.Array]:
+    """-> ``{name: acc}``: count ``[G]``, s_k ``[G, *feature_shape]`` fp32.
+
+    One streaming pass over the block, whatever ``G`` or how many
+    accumulators were asked for.  Rows are cast to fp32 in VMEM (bf16/int32
+    payloads welcome); accumulation is fp32 throughout.
+    """
+    names = canonical_names(names)
+    G = max(1, int(num_groups))
+    R = rows.shape[0]
+    fshape = rows.shape[1:]
+    x = rows.reshape(R, -1)
+    F = x.shape[1]
+
+    m = (jnp.ones((R,), jnp.float32) if mask is None
+         else mask.astype(jnp.float32))
+    g = (jnp.zeros((R,), jnp.int32) if gids is None
+         else gids.astype(jnp.int32))
+
+    br = min(block_rows, max(8, R))
+    bf = min(block_features, max(128, F))
+    pr = -R % br
+    pf = -F % bf
+    if pr or pf:
+        x = jnp.pad(x, ((0, pr), (0, pf)))
+        m = jnp.pad(m, ((0, pr),))     # pad rows are masked off
+        g = jnp.pad(g, ((0, pr),))
+    Gp = _pad_groups(G)
+
+    outs = fused_fold_pallas(x, g, m, names, Gp, br, bf,
+                             interpret=interpret)
+    result: Dict[str, jax.Array] = {}
+    for n, o in zip(names, outs):
+        if n == "count":
+            result[n] = o[:G, 0]
+        else:
+            result[n] = o[:G, :F].reshape((G,) + fshape)
+    return result
+
+
+# ----------------------------------------------------------------------
+# analytic cost model (roofline probe + engine dispatch)
+# ----------------------------------------------------------------------
+
+def kernel_hbm_bytes(rows: int, features: int, itemsize: int,
+                     names: Tuple[str, ...], num_groups: int = 1) -> int:
+    """HBM bytes one kernel launch moves: the payload ONCE, the per-row
+    mask/gid sidecars, and the accumulator write-back.  This is the
+    one-pass contract the bench checks XLA's measured fold bytes against."""
+    names = canonical_names(names)
+    G = _pad_groups(max(1, num_groups))
+    out = sum(G * 4 if n == "count" else G * features * 4 for n in names)
+    return rows * features * itemsize + rows * (4 + 4) + out
+
+
+def kernel_flops(rows: int, features: int,
+                 names: Tuple[str, ...], num_groups: int = 1) -> int:
+    """FLOPs per launch: one [BR,G]×[BR,X] contraction per accumulator
+    (2·R·X·G each) plus the elementwise power raises and weight build."""
+    names = canonical_names(names)
+    G = _pad_groups(max(1, num_groups))
+    f = 0
+    for n in names:
+        f += 2 * rows * G * (1 if n == "count" else features)
+    n_pows = sum(1 for n in names if n != "count")
+    # x², x³, x⁴ elementwise products + mask/where + one-hot compare
+    f += rows * features * max(0, n_pows - 1)
+    f += rows * features + rows * G
+    return f
+
+
+def max_groups_for_vmem(
+    names: Tuple[str, ...] = ACC_ORDER,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_features: int = DEFAULT_BLOCK_FEATURES,
+    vmem_bytes: float = VMEM_BYTES * VMEM_FRACTION,
+) -> int:
+    """Largest G whose fp32 accumulator pool (plus the input tile and the
+    one-hot weights) fits the kernel's VMEM budget — the engine falls back
+    to the XLA fold above this.  Derived from the chunk model's per-core
+    VMEM constant, halved like its HBM "stats may only claim half" rule."""
+    names = canonical_names(names)
+    n_wide = sum(1 for n in names if n != "count")
+    fixed = block_rows * block_features * 4        # input tile, fp32 worst
+    per_group = (n_wide * block_features + 1) * 4  # accumulator rows
+    per_group += block_rows * 4                    # one-hot weight column
+    budget = vmem_bytes - fixed
+    if budget <= 0:
+        return 0
+    return max(0, int(budget // per_group))

@@ -1,9 +1,14 @@
 """Public op: masked streaming stats over a chunk of rows.
 
-Handles arbitrary row shapes (flattens features), pads to tile multiples
-(mask-padded rows contribute zero), dispatches to the Pallas kernel (or the
-jnp reference when ``impl='ref'``), and exposes a MapReduce program so the
-engine's map phase can run on the kernel.
+Handles arbitrary row shapes (flattens features), dispatches to the fused
+fold Pallas kernel (or the jnp reference when ``impl='ref'``), and exposes
+a MapReduce program so the engine's map phase can run on the kernel.
+
+Since the fused fold kernel landed (``repro.kernels.fused_fold``), the
+pallas path here is a facade: ``streaming_stats`` is exactly the
+``(count, s1, s2)`` subset of the fused kernel's grouped accumulator pool
+at ``G=1``.  The dedicated streaming-stats kernel is gone — one tiling,
+one accumulation discipline, one equivalence suite for every power sum.
 """
 
 from __future__ import annotations
@@ -16,11 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.mapreduce import MapReduceProgram
-from repro.kernels.streaming_stats.kernel import (
-    DEFAULT_BLOCK_FEATURES,
-    DEFAULT_BLOCK_ROWS,
-    streaming_stats_pallas,
-)
+from repro.kernels.fused_fold.ops import fused_fold
 from repro.kernels.streaming_stats.ref import streaming_stats_ref
 
 
@@ -32,25 +33,14 @@ def streaming_stats(
     interpret: bool = True,   # CPU container: interpret by default
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """-> (sum, sumsq, count); sum/sumsq have the row's feature shape."""
-    R = rows.shape[0]
-    fshape = rows.shape[1:]
-    x = rows.reshape(R, -1)
-    F = x.shape[1]
     if impl == "ref":
-        s, sq, c = streaming_stats_ref(x, mask)
+        R = rows.shape[0]
+        fshape = rows.shape[1:]
+        s, sq, c = streaming_stats_ref(rows.reshape(R, -1), mask)
         return s.reshape(fshape), sq.reshape(fshape), c
-
-    br = min(DEFAULT_BLOCK_ROWS, max(8, R))
-    bf = min(DEFAULT_BLOCK_FEATURES, max(128, F))
-    pr = -R % br
-    pf = -F % bf
-    if pr or pf:
-        x = jnp.pad(x, ((0, pr), (0, pf)))
-        mask = jnp.pad(mask.astype(jnp.float32), ((0, pr),))
-    s, sq, c = streaming_stats_pallas(x, mask, br, bf, interpret=interpret)
-    if pf:
-        s, sq = s[:F], sq[:F]
-    return s.reshape(fshape), sq.reshape(fshape), c
+    acc = fused_fold(rows, mask, names=("count", "s1", "s2"),
+                     interpret=interpret)
+    return acc["s1"][0], acc["s2"][0], acc["count"][0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,11 +99,12 @@ def kernel_map_program(program: MapReduceProgram, impl: str = "pallas",
 
     ``GridSession.run(..., impl="pallas")`` routes through here: the
     returned program folds each chunk with :func:`streaming_stats` (one
-    HBM→VMEM streaming pass producing Σx/Σx²/count) and finalizes to the
-    same result contract as the jnp reference program.  Kernel programs
-    accumulate fp32 (the kernel's VMEM accumulator dtype).  Programs whose
-    statistic is not a projection of (Σx, Σx², n) have no kernel twin —
-    ask for them with the default reference impl.
+    HBM→VMEM streaming pass producing Σx/Σx²/count on the fused fold
+    kernel) and finalizes to the same result contract as the jnp
+    reference program.  Kernel programs accumulate fp32 (the kernel's
+    VMEM accumulator dtype).  Programs whose statistic is not a
+    projection of (Σx, Σx², n) have no kernel twin — ask for them with
+    the default reference impl.
     """
     from repro.core.stats import MeanProgram, VarianceProgram
 

@@ -402,3 +402,24 @@ class TestPallasMapPhase:
             kernel_map_program(HistogramProgram())
         with pytest.raises(ValueError):
             kernel_map_program(MeanProgram(), impl="cuda")
+
+    def test_grouped_fold_ref_vs_pallas_equivalence(self):
+        """The fused fold kernel (session-level ``fold_impl="pallas"``)
+        extends the ref-vs-pallas equivalence to GROUPED folds — the
+        map-phase ``impl="pallas"`` twin never covered those."""
+        def grouped(s):
+            return (s.scan().select("img:data").group_by("idx:sex")
+                    .map(MeanProgram()).map(VarianceProgram())
+                    .map(MomentsProgram()).reduce().collect())
+        ref, _ = grouped(GridSession(make_table(per=10, seed=2),
+                                     default_eta=4, fold_impl="xla"))
+        s = GridSession(make_table(per=10, seed=2), default_eta=4,
+                        fold_impl="pallas", fold_interpret=True)
+        pal, _ = grouped(s)
+        assert s.engine.fold_path_counts["pallas"] > 0
+        assert list(pal.keys) == list(ref.keys)
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a, np.float64), np.asarray(b, np.float64),
+                rtol=1e-4, atol=1e-3),
+            list(pal.values), list(ref.values))
