@@ -9,7 +9,7 @@ summary EXPERIMENTS.md quotes, and writes one JSON artifact per bench
 
 ``--smoke`` runs every artifact-emitting bench except the table-scheme
 sweep and the roofline (balancer, chunk model, kernels, query pruning,
-blockstore, fold engine, group_by) — CI uploads the JSON files from each
+blockstore, fold engine, group_by, frontend) — CI uploads the JSON files from each
 run and gates headline metrics against ``benchmarks/perf_baselines.json``
 via ``benchmarks/check_regression.py``.
 """
@@ -134,6 +134,20 @@ def run_group_by() -> None:
                    f"merge_tree_x={b['merge_tree_speedup']:.2f}"))
 
 
+def run_frontend(smoke: bool = True) -> None:
+    from benchmarks import bench_frontend
+
+    _run_bench(
+        "frontend",
+        "[PR 7] GridFrontend: concurrent serving, cross-query coalescing",
+        lambda: bench_frontend.run(smoke=smoke),
+        lambda b: (f"repeat_x={b['coalesce_speedup_repeat']:.1f};"
+                   f"grouped_x={b['coalesce_speedup_grouped']:.1f};"
+                   f"mutation_x={b['coalesce_speedup_mutation']:.1f};"
+                   f"qps={b['repeat_coalesced_qps']:.0f};"
+                   f"p99_ms={b['repeat_coalesced_p99_ms']:.2f}"))
+
+
 def run_kernels() -> None:
     from benchmarks import bench_kernels
 
@@ -172,6 +186,7 @@ def main() -> None:
         run_blockstore()
         run_fold_engine()
         run_group_by()
+        run_frontend(smoke=True)
         print("\nsmoke benchmarks complete")
         return
 
@@ -184,6 +199,7 @@ def main() -> None:
     run_blockstore()
     run_fold_engine()
     run_group_by()
+    run_frontend(smoke=False)
     run_kernels()
 
     print("\n--- Roofline (single-pod dry-run artifacts) ---")

@@ -22,6 +22,9 @@ The subpackage mirrors HadoopBase-MIP's backend (Bao et al., 2017):
 - :mod:`repro.core.grid`        — :class:`GridSession`, the five-verb facade
   (upload / retrieve / remove / rebalance / run) with mutation epochs,
   incremental placement, and a compiled-plan cache.
+- :mod:`repro.core.frontend`    — :class:`GridFrontend`, concurrent query
+  serving: single-flight coalescing, batched device ticks, epoch-isolated
+  mutation, admission control.
 """
 
 from repro.core.table import TensorTable, ColumnFamily, ColumnSpec
@@ -62,9 +65,17 @@ from repro.core.query import indexed_query, naive_query, QueryStats
 from repro.core.plan import GridQuery, prefix_range
 from repro.core.blockstore import BlockStore, DeviceBlock, LRUCache
 from repro.core.grid import GridSession, RunReport, SessionMetrics
+from repro.core.frontend import (
+    FrontendOverloadedError,
+    FrontendStats,
+    GridFrontend,
+    QueryTimeoutError,
+)
 
 __all__ = [
     "GridSession", "RunReport", "SessionMetrics",
+    "GridFrontend", "FrontendStats",
+    "FrontendOverloadedError", "QueryTimeoutError",
     "TensorTable", "ColumnFamily", "ColumnSpec",
     "Region", "RegionSet", "ConstantSizeSplitPolicy", "HierarchicalSplitPolicy",
     "NodeSpec", "assign_new_regions", "balanced_allocation",

@@ -38,13 +38,23 @@ choosing its owner device, and *folding* partials stay with
 compute.  Capacity is bounded by :class:`LRUCache` instances; an evicted
 block is simply re-gathered — and an evicted partial re-folded — on next
 use (regression tests assert re-materialization is loss-free).
+
+Since the :class:`~repro.core.frontend.GridFrontend` serves queries from a
+thread pool, the store is safe under **concurrent readers with serialized
+mutators**: every cache is a locked :class:`LRUCache` whose iterating
+helpers return point-in-time lists, compound operations (fetch, partial
+index maintenance, touch/drop) run under one store-level re-entrant lock,
+and the cumulative counters are an :class:`AtomicStats` whose ``inc`` is
+lock-protected and whose ``snapshot()`` gives a consistent point-in-time
+copy for benches and tests.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
-from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -52,6 +62,44 @@ from repro.core.regions import Region
 
 #: (region signature, family, qualifier, version) — the content address.
 BlockKey = Tuple[Tuple[int, bytes, Optional[bytes]], str, str, int]
+
+
+class AtomicStats:
+    """Lock-protected counter mixin for the cumulative stats dataclasses.
+
+    Bare ``+=`` on a shared dataclass field is a read-modify-write race
+    under concurrent readers (two threads both load N, both store N+1, one
+    update is lost); every writer goes through :meth:`inc` instead, and
+    readers that need a *consistent* multi-field view (benches summing
+    hits+misses, tests asserting exact fold counts) take :meth:`snapshot`.
+    Direct attribute reads stay valid for single-counter checks.
+    """
+
+    def __post_init__(self):
+        object.__setattr__(self, "_lock", threading.Lock())
+
+    def inc(self, **deltas: int) -> None:
+        """Atomically add each ``field=delta`` (a single lock for the whole
+        batch, so multi-counter updates can't be observed half-applied)."""
+        with self._lock:
+            for name, d in deltas.items():
+                setattr(self, name, getattr(self, name) + d)
+
+    def imax(self, **values: int) -> None:
+        """Atomically raise each ``field`` to ``max(current, value)`` —
+        the monotone update behind high-water marks (peak queue depth)."""
+        with self._lock:
+            for name, v in values.items():
+                if v > getattr(self, name):
+                    setattr(self, name, v)
+
+    def snapshot(self) -> "AtomicStats":
+        """A point-in-time copy (its own lock, detached from the live
+        counters) — the consistent read side of :meth:`inc`."""
+        with self._lock:
+            fields = {f.name: getattr(self, f.name)
+                      for f in dataclasses.fields(self)}
+        return type(self)(**fields)
 
 
 class LRUCache:
@@ -62,6 +110,12 @@ class LRUCache:
     stay memory-bounded.  ``get`` refreshes recency; ``put`` evicts the
     coldest entries beyond ``cap`` and reports them to ``on_evict`` (used to
     count evictions and, for blocks, to observe re-materialization in tests).
+
+    Thread-safe: every operation holds an internal re-entrant lock (``get``
+    mutates recency order, so even reads are writes here), and the iterating
+    helpers ``keys``/``values``/``items`` return **point-in-time lists** — a
+    reader walking entries while another thread inserts must never trip
+    ``RuntimeError: dict changed size during iteration``.
     """
 
     def __init__(self, cap: int,
@@ -71,47 +125,58 @@ class LRUCache:
         self.cap = int(cap)
         self._d: "OrderedDict[Any, Any]" = OrderedDict()
         self._on_evict = on_evict
+        self._lock = threading.RLock()
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
     def __contains__(self, key) -> bool:
-        return key in self._d
+        with self._lock:
+            return key in self._d
 
     def get(self, key, default=None):
-        if key not in self._d:
-            return default
-        self._d.move_to_end(key)
-        return self._d[key]
+        with self._lock:
+            if key not in self._d:
+                return default
+            self._d.move_to_end(key)
+            return self._d[key]
 
     def peek(self, key, default=None):
         """Read without refreshing recency (diagnostics / identity tests)."""
-        return self._d.get(key, default)
+        with self._lock:
+            return self._d.get(key, default)
 
     def put(self, key, value) -> None:
-        self._d[key] = value
-        self._d.move_to_end(key)
-        while len(self._d) > self.cap:
-            k, v = self._d.popitem(last=False)
-            self.evictions += 1
-            if self._on_evict is not None:
-                self._on_evict(k, v)
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.cap:
+                k, v = self._d.popitem(last=False)
+                self.evictions += 1
+                if self._on_evict is not None:
+                    self._on_evict(k, v)
 
     def pop(self, key, default=None):
-        return self._d.pop(key, default)
+        with self._lock:
+            return self._d.pop(key, default)
 
     def clear(self) -> None:
-        self._d.clear()
+        with self._lock:
+            self._d.clear()
 
-    def keys(self):
-        return self._d.keys()
+    def keys(self) -> List[Any]:
+        with self._lock:
+            return list(self._d.keys())
 
-    def values(self):
-        return self._d.values()
+    def values(self) -> List[Any]:
+        with self._lock:
+            return list(self._d.values())
 
-    def items(self):
-        return self._d.items()
+    def items(self) -> List[Tuple[Any, Any]]:
+        with self._lock:
+            return list(self._d.items())
 
 
 @dataclasses.dataclass
@@ -145,10 +210,14 @@ class DeviceBlock:
 
 
 @dataclasses.dataclass
-class BlockStoreStats:
+class BlockStoreStats(AtomicStats):
     """Cumulative store counters (session lifetime).  Evictions are not
     duplicated here — the LRU already counts them; read
-    :attr:`BlockStore.evictions`."""
+    :attr:`BlockStore.evictions`.
+
+    Updates go through :meth:`AtomicStats.inc` (concurrent queries bump
+    these from many threads); consistent multi-counter reads through
+    :meth:`AtomicStats.snapshot`."""
 
     gathers: int = 0        # host payloads read from the table (store misses)
     transfers: int = 0      # host→device block transfers (device_put calls)
@@ -182,6 +251,11 @@ class BlockStore:
 
     def __init__(self, cap: int = 256, partial_cap: int = 1024):
         self.stats = BlockStoreStats()
+        # one re-entrant lock serializes every compound cache operation
+        # (fetch's get-then-put, the partial index maintenance, touch/drop
+        # sweeps); individual LRUCache ops are locked on their own, but the
+        # invariants here span several of them
+        self._lock = threading.RLock()
         self._blocks: LRUCache = LRUCache(cap)
         # per-block fold partials, keyed (BlockKey, program, mask sig, eta):
         # the compute-side cache that lets a repeat query fold zero rows.
@@ -221,27 +295,30 @@ class BlockStore:
         Superseded cache entries are dropped eagerly (they can never hit
         again); block objects stay alive wherever consumers still hold them.
         """
-        touched = {int(rid) for rid in rids}
-        for rid in touched:
-            self._versions[rid] = int(epoch)
-            self.stats.touches += 1
-        doomed = [k for k in self._blocks.keys()
-                  if k[0][0] in touched and k[3] != self._versions[k[0][0]]]
-        for k in doomed:
-            self._blocks.pop(k)
-        # superseded fold partials are as dead as their blocks: the partial
-        # key embeds the block version, so they can never hit again
-        doomed_p = [k for k in self._partials.keys()
-                    if k[0][0][0] in touched
-                    and k[0][3] != self._versions[k[0][0][0]]]
-        for k in doomed_p:
-            self._pop_partial(k)
-        # superseded gid blocks die with their key-column block lineage
-        doomed_g = [k for k in self._gids.keys()
-                    if k[0][0][0] in touched
-                    and k[0][3] != self._versions[k[0][0][0]]]
-        for k in doomed_g:
-            self._gids.pop(k)
+        with self._lock:
+            touched = {int(rid) for rid in rids}
+            for rid in touched:
+                self._versions[rid] = int(epoch)
+            self.stats.inc(touches=len(touched))
+            doomed = [k for k in self._blocks.keys()
+                      if k[0][0] in touched
+                      and k[3] != self._versions[k[0][0]]]
+            for k in doomed:
+                self._blocks.pop(k)
+            # superseded fold partials are as dead as their blocks: the
+            # partial key embeds the block version, so they can never hit
+            # again
+            doomed_p = [k for k in self._partials.keys()
+                        if k[0][0][0] in touched
+                        and k[0][3] != self._versions[k[0][0][0]]]
+            for k in doomed_p:
+                self._pop_partial(k)
+            # superseded gid blocks die with their key-column block lineage
+            doomed_g = [k for k in self._gids.keys()
+                        if k[0][0][0] in touched
+                        and k[0][3] != self._versions[k[0][0][0]]]
+            for k in doomed_g:
+                self._gids.pop(k)
 
     def drop_regions(self, rids: Iterable[int]) -> None:
         """Forget regions that no longer exist (split parents): their rids
@@ -250,15 +327,18 @@ class BlockStore:
         doomed_rids = {int(rid) for rid in rids}
         if not doomed_rids:
             return
-        for k in [k for k in self._blocks.keys() if k[0][0] in doomed_rids]:
-            self._blocks.pop(k)
-        for k in [k for k in self._partials.keys()
-                  if k[0][0][0] in doomed_rids]:
-            self._pop_partial(k)
-        for k in [k for k in self._gids.keys() if k[0][0][0] in doomed_rids]:
-            self._gids.pop(k)
-        for rid in doomed_rids:
-            self._versions.pop(rid, None)
+        with self._lock:
+            for k in [k for k in self._blocks.keys()
+                      if k[0][0] in doomed_rids]:
+                self._blocks.pop(k)
+            for k in [k for k in self._partials.keys()
+                      if k[0][0][0] in doomed_rids]:
+                self._pop_partial(k)
+            for k in [k for k in self._gids.keys()
+                      if k[0][0][0] in doomed_rids]:
+                self._gids.pop(k)
+            for rid in doomed_rids:
+                self._versions.pop(rid, None)
 
     def lineage(self, regions: Iterable[Region]) -> Tuple[Tuple[int, int], ...]:
         """``((rid, version), ...)`` — the epoch-lineage signature of a
@@ -298,46 +378,47 @@ class BlockStore:
         the table was re-read.  ``not reused`` implies a transfer, so every
         fetch is exactly one of reused / transferred.
         """
-        key = self.key_of(region, family, qualifier)
-        blk = self._blocks.get(key)
-        gathered = False
-        if blk is None:
-            host = np.ascontiguousarray(gather_host())
-            host.flags.writeable = False
-            blk = DeviceBlock(
-                rid=region.rid, family=family, qualifier=qualifier,
-                version=key[3], rows=int(host.shape[0]),
-                nbytes=int(host.nbytes), host=host,
-            )
-            gathered = True
-            self.stats.gathers += 1
-        if to_device is None:
-            # host-only fallback: every layout build re-ships the whole
-            # assembled array, so no block is ever device-"reused" — a
-            # content hit only avoids the table re-read.  Classifying each
-            # fetch as transferred keeps payload_bytes_transferred honest
-            # about what actually crosses host→device on this path.
-            if gathered:
-                self._blocks.put(key, blk)
-            else:
-                self.stats.hits += 1
-            self.stats.transfers += 1
-            return blk, False, gathered
+        with self._lock:
+            key = self.key_of(region, family, qualifier)
+            blk = self._blocks.get(key)
+            gathered = False
+            if blk is None:
+                host = np.ascontiguousarray(gather_host())
+                host.flags.writeable = False
+                blk = DeviceBlock(
+                    rid=region.rid, family=family, qualifier=qualifier,
+                    version=key[3], rows=int(host.shape[0]),
+                    nbytes=int(host.nbytes), host=host,
+                )
+                gathered = True
+                self.stats.inc(gathers=1)
+            if to_device is None:
+                # host-only fallback: every layout build re-ships the whole
+                # assembled array, so no block is ever device-"reused" — a
+                # content hit only avoids the table re-read.  Classifying
+                # each fetch as transferred keeps payload_bytes_transferred
+                # honest about what actually crosses host→device here.
+                if gathered:
+                    self._blocks.put(key, blk)
+                else:
+                    self.stats.inc(hits=1)
+                self.stats.inc(transfers=1)
+                return blk, False, gathered
 
-        if blk.device is not None and blk.device_index == owner_index:
-            self.stats.hits += 1
-            return blk, True, False
-        # fresh gather, or a rebalance moved the region: (re-)commit the
-        # host copy to its current owner.  COW: a re-homed cached block is
-        # replaced, not mutated — older consumers keep the old object.
-        if blk.device is not None:
-            blk = dataclasses.replace(blk)
-        blk.device = to_device(blk.host, owner_index)
-        blk.device_index = owner_index
-        blk.device_nbytes = int(getattr(blk.device, "nbytes", blk.nbytes))
-        self.stats.transfers += 1
-        self._blocks.put(key, blk)
-        return blk, False, gathered
+            if blk.device is not None and blk.device_index == owner_index:
+                self.stats.inc(hits=1)
+                return blk, True, False
+            # fresh gather, or a rebalance moved the region: (re-)commit the
+            # host copy to its current owner.  COW: a re-homed cached block
+            # is replaced, not mutated — older consumers keep the old one.
+            if blk.device is not None:
+                blk = dataclasses.replace(blk)
+            blk.device = to_device(blk.host, owner_index)
+            blk.device_index = owner_index
+            blk.device_nbytes = int(getattr(blk.device, "nbytes", blk.nbytes))
+            self.stats.inc(transfers=1)
+            self._blocks.put(key, blk)
+            return blk, False, gathered
 
     def fetch_host(
         self,
@@ -351,22 +432,22 @@ class BlockStore:
         for the fold path commits the same block to its owner device, so
         retrieve-heavy workloads and folds share one gather per content.
         """
-        key = self.key_of(region, family, qualifier)
-        blk = self._blocks.get(key)
-        if blk is not None:
-            self.stats.hits += 1
-            return blk, False
-        host = np.ascontiguousarray(gather_host())
-        host.flags.writeable = False
-        blk = DeviceBlock(
-            rid=region.rid, family=family, qualifier=qualifier,
-            version=key[3], rows=int(host.shape[0]),
-            nbytes=int(host.nbytes), host=host,
-        )
-        self.stats.gathers += 1
-        self.stats.host_reads += 1
-        self._blocks.put(key, blk)
-        return blk, True
+        with self._lock:
+            key = self.key_of(region, family, qualifier)
+            blk = self._blocks.get(key)
+            if blk is not None:
+                self.stats.inc(hits=1)
+                return blk, False
+            host = np.ascontiguousarray(gather_host())
+            host.flags.writeable = False
+            blk = DeviceBlock(
+                rid=region.rid, family=family, qualifier=qualifier,
+                version=key[3], rows=int(host.shape[0]),
+                nbytes=int(host.nbytes), host=host,
+            )
+            self.stats.inc(gathers=1, host_reads=1)
+            self._blocks.put(key, blk)
+            return blk, True
 
     # ------------------------------------------------------------------
     # fold partials (the compute-side cache of the block-granular engine)
@@ -402,29 +483,32 @@ class BlockStore:
         return key[0][0][0], key[0][3]
 
     def _unindex_partial(self, key: Tuple) -> None:
-        k = self._partial_rid_version(key)
-        n = self._partial_index.get(k, 0) - 1
-        if n <= 0:
-            self._partial_index.pop(k, None)
-        else:
-            self._partial_index[k] = n
+        with self._lock:
+            k = self._partial_rid_version(key)
+            n = self._partial_index.get(k, 0) - 1
+            if n <= 0:
+                self._partial_index.pop(k, None)
+            else:
+                self._partial_index[k] = n
 
     def _pop_partial(self, key: Tuple) -> None:
-        if self._partials.pop(key) is not None:
-            self._unindex_partial(key)
+        with self._lock:
+            if self._partials.pop(key) is not None:
+                self._unindex_partial(key)
 
     def get_partial(self, key: Tuple):
         p = self._partials.get(key)
         if p is not None:
-            self.stats.partial_hits += 1
+            self.stats.inc(partial_hits=1)
         return p
 
     def put_partial(self, key: Tuple, value) -> None:
-        self.stats.folds += 1
-        if key not in self._partials:
-            k = self._partial_rid_version(key)
-            self._partial_index[k] = self._partial_index.get(k, 0) + 1
-        self._partials.put(key, value)
+        with self._lock:
+            self.stats.inc(folds=1)
+            if key not in self._partials:
+                k = self._partial_rid_version(key)
+                self._partial_index[k] = self._partial_index.get(k, 0) + 1
+            self._partials.put(key, value)
 
     def has_partials(self, rid: int) -> bool:
         """Any cached partial for the region's current content (a reuse
@@ -449,12 +533,12 @@ class BlockStore:
         g = self._gids.get(self.gid_key(region, family, qualifier,
                                         group_sig))
         if g is not None:
-            self.stats.gid_hits += 1
+            self.stats.inc(gid_hits=1)
         return g
 
     def put_gids(self, region: Region, family: str, qualifier: str,
                  group_sig: str, gids: np.ndarray) -> None:
-        self.stats.gid_builds += 1
+        self.stats.inc(gid_builds=1)
         g = np.ascontiguousarray(gids, dtype=np.int32)
         g.flags.writeable = False
         self._gids.put(self.gid_key(region, family, qualifier, group_sig), g)
@@ -464,17 +548,19 @@ class BlockStore:
         return len(self._gids)
 
     def clear_partials(self) -> None:
-        self._partials.clear()
-        self._partial_index.clear()
-        self._gids.clear()
+        with self._lock:
+            self._partials.clear()
+            self._partial_index.clear()
+            self._gids.clear()
 
     def clear(self) -> None:
         """Drop every cached block AND partial (versions survive, so
         content addressing stays monotonic); consumers re-gather and
         re-fold losslessly on next use.  Benchmarks use this to time the
         cold-data regime without rebuilding sessions."""
-        self._blocks.clear()
-        self.clear_partials()
+        with self._lock:
+            self._blocks.clear()
+            self.clear_partials()
 
     @property
     def partial_count(self) -> int:

@@ -80,7 +80,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from typing import (
-    Any, Dict, FrozenSet, List, Mapping, Optional, Sequence, Set, Tuple,
+    Any, Callable, Dict, FrozenSet, List, Mapping, Optional, Sequence, Set,
+    Tuple,
 )
 
 import numpy as np
@@ -93,7 +94,9 @@ from repro.core.balancer import (
     powers_from_observations,
     rebalance as rebalance_allocation,
 )
-from repro.core.blockstore import BlockStore, DeviceBlock, LRUCache
+from repro.core.blockstore import (
+    AtomicStats, BlockStore, DeviceBlock, LRUCache,
+)
 from repro.core.mapreduce import MapReduceEngine, MapReduceProgram, MapReduceStats
 from repro.core.placement import Placement
 from repro.core.plan import GridQuery, prefix_range
@@ -112,8 +115,13 @@ from repro.utils import make_mesh
 
 
 @dataclasses.dataclass
-class SessionMetrics:
-    """Observable counters for the session's incremental machinery."""
+class SessionMetrics(AtomicStats):
+    """Observable counters for the session's incremental machinery.
+
+    Updated through :meth:`~repro.core.blockstore.AtomicStats.inc` —
+    concurrent frontend queries bump these from many threads, and a bare
+    ``+=`` on a shared field loses updates.  Consistent multi-counter
+    reads go through ``snapshot()``."""
 
     uploads: int = 0
     removes: int = 0
@@ -376,6 +384,15 @@ class GridSession:
             n.node_id: [] for n in nodes
         }
         self._scheduler: Optional[GridScheduler] = None
+        #: optional single-flight hook for cross-query partial coalescing
+        #: (installed by :class:`repro.core.frontend.GridFrontend`).  Called
+        #: as ``fold_gate(pkey, fn) -> (fn_result, coalesced)`` on every
+        #: partial-cache miss: a leader runs ``fn`` (fetch + fold +
+        #: put_partial) and followers blocked on the same ``pkey`` receive
+        #: the leader's result with ``coalesced=True``, which this session
+        #: accounts as a partial reuse rather than a second fold.
+        self.fold_gate: Optional[Callable[[Tuple, Callable[[], Tuple]],
+                                          Tuple[Tuple, bool]]] = None
 
     # ------------------------------------------------------------------
     # epoch / dirty tracking
@@ -389,8 +406,7 @@ class GridSession:
                        touch_blocks: bool = True,
                        dropped_rids: FrozenSet[int] = frozenset()) -> None:
         self._epoch += 1
-        self.metrics.epochs += 1
-        self.metrics.regions_dirtied += len(dirty_rids)
+        self.metrics.inc(epochs=1, regions_dirtied=len(dirty_rids))
         if touch_blocks:
             # copy-on-write: only the touched regions' blocks and partials
             # version-bump; every other block, partial, and cached result
@@ -442,7 +458,7 @@ class GridSession:
         else:
             written_keys = keys
         written = self.table.upload(rowkeys, data, on_duplicate=on_duplicate)
-        self.metrics.uploads += 1
+        self.metrics.inc(uploads=1)
         if not written:
             self.table.split_log.clear()
             return 0
@@ -488,7 +504,7 @@ class GridSession:
                   self.table.select_keys(rowkey, start, stop, skip)]
         removed = self.table.delete(rowkey=rowkey, start=start, stop=stop,
                                     skip=skip)
-        self.metrics.removes += 1
+        self.metrics.inc(removes=1)
         if removed:
             self._advance_epoch(self.table.regions.regions_containing(doomed))
         return removed
@@ -563,7 +579,7 @@ class GridSession:
         old = dict(self.placement.alloc)
         new_alloc, moved = rebalance_allocation(
             old, self.table.region_bytes(), self.placement.nodes, tolerance)
-        self.metrics.rebalances += 1
+        self.metrics.inc(rebalances=1)
         if moved:
             self.placement.alloc.clear()
             self.placement.alloc.update(new_alloc)
@@ -674,7 +690,7 @@ class GridSession:
     ) -> Tuple[Any, RunReport]:
         """Compile + execute a :class:`GridQuery` with all three pushdowns."""
         eta = int(eta or self.default_eta)
-        self.metrics.scans += 1
+        self.metrics.inc(scans=1)
         if not plan.programs:
             if plan.group_key is not None:
                 raise ValueError(
@@ -686,7 +702,7 @@ class GridSession:
             program = plan.programs[0]
         else:
             program = FusedProgram(plan.programs)
-            self.metrics.programs_fused += len(plan.programs)
+            self.metrics.inc(programs_fused=len(plan.programs))
         return self._run_fold(plan, program, eta)
 
     @staticmethod
@@ -794,11 +810,12 @@ class GridSession:
             # (regions, row slices, owners, versions all mutate only
             # through _advance_epoch), so the repeat-query hot path skips
             # the per-region bisects entirely
-            if self._full_work is None or self._full_work[0] != self._epoch:
-                self._full_work = (
-                    self._epoch,
-                    self._plan_work(None, tuple(self.table.regions.regions)))
-            work = self._full_work[1]
+            fw = self._full_work
+            if fw is None or fw[0] != self._epoch:
+                fw = (self._epoch,
+                      self._plan_work(None, tuple(self.table.regions.regions)))
+                self._full_work = fw
+            work = fw[1]
             n = self.table.num_rows
             qstats = QueryStats(
                 rows_scanned=n, index_bytes_scanned=0,
@@ -854,9 +871,9 @@ class GridSession:
 
         hit = all(o.hit for o in outcomes)
         if hit:
-            self.metrics.plan_hits += 1
+            self.metrics.inc(plan_hits=1)
         else:
-            self.metrics.plan_misses += 1
+            self.metrics.inc(plan_misses=1)
         qstats = dataclasses.replace(
             acct.apply(qstats),
             gather_path=_combine_paths(o.gather_path for o in outcomes),
@@ -902,7 +919,7 @@ class GridSession:
         entry = self._results.get(result_key)
         if entry is not None:
             entry.last_used = self._epoch
-            self.metrics.partials_reused += entry.partials_total
+            self.metrics.inc(partials_reused=entry.partials_total)
             # zero-work execution: nothing was read, folded, or shuffled
             return _ColumnOutcome(
                 result=entry.result, hit=True,
@@ -980,10 +997,8 @@ class GridSession:
             program, jax.device_put(host, sh), jax.device_put(valid, sh),
             eta)
         sel = sum(rows_per_dev)
-        self.metrics.compact_scans += 1
-        self.metrics.pushdown_rows_gathered += sel
-        self.metrics.payload_gathers += 1
-        self.metrics.rows_folded += sel
+        self.metrics.inc(compact_scans=1, pushdown_rows_gathered=sel,
+                         payload_gathers=1, rows_folded=sel)
         self._results.put(result_key, _ResultEntry(
             result=result, partials_total=0, blocks_total=0,
             region_ids=frozenset(w.region.rid for w in work),
@@ -1042,46 +1057,31 @@ class GridSession:
                 acct.total += 1
                 acct.reused += 1
             else:
-                blk, reused, gathered = self._fetch_block(
-                    w.region, family, qualifier, owner=w.owner)
-                acct.add(blk, reused, gathered)
-                src = blk.device if blk.device is not None else blk.host
-                bmask = None if w.mask_sig == "full" else mask[w.rows]
-                gid_arr = None
-                if group is not None:
-                    # Densified gid blocks depend only on (region lineage,
-                    # mapping), not on the program — cache them so
-                    # dirty-region re-folds across plans skip the
-                    # factorize pass.
-                    gid_arr = self.blocks.get_gids(
-                        w.region, group.family, group.qualifier, group.sig)
-                    if gid_arr is None:
-                        key_col = self.table.column(group.family,
-                                                    group.qualifier)
-                        gid_arr = group.gids_for(key_col[w.rows])
-                        self.blocks.put_gids(
-                            w.region, group.family, group.qualifier,
-                            group.sig, gid_arr)
-                src_rows = int(src.shape[0])
-                if src_rows != blk.rows:
-                    # committed pre-padded to the fold bucket: extend the
-                    # (tiny) mask/gid arrays host-side to match
-                    m = np.zeros(src_rows, bool)
-                    m[:blk.rows] = True if bmask is None else bmask
-                    bmask = m
-                    if gid_arr is not None:
-                        g2 = np.zeros(src_rows, np.int32)
-                        g2[:blk.rows] = gid_arr
-                        gid_arr = g2
-                partial = self.engine.fold_block(
-                    program, src, bmask, eta, spec.shape, spec.dtype,
-                    gids=gid_arr, num_groups=n_groups)
-                self.blocks.put_partial(pkey, partial)
-                rows_folded += blk.rows
-                local_rows += w.selected
-                c = -(-blk.rows // eta)
-                chunks += c
-                rounds[w.owner] = rounds.get(w.owner, 0) + c
+                gate = self.fold_gate
+                if gate is None:
+                    folded, coalesced = self._fold_cold(
+                        program, eta, mask, w, family, qualifier, spec,
+                        group, n_groups, pkey), False
+                else:
+                    folded, coalesced = gate(pkey, lambda: self._fold_cold(
+                        program, eta, mask, w, family, qualifier, spec,
+                        group, n_groups, pkey))
+                partial = folded[0]
+                if coalesced:
+                    # a concurrent query's leader fold produced this
+                    # partial while we waited — account it as a reuse, not
+                    # a second fetch + fold
+                    p_reused += 1
+                    acct.total += 1
+                    acct.reused += 1
+                else:
+                    _, blk, reused, gathered = folded
+                    acct.add(blk, reused, gathered)
+                    rows_folded += blk.rows
+                    local_rows += w.selected
+                    c = -(-blk.rows // eta)
+                    chunks += c
+                    rounds[w.owner] = rounds.get(w.owner, 0) + c
             partials.append(partial)
             owners.append(w.owner)
         result = self.engine.merge_finalize(program, partials,
@@ -1092,14 +1092,12 @@ class GridSession:
             region_ids=frozenset(w.region.rid for w in work),
             last_used=self._epoch))
 
-        self.metrics.partials_folded += p_total - p_reused
-        self.metrics.partials_reused += p_reused
-        self.metrics.rows_folded += rows_folded
-        self.metrics.rows_gathered += acct.rows_gathered
-        if mask is not None:
-            self.metrics.pushdown_rows_gathered += acct.rows_gathered
-        if acct.gathered:
-            self.metrics.payload_gathers += 1
+        self.metrics.inc(
+            partials_folded=p_total - p_reused, partials_reused=p_reused,
+            rows_folded=rows_folded, rows_gathered=acct.rows_gathered,
+            pushdown_rows_gathered=(acct.rows_gathered
+                                    if mask is not None else 0),
+            payload_gathers=1 if acct.gathered else 0)
 
         pb = self.engine.partial_nbytes(program, spec.shape, spec.dtype)
         # local_* use the layout path's logical convention (selected rows ×
@@ -1117,6 +1115,50 @@ class GridSession:
             merge_path=self.engine.last_merge_path, acct=acct,
             partials_total=p_total, partials_reused=p_reused,
             rows_folded=rows_folded, mr=mr)
+
+    def _fold_cold(
+        self, program: MapReduceProgram, eta: int,
+        mask: Optional[np.ndarray], w: _RegionWork,
+        family: str, qualifier: str, spec,
+        group: Optional[_GroupInfo], n_groups: int, pkey: Tuple,
+    ) -> Tuple[Any, DeviceBlock, bool, bool]:
+        """Fetch one region's block, fold it on its owner device, and cache
+        the partial under ``pkey``.  Returns ``(partial, block, reused,
+        gathered)`` so the caller (or a coalescing fold gate's followers)
+        can account the fetch classification exactly once."""
+        blk, reused, gathered = self._fetch_block(
+            w.region, family, qualifier, owner=w.owner)
+        src = blk.device if blk.device is not None else blk.host
+        bmask = None if w.mask_sig == "full" else mask[w.rows]
+        gid_arr = None
+        if group is not None:
+            # Densified gid blocks depend only on (region lineage,
+            # mapping), not on the program — cache them so dirty-region
+            # re-folds across plans skip the factorize pass.
+            gid_arr = self.blocks.get_gids(
+                w.region, group.family, group.qualifier, group.sig)
+            if gid_arr is None:
+                key_col = self.table.column(group.family, group.qualifier)
+                gid_arr = group.gids_for(key_col[w.rows])
+                self.blocks.put_gids(
+                    w.region, group.family, group.qualifier,
+                    group.sig, gid_arr)
+        src_rows = int(src.shape[0])
+        if src_rows != blk.rows:
+            # committed pre-padded to the fold bucket: extend the (tiny)
+            # mask/gid arrays host-side to match
+            m = np.zeros(src_rows, bool)
+            m[:blk.rows] = True if bmask is None else bmask
+            bmask = m
+            if gid_arr is not None:
+                g2 = np.zeros(src_rows, np.int32)
+                g2[:blk.rows] = gid_arr
+                gid_arr = g2
+        partial = self.engine.fold_block(
+            program, src, bmask, eta, spec.shape, spec.dtype,
+            gids=gid_arr, num_groups=n_groups)
+        self.blocks.put_partial(pkey, partial)
+        return partial, blk, reused, gathered
 
     def _scan_mask(
         self, plan: GridQuery

@@ -48,6 +48,7 @@ Two execution granularities share the program interface:
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -200,18 +201,37 @@ class MapReduceEngine:
         #: platforms take the XLA fold — interpret mode is a correctness
         #: harness, not a fast path.
         self.fold_interpret = bool(fold_interpret)
-        #: folds dispatched per implementation (observability + tests)
+        #: folds dispatched per implementation (observability + tests);
+        #: bumped under ``_count_lock`` — concurrent frontend queries fold
+        #: from many threads and the barrier tests assert EXACT counts
         self.fold_path_counts: dict = {"pallas": 0, "xla": 0}
-        #: which physical reduce the last merge_finalize took: "tree" (psum
-        #: over the data axis) or "funnel" (partials meet on one device)
-        self.last_merge_path = ""
         self.merge_path_counts: dict = {"tree": 0, "funnel": 0}
+        # executable builds are serialized (two threads missing the same
+        # key must not compile twice and double-bump compile_count); the
+        # dispatch of an already-built executable stays lock-free
+        self._build_lock = threading.RLock()
+        self._count_lock = threading.Lock()
+        # the last merge path is per-thread: concurrent queries must each
+        # read the path of THEIR merge, not whichever finished last
+        self._tls = threading.local()
         # the mesh's data-axis devices, in shard order — available only when
         # the mesh is exactly the 1-D data axis (same condition the session
         # uses for per-shard block placement); None disables the tree reduce
         devs = np.asarray(mesh.devices).flat
         self._axis_devices = (list(devs)
                               if mesh.axis_names == (data_axis,) else None)
+
+    @property
+    def last_merge_path(self) -> str:
+        """Which physical reduce the CALLING THREAD's last
+        :meth:`merge_finalize` took ("tree" / "funnel"; "" before any
+        merge on this thread).  Thread-local so concurrent queries each
+        observe their own merge, not whichever finished last."""
+        return getattr(self._tls, "last_merge_path", "")
+
+    @last_merge_path.setter
+    def last_merge_path(self, value: str) -> None:
+        self._tls.last_merge_path = value
 
     # ------------------------------------------------------------------
 
@@ -288,9 +308,14 @@ class MapReduceEngine:
     def _get_or_build(self, key, build: Callable[[], Any]):
         fn = self._compiled.get(key)
         if fn is None:
-            self.compile_count += 1
-            fn = build()
-            self._compiled.put(key, fn)
+            with self._build_lock:
+                # double-check under the lock: a racing thread may have
+                # built it while we waited — compile once, count once
+                fn = self._compiled.get(key)
+                if fn is None:
+                    self.compile_count += 1
+                    fn = build()
+                    self._compiled.put(key, fn)
         return fn
 
     @staticmethod
@@ -469,7 +494,8 @@ class MapReduceEngine:
             if grouped:
                 gids = jnp.pad(jnp.asarray(gids, jnp.int32), padw)
         impl = self.fold_path(program, dtype, num_groups)
-        self.fold_path_counts[impl] += 1
+        with self._count_lock:
+            self.fold_path_counts[impl] += 1
         if impl == "pallas":
             # chunk-free: eta is absent from the key — every η shares the
             # one fused-kernel executable per (bucket, G) signature
@@ -521,11 +547,13 @@ class MapReduceEngine:
         """
         if self._tree_merge_ok(program, partials, owners):
             self.last_merge_path = "tree"
-            self.merge_path_counts["tree"] += 1
+            with self._count_lock:
+                self.merge_path_counts["tree"] += 1
             return self._merge_tree(program, partials, owners,
                                     row_shape, dtype)
         self.last_merge_path = "funnel"
-        self.merge_path_counts["funnel"] += 1
+        with self._count_lock:
+            self.merge_path_counts["funnel"] += 1
         return self._merge_funnel(program, partials, row_shape, dtype)
 
     def _tree_merge_ok(self, program, partials, owners) -> bool:
@@ -730,11 +758,8 @@ class MapReduceEngine:
         row_shape = tuple(values.shape[2:])
         dtype = values.dtype
         key = (program.cache_key(), row_shape, str(dtype), chunk_size, C)
-        fn = self._compiled.get(key)
-        if fn is None:
-            self.compile_count += 1
-            fn = self._build(program, row_shape, dtype, chunk_size)
-            self._compiled.put(key, fn)
+        fn = self._get_or_build(
+            key, lambda: self._build(program, row_shape, dtype, chunk_size))
         result = fn(values, mask)
 
         # --- byte accounting (host-side; mask is tiny) -------------------

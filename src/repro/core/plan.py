@@ -227,6 +227,36 @@ class GridQuery:
     # planner-facing helpers
     # ------------------------------------------------------------------
 
+    def signature(self) -> Tuple:
+        """Hashable identity of the plan's semantics — scan range,
+        projection, predicate, fused program stack, grouping.  The
+        frontend's single-flight registry keys on ``(signature, epoch)``
+        to collapse concurrent identical queries into one execution.
+
+        Predicates are callables compared by identity: two plans share a
+        signature only when they share the predicate *object* (forks of
+        one base scan, or one module-level predicate reused across
+        clients) — exactly the repeat-query shape coalescing targets.
+        The signature tuple holds a reference to the predicate, so an
+        entry retained in a registry keeps its identity stable.
+        """
+        return (
+            self.start, self.stop, self.resolved_columns(),
+            self.predicate, self.index_qualifiers,
+            tuple(p.cache_key() for p in self.programs),
+            self.group_key,
+        )
+
+    def batch_signature(self) -> Tuple:
+        """The plan signature *minus the program stack*.  Plans sharing
+        this scan the same rows of the same columns under the same
+        grouping, so their programs can fuse into one device pass per
+        scheduler tick; results split back per plan by program count."""
+        return (
+            self.start, self.stop, self.resolved_columns(),
+            self.predicate, self.index_qualifiers, self.group_key,
+        )
+
     def resolved_columns(self) -> Tuple[Tuple[str, str], ...]:
         if self.columns:
             return self.columns
