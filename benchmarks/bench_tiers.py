@@ -1,0 +1,132 @@
+"""Tiered BlockStore spill bench: query a dataset 10× the device budget.
+
+The scenario the tier chain exists for: the payload is an order of
+magnitude larger than the synthetic device-byte budget, so a cold query
+continuously demotes committed blocks (device → host → disk) while
+folding.  Measured:
+
+1. **Cold wall** — first exact query under forced spill pressure.
+2. **Warm wall** — the same query repeated after clearing the
+   plan-result cache, so the answer is reconstructed from cached
+   partials.  Partials are tiny and stay resident, so the warm pass must
+   touch neither the fabric nor the spill files — ``warm_disk_reads``
+   probes exactly that, and ``spill_warm_over_cold`` (gated, lower is
+   better) is the warm/cold wall ratio.
+3. **Promotion wall** — partials dropped, blocks demoted: the repeat
+   query re-serves payloads from host/disk instead of re-gathering;
+   ``promote_gathers`` counts table re-reads (0 when every byte was
+   recovered from a lower tier).
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.grid import GridSession
+from repro.core.stats import CountProgram, MeanProgram
+from repro.core.table import make_mip_table
+
+N_REGIONS = 16
+PER_REGION = 8
+PAYLOAD = (32, 32)                      # 4 KB float32 rows
+ROW_BYTES = int(np.prod(PAYLOAD)) * 4
+
+
+def _make_table(seed=0):
+    rng = np.random.default_rng(seed)
+    groups = [f"g{i:02d}" for i in range(N_REGIONS)]
+    t = make_mip_table(payload_shape=PAYLOAD, presplit_keys=groups[1:])
+    keys = [f"{g}x{i:04d}" for g in groups for i in range(PER_REGION)]
+    n = len(keys)
+    t.upload(keys, {
+        "img": {"data": rng.normal(size=(n,) + PAYLOAD).astype(np.float32)},
+        "idx": {"size": rng.integers(6_000_000, 20_000_001, n)}})
+    return t
+
+
+def _timed_run(session, program):
+    t0 = time.perf_counter()
+    res, rep = session.run(program)
+    jax.block_until_ready(res)
+    return (time.perf_counter() - t0), res, rep
+
+
+def run(verbose: bool = True):
+    t = _make_table()
+    total = N_REGIONS * PER_REGION * ROW_BYTES
+    device_budget = total // 10          # the 10× oversubscription
+    spill_root = tempfile.mkdtemp(prefix="bench-tiers-")
+    expect = t.column("img", "data").astype(np.float64).mean(0)
+
+    session = GridSession(
+        t, default_eta=PER_REGION,
+        device_budget=device_budget,
+        host_budget=total // 4,
+        spill_dir=spill_root,
+        prefetch=False,                  # measure the tiers, not overlap
+    )
+    try:
+        # --- 1. cold: every block gathers, commits, and demotes -------
+        cold_s, res, _ = _timed_run(session, MeanProgram())
+        np.testing.assert_allclose(np.asarray(res), expect, atol=1e-4)
+        cold = session.blocks.stats.snapshot()
+        tiers_cold = session.blocks.tier_bytes()
+        assert tiers_cold["device"] <= device_budget
+
+        # --- 2. warm: partials answer; no fabric, no spill reads ------
+        session._results.clear()
+        warm_s, res, rep = _timed_run(session, MeanProgram())
+        np.testing.assert_allclose(np.asarray(res), expect, atol=1e-4)
+        warm = session.blocks.stats.snapshot()
+        warm_disk_reads = warm.spill_reads - cold.spill_reads
+        warm_gathers = warm.gathers - cold.gathers
+
+        # --- 3. promotion: drop partials, re-serve payloads from the
+        # lower tiers (host RAM + mmap'd spill files) ------------------
+        session.blocks.clear_partials()
+        session._results.clear()
+        promote_s, res, _ = _timed_run(session, MeanProgram())
+        np.testing.assert_allclose(np.asarray(res), expect, atol=1e-4)
+        done = session.blocks.stats.snapshot()
+        promote_gathers = done.gathers - warm.gathers
+        promote_spill_reads = done.spill_reads - warm.spill_reads
+    finally:
+        session.close()
+        shutil.rmtree(spill_root, ignore_errors=True)
+
+    b = {
+        "n_rows": N_REGIONS * PER_REGION,
+        "payload_bytes_total": total,
+        "device_budget_bytes": device_budget,
+        "oversubscription_x": total / device_budget,
+        "cold_wall_s": cold_s,
+        "warm_wall_s": warm_s,
+        "promote_wall_s": promote_s,
+        "spill_warm_over_cold": warm_s / cold_s,
+        "warm_disk_reads": warm_disk_reads,
+        "warm_gathers": warm_gathers,
+        "warm_rows_folded": rep.query.rows_folded,
+        "promote_gathers": promote_gathers,
+        "promote_spill_reads": promote_spill_reads,
+        "cold_demotions": cold.demotions,
+        "cold_spills": cold.spills,
+        "cold_spill_drops": cold.spill_drops,
+        "cold_host_serves": cold.host_serves,
+        "device_bytes_peak_cold": tiers_cold["device"],
+        "host_bytes_cold": tiers_cold["host"],
+        "disk_bytes_cold": tiers_cold["disk"],
+    }
+    if verbose:
+        for k, v in b.items():
+            print(f"  {k}: {v}")
+    return b
+
+
+if __name__ == "__main__":
+    run()

@@ -9,7 +9,7 @@ summary EXPERIMENTS.md quotes, and writes one JSON artifact per bench
 
 ``--smoke`` runs every artifact-emitting bench except the table-scheme
 sweep and the roofline (balancer, chunk model, kernels, query pruning,
-blockstore, fold engine, group_by, frontend) — CI uploads the JSON files from each
+blockstore, fold engine, group_by, frontend, tiers) — CI uploads the JSON files from each
 run and gates headline metrics against ``benchmarks/perf_baselines.json``
 via ``benchmarks/check_regression.py``.
 """
@@ -148,6 +148,19 @@ def run_frontend(smoke: bool = True) -> None:
                    f"p99_ms={b['repeat_coalesced_p99_ms']:.2f}"))
 
 
+def run_tiers() -> None:
+    from benchmarks import bench_tiers
+
+    _run_bench(
+        "tiers",
+        "[PR 8] Tiered BlockStore: spill at 10x the device budget",
+        bench_tiers.run,
+        lambda b: (f"warm_over_cold={b['spill_warm_over_cold']:.3f};"
+                   f"warm_disk_reads={b['warm_disk_reads']};"
+                   f"promote_gathers={b['promote_gathers']};"
+                   f"spills={b['cold_spills']}"))
+
+
 def run_kernels() -> None:
     from benchmarks import bench_kernels
 
@@ -187,6 +200,7 @@ def main() -> None:
         run_fold_engine()
         run_group_by()
         run_frontend(smoke=True)
+        run_tiers()
         print("\nsmoke benchmarks complete")
         return
 
@@ -200,6 +214,7 @@ def main() -> None:
     run_fold_engine()
     run_group_by()
     run_frontend(smoke=False)
+    run_tiers()
     run_kernels()
 
     print("\n--- Roofline (single-pod dry-run artifacts) ---")

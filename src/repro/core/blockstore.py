@@ -32,36 +32,89 @@ over — a mutation's version bump invalidates a block's partials with it,
 while every other partial survives to be *merged* instead of re-folded.
 This is what makes a repeat query fold zero payload rows.
 
+Capacity is a **tier chain**, not a flat cap: device HBM → host RAM → disk
+(mmap'd ``.npy`` files under a session spill dir), each tier bounded by a
+byte budget (``None`` = unbounded, the pre-tiering behavior).  Under
+pressure the coldest payload *demotes* one tier instead of vanishing —
+
+- device over budget: the device copy is dropped (the host copy, pulled
+  back from the device first if it was the only one, stays);
+- host over budget: the host copy spills to an ``.npy`` file when the
+  :class:`~repro.core.chunk_model.TierCostModel` oracle says a local disk
+  read beats re-fetching from the backing table, else it is dropped;
+- disk over budget: the coldest spill file is deleted (the table remains
+  the source of truth, so every demotion is loss-free);
+
+and reads *promote* transparently: a fetch finds the highest tier holding
+the content, re-materializing host views from spill files via
+``np.load(mmap_mode="r")`` (the mmap is charged to the disk tier — it pins
+no RAM).  Evicted **partials demote too**: instead of silently re-folding
+on next use, an evicted partial is flattened to host leaves and written
+beside the blocks when the oracle prefers a disk round-trip to a re-fold.
+A background **prefetcher** overlaps ``device_put`` of next-needed
+lower-tier blocks with in-flight folds; its fetch classification is
+recorded and *claimed* by the next query's own fetch, so per-query
+transfer/gather oracles stay exact.
+
 The store is storage + versioning only: *gathering* a block from the table,
 choosing its owner device, and *folding* partials stay with
 :class:`~repro.core.grid.GridSession` / the engine, which own placement and
-compute.  Capacity is bounded by :class:`LRUCache` instances; an evicted
-block is simply re-gathered — and an evicted partial re-folded — on next
-use (regression tests assert re-materialization is loss-free).
+compute.  An entry evicted out of every tier is simply re-gathered — and a
+lost partial re-folded — on next use (regression tests assert
+re-materialization is loss-free).
 
 Since the :class:`~repro.core.frontend.GridFrontend` serves queries from a
 thread pool, the store is safe under **concurrent readers with serialized
 mutators**: every cache is a locked :class:`LRUCache` whose iterating
 helpers return point-in-time lists, compound operations (fetch, partial
-index maintenance, touch/drop) run under one store-level re-entrant lock,
-and the cumulative counters are an :class:`AtomicStats` whose ``inc`` is
-lock-protected and whose ``snapshot()`` gives a consistent point-in-time
-copy for benches and tests.
+index maintenance, touch/drop, tier enforcement) run under one store-level
+re-entrant lock, and the cumulative counters are an :class:`AtomicStats`
+whose ``inc`` is lock-protected and whose ``snapshot()`` gives a
+consistent point-in-time copy for benches and tests.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
+import shutil
 import threading
 from collections import OrderedDict
-from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.core.chunk_model import TierCostModel
 from repro.core.regions import Region
 
 #: (region signature, family, qualifier, version) — the content address.
 BlockKey = Tuple[Tuple[int, bytes, Optional[bytes]], str, str, int]
+
+_MISSING = object()
+
+
+def _unlink(path: Optional[str]) -> None:
+    if not path:
+        return
+    try:
+        os.unlink(path)
+    except OSError:
+        pass
+
+
+def _payload_nbytes(value: Any) -> int:
+    """Total array bytes in a (possibly nested) accumulator pytree — the
+    weigher behind the partial cache's byte budget.  Works on numpy and
+    jax leaves (both expose ``nbytes``) without importing jax."""
+    nb = getattr(value, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    if isinstance(value, dict):
+        return sum(_payload_nbytes(v) for v in value.values())
+    if isinstance(value, (tuple, list)):
+        return sum(_payload_nbytes(v) for v in value)
+    return 0
 
 
 class AtomicStats:
@@ -103,13 +156,30 @@ class AtomicStats:
 
 
 class LRUCache:
-    """A small bounded mapping with least-recently-used eviction.
+    """A bounded mapping with least-recently-used eviction.
 
     Shared by every cache this backend keeps per session — device blocks,
     bound scan plans, compiled executables — so long-lived mutating sessions
     stay memory-bounded.  ``get`` refreshes recency; ``put`` evicts the
-    coldest entries beyond ``cap`` and reports them to ``on_evict`` (used to
-    count evictions and, for blocks, to observe re-materialization in tests).
+    coldest entries and reports them to ``on_evict`` (used to count
+    evictions, to spill partials, and to observe re-materialization in
+    tests).
+
+    Capacity is expressed two ways, independently optional:
+
+    - ``cap`` — maximum entry COUNT.  ``None`` means unbounded; ``0``
+      means disabled (nothing is ever admitted).
+    - ``max_bytes`` — maximum total WEIGHT, where each entry weighs
+      ``weigher(value)`` (default: the value's ``nbytes``, 0 if absent).
+      ``None`` unbounded, ``0`` disabled.
+
+    Eviction happens **before** insert: victims are chosen only while a
+    budget is actually exceeded, so the incoming entry never forces the
+    cache over budget even transiently.  An entry whose own weight exceeds
+    ``max_bytes`` is never admitted at all — admitting it and then purging
+    colder victims would empty the cache for an entry that cannot fit; it
+    is reported to ``on_evict`` like an immediate eviction and ``put``
+    returns ``False``.
 
     Thread-safe: every operation holds an internal re-entrant lock (``get``
     mutates recency order, so even reads are writes here), and the iterating
@@ -118,12 +188,21 @@ class LRUCache:
     ``RuntimeError: dict changed size during iteration``.
     """
 
-    def __init__(self, cap: int,
+    def __init__(self, cap: Optional[int], *,
+                 max_bytes: Optional[int] = None,
+                 weigher: Optional[Callable[[Any], int]] = None,
                  on_evict: Optional[Callable[[Any, Any], None]] = None):
-        if cap <= 0:
-            raise ValueError(f"LRU cap must be positive, got {cap}")
-        self.cap = int(cap)
+        if cap is not None and cap < 0:
+            raise ValueError(f"LRU cap must be >= 0 or None, got {cap}")
+        if max_bytes is not None and max_bytes < 0:
+            raise ValueError(
+                f"LRU max_bytes must be >= 0 or None, got {max_bytes}")
+        self.cap = None if cap is None else int(cap)
+        self.max_bytes = None if max_bytes is None else int(max_bytes)
+        self._weigher = weigher or _payload_nbytes
         self._d: "OrderedDict[Any, Any]" = OrderedDict()
+        self._w: Dict[Any, int] = {}
+        self.nbytes = 0
         self._on_evict = on_evict
         self._lock = threading.RLock()
         self.evictions = 0
@@ -148,23 +227,76 @@ class LRUCache:
         with self._lock:
             return self._d.get(key, default)
 
-    def put(self, key, value) -> None:
+    def put(self, key, value) -> bool:
+        """Insert ``value`` under ``key``; returns whether it was admitted.
+
+        ``False`` means the cache is disabled (``cap==0`` / ``max_bytes==0``)
+        or the entry alone exceeds ``max_bytes`` — either way the value is
+        reported to ``on_evict``, so demotion/unindex hooks observe every
+        entry that leaves (or never enters) the cache exactly once."""
         with self._lock:
-            self._d[key] = value
-            self._d.move_to_end(key)
-            while len(self._d) > self.cap:
+            w = self._weigher(value) if self.max_bytes is not None else 0
+            disabled = self.cap == 0 or self.max_bytes == 0
+            if disabled or (self.max_bytes is not None
+                            and w > self.max_bytes):
+                # reject up front: no set of colder victims could make this
+                # entry fit.  A previous value under the same key is stale
+                # now — drop it silently (one on_evict per key, not two).
+                prev = self._d.pop(key, _MISSING)
+                if prev is not _MISSING:
+                    self.nbytes -= self._w.pop(key, 0)
+                self.evictions += 1
+                if self._on_evict is not None:
+                    self._on_evict(key, value)
+                return False
+            prev = self._d.pop(key, _MISSING)
+            if prev is not _MISSING:
+                self.nbytes -= self._w.pop(key, 0)
+            # evict BEFORE insert: victims leave only while a budget is
+            # actually exceeded
+            while self._d and (
+                    (self.cap is not None and len(self._d) >= self.cap)
+                    or (self.max_bytes is not None
+                        and self.nbytes + w > self.max_bytes)):
                 k, v = self._d.popitem(last=False)
+                self.nbytes -= self._w.pop(k, 0)
                 self.evictions += 1
                 if self._on_evict is not None:
                     self._on_evict(k, v)
+            self._d[key] = value
+            if self.max_bytes is not None:
+                self._w[key] = w
+                self.nbytes += w
+            return True
+
+    def replace(self, key, value) -> bool:
+        """Swap the value under an existing ``key`` IN PLACE — recency is
+        preserved, so a tier demotion can downgrade a cold block without
+        promoting it to hottest (which would make the next victim scan
+        pick a different, warmer block and cycle).  No budget enforcement:
+        callers replace with equal-or-lighter values."""
+        with self._lock:
+            if key not in self._d:
+                return False
+            self._d[key] = value
+            if self.max_bytes is not None:
+                self.nbytes -= self._w.get(key, 0)
+                w = self._weigher(value)
+                self._w[key] = w
+                self.nbytes += w
+            return True
 
     def pop(self, key, default=None):
         with self._lock:
+            if key in self._d:
+                self.nbytes -= self._w.pop(key, 0)
             return self._d.pop(key, default)
 
     def clear(self) -> None:
         with self._lock:
             self._d.clear()
+            self._w.clear()
+            self.nbytes = 0
 
     def keys(self) -> List[Any]:
         with self._lock:
@@ -186,11 +318,13 @@ class DeviceBlock:
     ``host`` is a private copy of the region's column rows (positions inside
     the table may shift under unrelated mutations; content cannot — any
     mutation to *this* region bumps its version and a new block is born).
-    ``device`` is the committed on-device copy (``None`` while host-only,
-    e.g. on meshes where per-shard placement is unavailable);
-    ``device_index`` records which mesh shard it was committed to, so a
-    rebalance that moves the region re-ships the block without re-reading
-    the table.
+    ``None`` after a host-tier demotion: the content then lives in the
+    spill file and/or the device copy, and a tier-aware fetch
+    re-materializes it.  ``device`` is the committed on-device copy
+    (``None`` while host-only, e.g. on meshes where per-shard placement is
+    unavailable, or after a device-tier demotion); ``device_index`` records
+    which mesh shard it was committed to, so a rebalance that moves the
+    region re-ships the block without re-reading the table.
     """
 
     rid: int
@@ -199,7 +333,7 @@ class DeviceBlock:
     version: int
     rows: int                      # logical rows (the region's real rows)
     nbytes: int                    # logical host bytes (unpadded)
-    host: np.ndarray
+    host: Optional[np.ndarray]
     device: Any = None             # jax.Array committed to the owner shard
     device_index: Optional[int] = None
     # physical bytes of the committed device copy (0 while host-only) —
@@ -207,6 +341,13 @@ class DeviceBlock:
     # the fold bucket; transfer/residency oracles report THIS, not the
     # logical size
     device_nbytes: int = 0
+    # disk-tier state: the spilled ``.npy`` file (None while not spilled)
+    # and its on-disk size.  ``host_mmap`` marks a ``host`` that is an
+    # mmap-backed view of the spill file: charged to the disk tier, not
+    # host RAM
+    spill_path: Optional[str] = None
+    spill_nbytes: int = 0
+    host_mmap: bool = False
 
 
 @dataclasses.dataclass
@@ -214,6 +355,12 @@ class BlockStoreStats(AtomicStats):
     """Cumulative store counters (session lifetime).  Evictions are not
     duplicated here — the LRU already counts them; read
     :attr:`BlockStore.evictions`.
+
+    ``device_bytes`` / ``host_bytes`` / ``disk_bytes`` are per-tier
+    resident-byte GAUGES (inc'd with signed deltas under the store lock),
+    not monotone counters — they track exactly what each tier currently
+    holds: committed device payload, real (non-mmap) host copies, and
+    spill files (blocks + partials).
 
     Updates go through :meth:`AtomicStats.inc` (concurrent queries bump
     these from many threads); consistent multi-counter reads through
@@ -228,10 +375,29 @@ class BlockStoreStats(AtomicStats):
     folds: int = 0          # per-block fold partials computed and stored
     gid_hits: int = 0       # per-region gid blocks served from the cache
     gid_builds: int = 0     # gid blocks densified (searchsorted) and stored
+    # --- tier chain ---------------------------------------------------
+    host_serves: int = 0    # fold fetches served host-side (payload larger
+    #                         than the whole device budget: never committed)
+    demotions: int = 0      # device payloads dropped under the device budget
+    spills: int = 0         # host payloads written to the disk tier
+    spill_reads: int = 0    # spill files re-opened (mmap) to serve a block
+    spill_drops: int = 0    # payloads dropped entirely (no tier below)
+    partial_spills: int = 0       # evicted partials demoted to disk
+    partial_spill_reads: int = 0  # spilled partials promoted back to RAM
+    prefetches: int = 0     # background tier promotions completed
+    prefetch_hits: int = 0  # fetches served by claiming a prefetch record
+    device_bytes: int = 0   # gauge: committed device payload bytes
+    host_bytes: int = 0     # gauge: real (non-mmap) host copies
+    disk_bytes: int = 0     # gauge: spill files on disk (blocks + partials)
+
+
+def _never_gather() -> np.ndarray:   # pragma: no cover - guarded by callers
+    raise RuntimeError("prefetch must not gather from the table")
 
 
 class BlockStore:
-    """Versioned LRU of :class:`DeviceBlock`, the substrate under layouts.
+    """Versioned tiered cache of :class:`DeviceBlock`, the substrate under
+    layouts.
 
     One instance per :class:`~repro.core.grid.GridSession`.  The session
     funnels every block request through :meth:`fetch`, which classifies the
@@ -247,25 +413,66 @@ class BlockStore:
     Every fetched block satisfies ``reused or transferred`` — which is the
     testable invariant ``blocks_reused + blocks_transferred == blocks_total``
     carried on ``QueryStats``.
+
+    Tier budgets (all optional, bytes): ``device_budget`` bounds committed
+    device payload, ``host_budget`` bounds real host copies,
+    ``disk_budget`` bounds spill files under ``spill_dir``.  ``None``
+    leaves a tier unbounded (the pre-tiering behavior); without a
+    ``spill_dir`` the disk tier is disabled and host-tier pressure drops
+    payloads (loss-free — the table is the source of truth).  Placement
+    decisions consult ``cost_model``
+    (:class:`~repro.core.chunk_model.TierCostModel`).
     """
 
-    def __init__(self, cap: int = 256, partial_cap: int = 1024):
+    #: completed-but-unclaimed prefetch records kept around (bounded; a
+    #: mutation clears them wholesale)
+    PREFETCH_RECORDS = 64
+
+    def __init__(self, cap: Optional[int] = 256,
+                 partial_cap: Optional[int] = 1024,
+                 *,
+                 device_budget: Optional[int] = None,
+                 host_budget: Optional[int] = None,
+                 disk_budget: Optional[int] = None,
+                 partial_budget: Optional[int] = None,
+                 spill_dir: Optional[str] = None,
+                 cost_model: Optional[TierCostModel] = None,
+                 prefetch_workers: int = 1):
+        self._closed = False
         self.stats = BlockStoreStats()
+        self.device_budget = device_budget
+        self.host_budget = host_budget
+        self.disk_budget = disk_budget
+        self.cost_model = cost_model if cost_model is not None \
+            else TierCostModel()
+        self.spill_dir = spill_dir
+        self._owns_spill_dir = False
+        if spill_dir is not None:
+            self._owns_spill_dir = not os.path.isdir(spill_dir)
+            os.makedirs(spill_dir, exist_ok=True)
+        self._spill_seq = 0
         # one re-entrant lock serializes every compound cache operation
         # (fetch's get-then-put, the partial index maintenance, touch/drop
-        # sweeps); individual LRUCache ops are locked on their own, but the
-        # invariants here span several of them
+        # sweeps, tier enforcement); individual LRUCache ops are locked on
+        # their own, but the invariants here span several of them
         self._lock = threading.RLock()
-        self._blocks: LRUCache = LRUCache(cap)
+        self._blocks: LRUCache = LRUCache(
+            cap, on_evict=self._on_block_evict)
         # per-block fold partials, keyed (BlockKey, program, mask sig, eta):
         # the compute-side cache that lets a repeat query fold zero rows.
         # Partials are tiny (one accumulator pytree per block), so their cap
-        # is several times the block cap; an evicted partial just re-folds.
+        # is several times the block cap; an evicted partial demotes to the
+        # disk tier when spill is enabled, else it just re-folds.
         self._partials: LRUCache = LRUCache(
-            partial_cap, on_evict=lambda k, v: self._unindex_partial(k))
+            partial_cap, max_bytes=partial_budget,
+            on_evict=self._on_partial_evict)
         # (rid, version) -> live partial count: keeps has_partials O(1)
-        # (it runs once per surviving region on every cold selective scan)
+        # (it runs once per surviving region on every cold selective scan).
+        # Spilled partials stay indexed — they are still servable.
         self._partial_index: Dict[Tuple[int, int], int] = {}
+        # spilled partials: partial key -> (path, charged bytes, treedef)
+        self._spilled_partials: "OrderedDict[Tuple, Tuple[str, int, Any]]" \
+            = OrderedDict()
         # densified per-region gid blocks keyed (key-column block lineage,
         # mapping signature): a dirty-region re-fold touches OTHER regions'
         # partials but still needs THIS region's gids — caching them skips
@@ -274,11 +481,48 @@ class BlockStore:
         self._gids: LRUCache = LRUCache(512)
         # region id -> mutation epoch that last changed its content
         self._versions: Dict[int, int] = {}
+        # background promotion: in-flight keys (single-flight) and
+        # completed-but-unclaimed (block, reused, gathered) records the
+        # next fetch of the key claims, preserving per-query accounting
+        self._prefetch_workers = max(0, int(prefetch_workers))
+        self._prefetch_pool: Optional[ThreadPoolExecutor] = None
+        self._prefetch_inflight: Set[BlockKey] = set()
+        self._prefetched: "OrderedDict[BlockKey, Tuple[DeviceBlock, bool, bool]]" = OrderedDict()  # noqa: E501
 
     @property
     def evictions(self) -> int:
         """Blocks dropped by the LRU cap (counted once, by the LRU)."""
         return self._blocks.evictions
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+
+    def close(self) -> None:
+        """Release tier resources: stop the prefetcher, delete every spill
+        file, and remove the spill dir if this store created it.  The
+        store stays usable afterwards as a pure in-memory cache."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            pool, self._prefetch_pool = self._prefetch_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+        with self._lock:
+            for k, blk in self._blocks.items():
+                if blk.spill_path:
+                    self._drop_spill_file(k, blk)
+            for key in list(self._spilled_partials):
+                self._drop_spilled_partial(key)
+        if self._owns_spill_dir and self.spill_dir:
+            shutil.rmtree(self.spill_dir, ignore_errors=True)
+
+    def __del__(self):   # pragma: no cover - interpreter-shutdown best effort
+        try:
+            self.close()
+        except Exception:
+            pass
 
     # ------------------------------------------------------------------
     # epoch lineage
@@ -304,7 +548,7 @@ class BlockStore:
                       if k[0][0] in touched
                       and k[3] != self._versions[k[0][0]]]
             for k in doomed:
-                self._blocks.pop(k)
+                self._drop_block(k)
             # superseded fold partials are as dead as their blocks: the
             # partial key embeds the block version, so they can never hit
             # again
@@ -313,12 +557,19 @@ class BlockStore:
                         and k[0][3] != self._versions[k[0][0][0]]]
             for k in doomed_p:
                 self._pop_partial(k)
+            doomed_sp = [k for k in self._spilled_partials
+                         if k[0][0][0] in touched
+                         and k[0][3] != self._versions[k[0][0][0]]]
+            for k in doomed_sp:
+                self._drop_spilled_partial(k)
             # superseded gid blocks die with their key-column block lineage
             doomed_g = [k for k in self._gids.keys()
                         if k[0][0][0] in touched
                         and k[0][3] != self._versions[k[0][0][0]]]
             for k in doomed_g:
                 self._gids.pop(k)
+            # unclaimed prefetch records may reference superseded content
+            self._prefetched.clear()
 
     def drop_regions(self, rids: Iterable[int]) -> None:
         """Forget regions that no longer exist (split parents): their rids
@@ -330,21 +581,219 @@ class BlockStore:
         with self._lock:
             for k in [k for k in self._blocks.keys()
                       if k[0][0] in doomed_rids]:
-                self._blocks.pop(k)
+                self._drop_block(k)
             for k in [k for k in self._partials.keys()
                       if k[0][0][0] in doomed_rids]:
                 self._pop_partial(k)
+            for k in [k for k in self._spilled_partials
+                      if k[0][0][0] in doomed_rids]:
+                self._drop_spilled_partial(k)
             for k in [k for k in self._gids.keys()
                       if k[0][0][0] in doomed_rids]:
                 self._gids.pop(k)
             for rid in doomed_rids:
                 self._versions.pop(rid, None)
+            self._prefetched.clear()
 
     def lineage(self, regions: Iterable[Region]) -> Tuple[Tuple[int, int], ...]:
         """``((rid, version), ...)`` — the epoch-lineage signature of a
         region set.  Two plans over the same regions at the same versions may
         share everything; any difference forces a re-bind."""
         return tuple((r.rid, self.version_of(r.rid)) for r in regions)
+
+    # ------------------------------------------------------------------
+    # tier accounting
+    # ------------------------------------------------------------------
+
+    def _charge(self, device: int = 0, host: int = 0, disk: int = 0) -> None:
+        """Apply signed deltas to the per-tier resident-byte gauges."""
+        if device or host or disk:
+            self.stats.inc(device_bytes=device, host_bytes=host,
+                           disk_bytes=disk)
+
+    @staticmethod
+    def _block_charges(blk: DeviceBlock) -> Tuple[int, int, int]:
+        """What this block currently contributes to each tier gauge."""
+        dev = blk.device_nbytes if blk.device is not None else 0
+        host = (blk.nbytes
+                if blk.host is not None and not blk.host_mmap else 0)
+        disk = blk.spill_nbytes if blk.spill_path is not None else 0
+        return dev, host, disk
+
+    def _on_block_evict(self, key, blk: DeviceBlock) -> None:
+        """LRU-cap eviction hook: release every tier charge and the spill
+        file (always fired under the store lock — every ``_blocks``
+        mutation happens inside a compound store operation)."""
+        d, h, k = self._block_charges(blk)
+        self._charge(device=-d, host=-h, disk=-k)
+        _unlink(blk.spill_path)
+
+    def _drop_block(self, key) -> None:
+        """Pop one block and settle its tier charges (the non-LRU removal
+        path: touch / drop_regions / clear / disk-tier drops)."""
+        blk = self._blocks.pop(key)
+        if blk is not None:
+            self._on_block_evict(key, blk)
+
+    def _put_and_charge(self, key, blk: DeviceBlock,
+                        prev: Tuple[int, int, int] = (0, 0, 0)) -> None:
+        """Insert/replace a block AND settle the tier gauges in one step.
+
+        ``prev`` is what the superseded entry under the same key (if any)
+        was charging.  Charging happens BEFORE the put: if the cache
+        rejects the entry (``cap == 0``), its ``on_evict`` negates the new
+        charges and the net effect is exactly ``-prev`` — the old entry
+        left, the new one never became resident.  If the put is admitted,
+        the delta stands and any *victims* it evicts settle through their
+        own ``on_evict``."""
+        d, h, k = self._block_charges(blk)
+        self._charge(device=d - prev[0], host=h - prev[1], disk=k - prev[2])
+        self._blocks.put(key, blk)
+
+    def _new_spill_path(self, kind: str, suffix: str) -> str:
+        self._spill_seq += 1
+        return os.path.join(self.spill_dir,
+                            f"{kind}-{self._spill_seq:06d}{suffix}")
+
+    # ------------------------------------------------------------------
+    # tier enforcement (demotions)
+    # ------------------------------------------------------------------
+
+    def _coldest(self, pred: Callable[[DeviceBlock], bool]
+                 ) -> Optional[Tuple[Any, DeviceBlock]]:
+        for k, b in self._blocks.items():    # coldest-first, point-in-time
+            if pred(b):
+                return k, b
+        return None
+
+    def _enforce_tiers(self) -> None:
+        """Demote coldest payloads until every tier fits its byte budget.
+
+        Runs under the store lock after any insertion/promotion, so
+        *between* public store operations no tier gauge ever exceeds its
+        budget.  Demotions cascade downward (device → host → disk → gone);
+        every step is loss-free because the table remains authoritative."""
+        if self.device_budget is not None:
+            while self.stats.device_bytes > self.device_budget:
+                victim = self._coldest(lambda b: b.device is not None)
+                if victim is None:
+                    break
+                self._demote_device(*victim)
+        if self.host_budget is not None:
+            while self.stats.host_bytes > self.host_budget:
+                victim = self._coldest(
+                    lambda b: b.host is not None and not b.host_mmap)
+                if victim is None:
+                    break
+                self._demote_host(*victim)
+        if self.disk_budget is not None:
+            self._enforce_disk()
+
+    def _demote_device(self, key, blk: DeviceBlock) -> None:
+        """Drop one block's device payload; the content survives one tier
+        down.  COW: the cache entry is replaced in place (recency kept),
+        never mutated — in-flight folds keep their device arrays alive."""
+        if blk.host is None and blk.spill_path is None:
+            # the device copy is the only one: pull it back to host first,
+            # else the content would silently become a table re-read
+            blk = self._ensure_host(key, blk)
+        new = dataclasses.replace(blk, device=None, device_index=None,
+                                  device_nbytes=0)
+        self._blocks.replace(key, new)
+        self._charge(device=-(blk.device_nbytes))
+        self.stats.inc(demotions=1)
+
+    def _demote_host(self, key, blk: DeviceBlock) -> None:
+        """Demote one block's real host copy: spill to disk when the cost
+        oracle prefers a local disk read to a table re-fetch, else drop."""
+        if blk.spill_path is not None:
+            # already on disk: just release the RAM copy
+            new = dataclasses.replace(blk, host=None, host_mmap=False)
+            self._blocks.replace(key, new)
+            self._charge(host=-blk.nbytes)
+            return
+        if (self.spill_dir is not None and not self._closed
+                and self.cost_model.should_spill_block(blk.nbytes)):
+            path = self._new_spill_path("blk", ".npy")
+            np.save(path, np.asarray(blk.host))
+            sz = int(os.path.getsize(path))
+            new = dataclasses.replace(blk, host=None, host_mmap=False,
+                                      spill_path=path, spill_nbytes=sz)
+            self._blocks.replace(key, new)
+            self._charge(host=-blk.nbytes, disk=sz)
+            self.stats.inc(spills=1)
+            self._enforce_disk_if_bounded()
+            return
+        # no disk tier below (or the oracle prefers re-gathering): drop the
+        # payload; a block left with no payload at all leaves entirely and
+        # re-gathers losslessly on next use
+        if blk.device is not None:
+            new = dataclasses.replace(blk, host=None, host_mmap=False)
+            self._blocks.replace(key, new)
+            self._charge(host=-blk.nbytes)
+        else:
+            self._drop_block(key)
+        self.stats.inc(spill_drops=1)
+
+    def _enforce_disk_if_bounded(self) -> None:
+        if self.disk_budget is not None:
+            self._enforce_disk()
+
+    def _enforce_disk(self) -> None:
+        while self.stats.disk_bytes > self.disk_budget:
+            victim = self._coldest(lambda b: b.spill_path is not None)
+            if victim is not None:
+                key, blk = victim
+                self._drop_spill_file(key, blk)
+                self.stats.inc(spill_drops=1)
+                continue
+            if self._spilled_partials:
+                # spilled partials go after block files: losing one costs a
+                # re-fold, losing a block file only a table re-read
+                k = next(iter(self._spilled_partials))
+                self._drop_spilled_partial(k)
+                continue
+            break
+
+    def _drop_spill_file(self, key, blk: DeviceBlock) -> None:
+        """Delete one block's spill file (and any mmap view of it); the
+        block survives only if another tier still holds the content."""
+        _unlink(blk.spill_path)
+        self._charge(disk=-blk.spill_nbytes)
+        keep_host = blk.host is not None and not blk.host_mmap
+        new = dataclasses.replace(
+            blk, spill_path=None, spill_nbytes=0,
+            host=blk.host if keep_host else None, host_mmap=False)
+        self._blocks.replace(key, new)
+        if new.host is None and new.device is None:
+            self._drop_block(key)   # remaining charges are zero by now
+
+    # ------------------------------------------------------------------
+    # tier promotion (reads walk down the chain)
+    # ------------------------------------------------------------------
+
+    def _ensure_host(self, key, blk: DeviceBlock) -> DeviceBlock:
+        """Re-materialize ``blk.host`` from the highest tier holding the
+        content: spill file (as a read-only mmap, charged to disk) first,
+        else the device copy (a real RAM copy, charged to host).  Returns
+        the possibly-replaced cache entry."""
+        if blk.host is not None:
+            return blk
+        if blk.spill_path is not None:
+            host = np.load(blk.spill_path, mmap_mode="r")
+            new = dataclasses.replace(blk, host=host, host_mmap=True)
+            self._blocks.replace(key, new)
+            self.stats.inc(spill_reads=1)
+            return new
+        if blk.device is not None:
+            host = np.ascontiguousarray(np.asarray(blk.device)[:blk.rows])
+            host.flags.writeable = False
+            new = dataclasses.replace(blk, host=host, host_mmap=False)
+            if self._blocks.replace(key, new):
+                self._charge(host=new.nbytes)
+            return new
+        raise AssertionError(    # pragma: no cover - payload-less blocks
+            "block with no payload in any tier")  # are dropped eagerly
 
     # ------------------------------------------------------------------
     # block access
@@ -358,6 +807,21 @@ class BlockStore:
              qualifier: str) -> Optional[DeviceBlock]:
         """Current-version block without touching recency (identity tests)."""
         return self._blocks.peek(self.key_of(region, family, qualifier))
+
+    def _claim_prefetch(self, key: BlockKey, owner_index: Optional[int]
+                        ) -> Optional[Tuple[DeviceBlock, bool, bool]]:
+        """Pop a completed prefetch record for ``key`` so THIS fetch
+        reports the classification the background promotion earned —
+        per-query transfer/gather oracles attribute the work to the query
+        that consumed it, exactly as if it had fetched synchronously."""
+        rec = self._prefetched.pop(key, None)
+        if rec is None:
+            return None
+        blk = rec[0]
+        if blk.device is None or blk.device_index != owner_index:
+            return None              # stale (e.g. rebalanced since): discard
+        self._blocks.get(key)        # the claim is a use: refresh recency
+        return rec
 
     def fetch(
         self,
@@ -377,9 +841,19 @@ class BlockStore:
         ``reused`` means no host→device transfer happened; ``gathered`` means
         the table was re-read.  ``not reused`` implies a transfer, so every
         fetch is exactly one of reused / transferred.
+
+        Reads walk the tier chain transparently: a block whose host copy
+        was demoted re-materializes from its spill file (mmap) or device
+        copy before use, and a completed background prefetch of the key is
+        claimed here with its original classification.
         """
         with self._lock:
             key = self.key_of(region, family, qualifier)
+            if to_device is not None:
+                rec = self._claim_prefetch(key, owner_index)
+                if rec is not None:
+                    self.stats.inc(prefetch_hits=1)
+                    return rec
             blk = self._blocks.get(key)
             gathered = False
             if blk is None:
@@ -392,32 +866,48 @@ class BlockStore:
                 )
                 gathered = True
                 self.stats.inc(gathers=1)
+                self._put_and_charge(key, blk)
             if to_device is None:
                 # host-only fallback: every layout build re-ships the whole
                 # assembled array, so no block is ever device-"reused" — a
                 # content hit only avoids the table re-read.  Classifying
                 # each fetch as transferred keeps payload_bytes_transferred
                 # honest about what actually crosses host→device here.
-                if gathered:
-                    self._blocks.put(key, blk)
-                else:
+                if not gathered:
                     self.stats.inc(hits=1)
+                blk = self._ensure_host(key, blk)
                 self.stats.inc(transfers=1)
+                self._enforce_tiers()
                 return blk, False, gathered
 
             if blk.device is not None and blk.device_index == owner_index:
                 self.stats.inc(hits=1)
                 return blk, True, False
-            # fresh gather, or a rebalance moved the region: (re-)commit the
-            # host copy to its current owner.  COW: a re-homed cached block
-            # is replaced, not mutated — older consumers keep the old one.
+            blk = self._ensure_host(key, blk)
+            if (self.device_budget is not None
+                    and blk.nbytes > self.device_budget):
+                # larger than the whole device tier: committing would only
+                # demote it straight back, so serve the fold host-side.
+                # Classified as transferred (the payload still moves into
+                # the fold), keeping gather ⟹ transfer intact.
+                self.stats.inc(host_serves=1)
+                self._enforce_tiers()
+                return blk, False, gathered
+            # fresh gather, a rebalance moved the region, or the device
+            # payload was demoted: (re-)commit the host copy to its current
+            # owner.  COW: a re-homed cached block is replaced, not mutated
+            # — older consumers keep the old one.
+            cached = self._blocks.peek(key)
+            prev = self._block_charges(cached) if cached is not None \
+                else (0, 0, 0)
             if blk.device is not None:
                 blk = dataclasses.replace(blk)
             blk.device = to_device(blk.host, owner_index)
             blk.device_index = owner_index
             blk.device_nbytes = int(getattr(blk.device, "nbytes", blk.nbytes))
             self.stats.inc(transfers=1)
-            self._blocks.put(key, blk)
+            self._put_and_charge(key, blk, prev)
+            self._enforce_tiers()
             return blk, False, gathered
 
     def fetch_host(
@@ -431,12 +921,17 @@ class BlockStore:
         retrieve path.  Returns ``(block, gathered)``; a later :meth:`fetch`
         for the fold path commits the same block to its owner device, so
         retrieve-heavy workloads and folds share one gather per content.
-        """
+
+        Tier-aware: a host copy demoted to disk is served back as a
+        read-only mmap view of its spill file; one demoted all the way out
+        re-gathers from the table (loss-free)."""
         with self._lock:
             key = self.key_of(region, family, qualifier)
             blk = self._blocks.get(key)
             if blk is not None:
                 self.stats.inc(hits=1)
+                blk = self._ensure_host(key, blk)
+                self._enforce_tiers()
                 return blk, False
             host = np.ascontiguousarray(gather_host())
             host.flags.writeable = False
@@ -446,8 +941,82 @@ class BlockStore:
                 nbytes=int(host.nbytes), host=host,
             )
             self.stats.inc(gathers=1, host_reads=1)
-            self._blocks.put(key, blk)
+            if self._blocks.put(key, blk):
+                self._charge(host=blk.nbytes)
+            self._enforce_tiers()
             return blk, True
+
+    # ------------------------------------------------------------------
+    # background prefetch (tier promotion overlapped with folds)
+    # ------------------------------------------------------------------
+
+    @property
+    def prefetch_enabled(self) -> bool:
+        return self._prefetch_workers > 0 and not self._closed
+
+    def _ensure_prefetch_pool(self) -> ThreadPoolExecutor:
+        if self._prefetch_pool is None:
+            self._prefetch_pool = ThreadPoolExecutor(
+                max_workers=self._prefetch_workers,
+                thread_name_prefix="blockstore-prefetch")
+        return self._prefetch_pool
+
+    def prefetch(self, region: Region, family: str, qualifier: str,
+                 owner_index: Optional[int],
+                 to_device: Optional[Callable[[np.ndarray, Optional[int]],
+                                              Any]]) -> bool:
+        """Schedule background promotion of a lower-tier-resident block to
+        its owner device; returns whether a job was enqueued.
+
+        Promotion only: a block the store has never gathered is left to the
+        query's own fetch (so table-read accounting stays with the epoch's
+        first reader, and no table access ever races a mutation).  The
+        completed ``(block, reused, gathered)`` record is claimed by the
+        next :meth:`fetch` of the key — concurrent coalesced queries share
+        one promotion through the in-flight single-flight set."""
+        if not self.prefetch_enabled or to_device is None:
+            return False
+        with self._lock:
+            key = self.key_of(region, family, qualifier)
+            blk = self._blocks.peek(key)
+            if blk is None or (blk.device is not None
+                               and blk.device_index == owner_index):
+                return False
+            if (self.device_budget is not None
+                    and blk.nbytes > self.device_budget):
+                return False         # can never be device-resident
+            if key in self._prefetch_inflight or key in self._prefetched:
+                return False
+            self._prefetch_inflight.add(key)
+            pool = self._ensure_prefetch_pool()
+        pool.submit(self._prefetch_job, key, region, family, qualifier,
+                    owner_index, to_device)
+        return True
+
+    def _prefetch_job(self, key: BlockKey, region: Region, family: str,
+                      qualifier: str, owner_index: Optional[int],
+                      to_device) -> None:
+        try:
+            with self._lock:
+                if self._closed:
+                    return
+                if self.key_of(region, family, qualifier) != key:
+                    return           # superseded by a mutation meanwhile
+                if self._blocks.peek(key) is None:
+                    return           # evicted meanwhile: nothing to promote
+                rec = self.fetch(region, family, qualifier, owner_index,
+                                 gather_host=_never_gather,
+                                 to_device=to_device)
+                if not rec[1]:       # a transfer actually happened
+                    self._prefetched[key] = rec
+                    while len(self._prefetched) > self.PREFETCH_RECORDS:
+                        self._prefetched.popitem(last=False)
+                    self.stats.inc(prefetches=1)
+        except Exception:            # pragma: no cover - promotion is
+            pass                     # best-effort; the query path recovers
+        finally:
+            with self._lock:
+                self._prefetch_inflight.discard(key)
 
     # ------------------------------------------------------------------
     # fold partials (the compute-side cache of the block-granular engine)
@@ -496,19 +1065,105 @@ class BlockStore:
             if self._partials.pop(key) is not None:
                 self._unindex_partial(key)
 
+    def _on_partial_evict(self, key: Tuple, value) -> None:
+        """Partial-cache eviction hook (fires under both the LRU and —
+        because every ``_partials`` insert runs inside a store compound op
+        — the store lock): demote to the disk tier when spill is enabled
+        and the oracle prefers a disk round-trip to a re-fold, else
+        unindex (the partial is gone and will re-fold)."""
+        if self.spill_dir is not None and not self._closed:
+            src = self._blocks.peek(key[0])
+            block_nbytes = src.nbytes if src is not None else 0
+            if self.cost_model.should_spill_partial(
+                    _payload_nbytes(value), block_nbytes):
+                try:
+                    self._spill_partial(key, value)
+                    return
+                except Exception:    # pragma: no cover - fall through to
+                    pass             # the lossy path on any I/O failure
+        self._unindex_partial(key)
+
+    def _spill_partial(self, key: Tuple, value) -> None:
+        # lazy import: mapreduce imports this module at load time, and the
+        # flatten helper needs jax (which blockstore otherwise avoids)
+        from repro.core.mapreduce import partial_to_host
+        leaves, treedef = partial_to_host(value)
+        path = self._new_spill_path("part", ".npz")
+        np.savez(path, *leaves)
+        sz = int(os.path.getsize(path))
+        old = self._spilled_partials.pop(key, None)
+        if old is not None:          # re-spill: replace the stale file
+            _unlink(old[0])
+            self._charge(disk=-old[1])
+        self._spilled_partials[key] = (path, sz, treedef)
+        self._charge(disk=sz)
+        self.stats.inc(partial_spills=1)
+        self._enforce_disk_if_bounded()
+
+    def _discard_spilled_record(self, key: Tuple) -> bool:
+        """Remove a spilled-partial file WITHOUT unindexing — for callers
+        that keep the key servable (fresh re-fold, RAM promotion)."""
+        rec = self._spilled_partials.pop(key, None)
+        if rec is None:
+            return False
+        _unlink(rec[0])
+        self._charge(disk=-rec[1])
+        return True
+
+    def _drop_spilled_partial(self, key: Tuple) -> None:
+        if self._discard_spilled_record(key):
+            self._unindex_partial(key)
+
     def get_partial(self, key: Tuple):
         p = self._partials.get(key)
         if p is not None:
             self.stats.inc(partial_hits=1)
-        return p
+            return p
+        with self._lock:
+            rec = self._spilled_partials.pop(key, None)
+            if rec is None:
+                return None
+            path, sz, treedef = rec
+            from repro.core.mapreduce import partial_from_host
+            try:
+                with np.load(path) as z:
+                    leaves = [z[f"arr_{i}"] for i in range(len(z.files))]
+                value = partial_from_host(leaves, treedef)
+            except Exception:        # pragma: no cover - corrupt spill:
+                self._charge(disk=-sz)       # treat as a plain miss
+                self._unindex_partial(key)
+                _unlink(path)
+                return None
+            self._charge(disk=-sz)
+            _unlink(path)
+            self.stats.inc(partial_hits=1, partial_spill_reads=1)
+            # promote back into the RAM cache WITHOUT re-counting a fold or
+            # re-indexing (the spilled entry stayed indexed); byte pressure
+            # may demote something else — or re-spill this one — via the
+            # eviction hook
+            self._partials.put(key, value)
+            return value
 
     def put_partial(self, key: Tuple, value) -> None:
         with self._lock:
             self.stats.inc(folds=1)
-            if key not in self._partials:
+            if key in self._spilled_partials:
+                # a fresh fold supersedes the spilled copy; discard the
+                # file but KEEP the index entry (the key stays counted
+                # once, now by the RAM copy)
+                self._discard_spilled_record(key)
+            elif key not in self._partials:
                 k = self._partial_rid_version(key)
                 self._partial_index[k] = self._partial_index.get(k, 0) + 1
             self._partials.put(key, value)
+
+    def peek_partial(self, key: Tuple) -> bool:
+        """Whether a partial is servable (RAM or spilled) without touching
+        recency or stats — the prefetch planner's probe."""
+        if self._partials.peek(key) is not None:
+            return True
+        with self._lock:
+            return key in self._spilled_partials
 
     def has_partials(self, rid: int) -> bool:
         """Any cached partial for the region's current content (a reuse
@@ -549,6 +1204,10 @@ class BlockStore:
 
     def clear_partials(self) -> None:
         with self._lock:
+            # a wholesale clear DISCARDS — detach the spill records first
+            # so the LRU clear (which fires no on_evict) matches them
+            for key in list(self._spilled_partials):
+                self._drop_spilled_partial(key)
             self._partials.clear()
             self._partial_index.clear()
             self._gids.clear()
@@ -559,34 +1218,61 @@ class BlockStore:
         re-fold losslessly on next use.  Benchmarks use this to time the
         cold-data regime without rebuilding sessions."""
         with self._lock:
-            self._blocks.clear()
+            for k in self._blocks.keys():
+                self._drop_block(k)
             self.clear_partials()
+            self._prefetched.clear()
 
     @property
     def partial_count(self) -> int:
         return len(self._partials)
+
+    @property
+    def spilled_partial_count(self) -> int:
+        with self._lock:
+            return len(self._spilled_partials)
 
     # ------------------------------------------------------------------
     # diagnostics
     # ------------------------------------------------------------------
 
     @property
-    def cap(self) -> int:
+    def cap(self) -> Optional[int]:
         return self._blocks.cap
 
     def __len__(self) -> int:
         return len(self._blocks)
 
     def resident_nbytes(self) -> int:
-        """Physical bytes the store pins: host copies plus committed device
-        copies (which may be fold-bucket padded beyond the logical size)."""
-        return sum(b.nbytes + b.device_nbytes for b in self._blocks.values())
+        """Physical bytes the store pins in RAM/HBM, summed **per payload
+        actually held**: the host copy counts iff present (and a real copy,
+        not an mmap view of a spill file), the device copy iff committed.
+        Pre-tiering this summed ``nbytes + device_nbytes`` unconditionally,
+        over-reporting every single-payload block (host-only after a device
+        demotion, or device-only commits whose host side was demoted).
+        Disk-tier bytes pin no memory — read ``tier_bytes()['disk']``."""
+        total = 0
+        for b in self._blocks.values():
+            if b.host is not None and not b.host_mmap:
+                total += b.nbytes
+            if b.device is not None:
+                total += b.device_nbytes
+        return total
+
+    def tier_bytes(self) -> Dict[str, int]:
+        """Point-in-time per-tier resident-byte gauges."""
+        s = self.stats.snapshot()
+        return {"device": s.device_bytes, "host": s.host_bytes,
+                "disk": s.disk_bytes}
 
     def describe(self) -> str:
         s = self.stats
+        t = self.tier_bytes()
         return (f"BlockStore({len(self)}/{self.cap} blocks, "
-                f"{self.resident_nbytes()} bytes; {s.hits} hits, "
-                f"{s.gathers} gathers, {s.transfers} transfers, "
-                f"{self.evictions} evictions; "
+                f"dev={t['device']}B host={t['host']}B disk={t['disk']}B; "
+                f"{s.hits} hits, {s.gathers} gathers, {s.transfers} "
+                f"transfers, {self.evictions} evictions; "
+                f"{s.demotions} demotions, {s.spills} spills, "
+                f"{s.spill_reads} spill reads; "
                 f"{self.partial_count} partials, {s.partial_hits} partial "
                 f"hits, {s.folds} folds)")

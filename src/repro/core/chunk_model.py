@@ -224,17 +224,39 @@ def tpu_chunk_params(
     hbm_bw: float = 819e9,
     ici_bw: float = 50e9,
     flops: float = 197e12,
+    disk_bw_r: Optional[float] = None,
+    disk_bw_w: Optional[float] = None,
 ) -> ChunkModelParams:
     """TPU v5e translation of Table 2 (see DESIGN.md §2).
 
     disk → HBM, network → ICI, machine → chip.  The per-chunk compute is a
     memory-bound streaming mean: ``avg(η) ≈ η·row_bytes / HBM_bw`` plus a
     fixed kernel-dispatch overhead; the MXU term is negligible for adds.
+
+    The spill term: ``alpha`` (the paper's unbuffered-output ratio) is the
+    fraction of the dataset that does NOT fit in the fleet's stats budget
+    (``mem × n_devices``) — 0 exactly when everything is resident, which is
+    what the old hard-coded ``alpha=0.0`` silently assumed.  When the
+    spilled fraction is nonzero, reads/writes of spilled data go to real
+    disk, so ``v_disc_r/w`` become the harmonic blend of HBM and disk
+    bandwidth weighted by the spilled fraction (``disk_bw_r/w`` default to
+    HBM speed for backwards compatibility, i.e. an infinitely fast spill
+    device).
     """
     dispatch = 5e-6  # per-chunk kernel launch/loop overhead (s)
 
     def avg_fn(eta: float) -> float:
         return eta * row_bytes / hbm_bw + dispatch
+
+    mem = hbm_bytes * 0.5         # stats may only claim half of HBM
+    dataset = float(n_img) * float(row_bytes)
+    capacity = mem * n_devices
+    spilled = 0.0 if dataset <= 0 else max(0.0, 1.0 - capacity / dataset)
+
+    def _blend(disk_bw: Optional[float]) -> float:
+        if disk_bw is None or spilled <= 0.0:
+            return hbm_bw
+        return 1.0 / ((1.0 - spilled) / hbm_bw + spilled / disk_bw)
 
     return ChunkModelParams(
         n_img=n_img,
@@ -242,16 +264,97 @@ def tpu_chunk_params(
         size_small=row_bytes,
         size_gen=row_bytes,
         bandwidth=ici_bw,
-        v_disc_r=hbm_bw,
-        v_disc_w=hbm_bw,
-        mem=hbm_bytes * 0.5,      # stats may only claim half of HBM
+        v_disc_r=_blend(disk_bw_r),
+        v_disc_w=_blend(disk_bw_w if disk_bw_w is not None else disk_bw_r),
+        mem=mem,
         core=n_devices,
-        alpha=0.0,                # no spill: partials live in HBM
+        alpha=spilled,            # real spill term: the non-resident fraction
         beta=0.0,                 # colocated: no network loads in map
         wt_init=1e-3,             # dispatch, not a JVM job launch
         wt_end=1e-3,
         avg_fn=avg_fn,
     )
+
+
+# ----------------------------------------------------------------------
+# Tier-placement cost oracle (BlockStore device → host → disk chain)
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TierCostModel:
+    """Cost oracle for the BlockStore's tier chain: should an evicted
+    payload be demoted to the next tier, or dropped and re-derived later?
+
+    Three re-acquisition paths compete, all in seconds per access:
+
+    - **disk read** — ``nbytes / disk_bw_r`` (an mmap'd ``.npy`` page-in);
+      paying ``nbytes / disk_bw_w`` once up front to write the spill file;
+    - **re-fetch** — re-reading the content from the backing table, which
+      in the paper's grid crosses the storage fabric: ``nbytes /
+      refetch_bw`` (the paper's 70 MB/s cluster network by default);
+    - **re-fold** — for partials: stream the whole source block again at
+      ``fold_bw`` plus a dispatch overhead (and re-acquire the block first
+      if it, too, was evicted).
+
+    Rates default to the paper's cluster (§2.4) for the fabric and a
+    commodity local SSD for spill; sessions built from
+    :func:`tpu_chunk_params` pass their own.
+    """
+
+    disk_bw_r: float = 300 * MB    # local spill-file read (mmap page-in)
+    disk_bw_w: float = 200 * MB    # local spill-file write
+    refetch_bw: float = 70 * MB    # backing-table re-read (paper's network)
+    fold_bw: float = 819e9         # fold streaming rate (HBM-bound compute)
+    fold_overhead: float = 5e-6    # per-fold kernel dispatch (s)
+
+    def disk_read_s(self, nbytes: int) -> float:
+        return nbytes / self.disk_bw_r
+
+    def disk_write_s(self, nbytes: int) -> float:
+        return nbytes / self.disk_bw_w
+
+    def refetch_s(self, nbytes: int) -> float:
+        return nbytes / self.refetch_bw
+
+    def refold_s(self, block_nbytes: int) -> float:
+        """Re-deriving a lost partial: worst case re-acquires the source
+        block over the fabric, then streams it through the fold."""
+        return (self.refetch_s(block_nbytes)
+                + block_nbytes / self.fold_bw + self.fold_overhead)
+
+    def should_spill_block(self, nbytes: int) -> bool:
+        """Spill a host payload iff the write amortizes within two future
+        accesses — i.e. ``write + read <= 2 × refetch``.  With default
+        rates local disk beats the storage fabric, so blocks spill; a
+        deployment whose table is faster than its scratch disk drops the
+        payload and re-gathers instead."""
+        if nbytes <= 0:
+            return False
+        return (self.disk_write_s(nbytes) + self.disk_read_s(nbytes)
+                <= 2.0 * self.refetch_s(nbytes))
+
+    def should_spill_partial(self, partial_nbytes: int,
+                             block_nbytes: int) -> bool:
+        """Spill an evicted partial iff its disk round-trip undercuts
+        re-folding the source block (partials are tiny accumulators, so
+        this is almost always a win)."""
+        if partial_nbytes <= 0:
+            return False
+        return (self.disk_write_s(partial_nbytes)
+                + self.disk_read_s(partial_nbytes)
+                <= self.refold_s(max(block_nbytes, partial_nbytes)))
+
+    @classmethod
+    def from_params(cls, params: ChunkModelParams,
+                    disk_bw_r: float = 300 * MB,
+                    disk_bw_w: float = 200 * MB) -> "TierCostModel":
+        """Derive the oracle from a chunk-model parameterization: the
+        table re-read crosses ``params.bandwidth`` (network for the
+        paper's cluster, ICI for the TPU translation); folds stream at the
+        model's read rate."""
+        return cls(disk_bw_r=disk_bw_r, disk_bw_w=disk_bw_w,
+                   refetch_bw=params.bandwidth, fold_bw=params.v_disc_r)
 
 
 #: A representative TPU parameterization (5,153 rows of 20 MB on 256 chips).

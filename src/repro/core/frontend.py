@@ -187,6 +187,11 @@ class _Task:
     future: Future
     t_submit: float
     flight_key: Optional[Tuple] = None
+    # resolution claim: exactly ONE of _finish / _fail / _abandon settles
+    # the task (guarded by the frontend's open lock), so a sync caller
+    # abandoning a timed-out query and the executor finishing the same
+    # flight can race without double-counting or double-resolving
+    done: bool = False
 
 
 class GridFrontend:
@@ -241,6 +246,9 @@ class GridFrontend:
         self._open = 0                     # admitted, not yet resolved
         self._open_lock = threading.Lock()
         self._closed = False
+        # the task group an executor thread is currently serving — the
+        # fold gate reads it to re-check deadlines mid-execution
+        self._exec_tls = threading.local()
 
         # pin one bound-method object: attribute access mints a fresh
         # bound method each time, so install/uninstall must share it
@@ -260,11 +268,17 @@ class GridFrontend:
                deadline: Optional[float] = None) -> Future:
         """Admit one plan; returns a Future of ``(results, RunReport)``.
 
-        ``deadline`` is a relative budget in seconds: a query still
-        waiting when it expires resolves with :class:`QueryTimeoutError`.
+        ``deadline`` is a relative budget in seconds, enforced while
+        queued, at dispatch, and at every fold-gate entry during
+        execution: an expired query resolves with
+        :class:`QueryTimeoutError` instead of running to completion.
         Raises :class:`FrontendOverloadedError` when the open-query window
         (``max_pending``) is full.
         """
+        return self._submit(plan, eta=eta, deadline=deadline).future
+
+    def _submit(self, plan: GridQuery, *, eta: Optional[int],
+                deadline: Optional[float]) -> _Task:
         if self._closed:
             raise RuntimeError("frontend is closed")
         with self._open_lock:
@@ -293,24 +307,44 @@ class GridFrontend:
                 self.stats.inc(coalesce_hits=1)
                 leader.add_done_callback(
                     lambda lf, t=task: self._resolve_from_leader(t, lf))
-                return fut
+                return task
 
         with self._queue_cond:
             self._queue.append(task)
             depth = len(self._queue)
             self._queue_cond.notify()
         self.stats.imax(queue_depth_peak=depth)
-        return fut
+        return task
 
     def query(self, plan: GridQuery, *, eta: Optional[int] = None,
               timeout: Optional[float] = None) -> Tuple[Any, RunReport]:
-        """Synchronous convenience: ``submit`` + wait."""
-        fut = self.submit(plan, eta=eta, deadline=timeout)
+        """Synchronous convenience: ``submit`` + wait.
+
+        A timed-out wait ABANDONS the task — it is resolved (once) with
+        :class:`QueryTimeoutError`, counted as a timeout, its flight is
+        released so later submissions re-execute instead of chaining onto
+        a doomed leader, and an in-flight execution serving only this
+        query aborts at its next fold-gate entry rather than running to
+        completion."""
+        task = self._submit(plan, eta=eta, deadline=timeout)
         try:
-            return fut.result(timeout=timeout)
+            return task.future.result(timeout=timeout)
         except _FutureTimeout:
+            self._abandon(task)
             raise QueryTimeoutError(
                 f"query not served within {timeout}s") from None
+
+    def _abandon(self, task: _Task) -> None:
+        """The client stopped waiting: settle the task as a timeout if
+        nothing else settled it first (the claim in ``_fail`` makes the
+        race with a concurrently finishing execution single-winner)."""
+        with self._queue_cond:
+            try:
+                self._queue.remove(task)
+            except ValueError:
+                pass                  # already dispatched (or a follower)
+        self._fail(task, QueryTimeoutError("abandoned by caller"),
+                   timeout=True)
 
     # --- mutating verbs (writer side) ---------------------------------
 
@@ -402,9 +436,13 @@ class GridFrontend:
     # ------------------------------------------------------------------
 
     def _run_group(self, tasks: List[_Task]) -> None:
+        # dispatch-time deadline re-check: a query that expired while
+        # queued (or was abandoned by its caller) must not start executing
         now = time.monotonic()
         live: List[_Task] = []
         for t in tasks:
+            if t.done:
+                continue               # abandoned while queued: settled
             if t.deadline is not None and now > t.deadline:
                 self._fail(t, QueryTimeoutError(
                     "deadline passed while queued"), timeout=True)
@@ -412,10 +450,12 @@ class GridFrontend:
                 live.append(t)
         if not live:
             return
+        self._exec_tls.tasks = live
         try:
             if len(live) == 1:
                 t = live[0]
                 with self._rwlock.read():
+                    self.session.prefetch_plan(t.plan)
                     out = self.session._execute_plan(t.plan, eta=t.eta)
                 self._finish(t, out)
                 return
@@ -428,6 +468,8 @@ class GridFrontend:
             merged = live[0].plan._fork(programs=programs)
             self.stats.inc(batch_merges=1, batched_queries=len(live))
             with self._rwlock.read():
+                # one promotion sweep serves every coalesced member
+                self.session.prefetch_plan(merged)
                 results, report = self.session._execute_plan(
                     merged, eta=live[0].eta)
             for t, off, k in offsets:
@@ -435,6 +477,26 @@ class GridFrontend:
         except BaseException as e:     # noqa: BLE001 — resolve every future
             for t in live:
                 self._fail(t, e)
+        finally:
+            self._exec_tls.tasks = None
+
+    def _check_deadline(self) -> None:
+        """Mid-execution deadline gate, called from ``_fold_gate`` entry
+        (i.e. between per-block folds): once EVERY task this thread is
+        serving has expired or been abandoned, abort the execution with
+        :class:`QueryTimeoutError` instead of running the remaining
+        blocks for nobody.  While any member is still live, execution
+        continues — expired members settle individually at resolution."""
+        tasks = getattr(self._exec_tls, "tasks", None)
+        if not tasks:
+            return
+        now = time.monotonic()
+        for t in tasks:
+            if t.done:
+                continue
+            if t.deadline is None or now <= t.deadline:
+                return
+        raise QueryTimeoutError("deadline passed during execution")
 
     @staticmethod
     def _split(results: Any, off: int, k: int) -> Any:
@@ -458,23 +520,34 @@ class GridFrontend:
 
     # --- future resolution --------------------------------------------
 
+    def _claim(self, task: _Task) -> bool:
+        """Settle-once guard: the first of finish / fail / abandon wins;
+        everyone else observes ``done`` and walks away."""
+        with self._open_lock:
+            if task.done:
+                return False
+            task.done = True
+            self._open -= 1
+            return True
+
     def _finish(self, task: _Task, out: Tuple[Any, RunReport]) -> None:
+        if not self._claim(task):
+            return                # abandoned meanwhile: already settled
         self.stats.record_latency(time.monotonic() - task.t_submit)
         self.stats.inc(served=1)
-        with self._open_lock:
-            self._open -= 1
         task.future.set_result(out)
 
     def _fail(self, task: _Task, exc: BaseException,
               timeout: bool = False) -> None:
+        if not self._claim(task):
+            return
         # a failed flight must not be replayed to later submissions
         if task.flight_key is not None:
             with self._flights_lock:
                 if self._flights.peek(task.flight_key) is task.future:
                     self._flights.pop(task.flight_key)
+        timeout = timeout or isinstance(exc, QueryTimeoutError)
         self.stats.inc(failed=1, timeouts=1 if timeout else 0)
-        with self._open_lock:
-            self._open -= 1
         task.future.set_exception(exc)
 
     def _resolve_from_leader(self, task: _Task, leader: Future) -> None:
@@ -498,7 +571,13 @@ class GridFrontend:
         ``coalesced=True`` — the session accounts those as partial
         reuses, so ``BlockStore.stats.folds`` counts each distinct
         partial exactly once however many queries needed it.
+
+        The gate doubles as the mid-execution deadline checkpoint: it
+        runs once per cold block, so an execution whose every consumer
+        has expired (or abandoned) aborts here — between blocks, never
+        mid-fold — instead of folding the rest of the table for nobody.
         """
+        self._check_deadline()
         with self._gate_lock:
             entry = self._gate_inflight.get(pkey)
             leader = entry is None
@@ -516,7 +595,10 @@ class GridFrontend:
                 with self._gate_lock:
                     self._gate_inflight.pop(pkey, None)
             return entry.result, False
-        entry.event.wait()
+        # follower: bounded waits so an expired query stops following a
+        # slow leader instead of blocking past its own deadline
+        while not entry.event.wait(timeout=0.05):
+            self._check_deadline()
         if entry.exc is not None:
             raise entry.exc
         self.stats.inc(partial_coalesce_hits=1)

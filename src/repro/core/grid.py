@@ -79,6 +79,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
+import tempfile
 from typing import (
     Any, Callable, Dict, FrozenSet, List, Mapping, Optional, Sequence, Set,
     Tuple,
@@ -97,6 +99,7 @@ from repro.core.balancer import (
 from repro.core.blockstore import (
     AtomicStats, BlockStore, DeviceBlock, LRUCache,
 )
+from repro.core.chunk_model import TierCostModel
 from repro.core.mapreduce import MapReduceEngine, MapReduceProgram, MapReduceStats
 from repro.core.placement import Placement
 from repro.core.plan import GridQuery, prefix_range
@@ -321,11 +324,18 @@ class GridSession:
         payload_qualifier: str = "data",
         index_family: str = INDEX_FAMILY,
         plan_cache_cap: int = 64,
-        block_cache_cap: int = 256,
-        partial_cache_cap: int = 1024,
+        block_cache_cap: Optional[int] = 256,
+        partial_cache_cap: Optional[int] = 1024,
         compact_gather_threshold: float = 0.05,
         fold_impl: str = "pallas",
         fold_interpret: bool = False,
+        device_budget: Optional[int] = None,
+        host_budget: Optional[int] = None,
+        disk_budget: Optional[int] = None,
+        partial_budget: Optional[int] = None,
+        spill_dir: Optional[str] = None,
+        cost_model: Optional["TierCostModel"] = None,
+        prefetch: bool = True,
     ):
         self.table = table
         self.mesh = (mesh if mesh is not None
@@ -359,8 +369,28 @@ class GridSession:
                                       fold_impl=fold_impl,
                                       fold_interpret=fold_interpret)
         self.metrics = SessionMetrics()
-        self.blocks = BlockStore(cap=block_cache_cap,
-                                 partial_cap=partial_cache_cap)
+        #: tiered storage (device HBM → host RAM → disk): any byte budget
+        #: bounds its tier; ``spill_dir`` enables the disk tier (a
+        #: session-private temp dir is created — and removed on
+        #: :meth:`close` — when a host/disk budget is set without one).
+        #: ``cost_model`` tunes the spill-vs-refetch-vs-refold oracle;
+        #: ``prefetch`` runs the background promotion worker that overlaps
+        #: ``device_put`` of lower-tier blocks with in-flight folds.
+        tiering = any(b is not None for b in
+                      (device_budget, host_budget, disk_budget,
+                       partial_budget)) or spill_dir is not None
+        if spill_dir is None and (host_budget is not None
+                                  or disk_budget is not None):
+            spill_dir = os.path.join(
+                tempfile.gettempdir(),
+                f"grid-spill-{os.getpid()}-{id(self):x}")
+        self.blocks = BlockStore(
+            cap=block_cache_cap, partial_cap=partial_cache_cap,
+            device_budget=device_budget, host_budget=host_budget,
+            disk_budget=disk_budget, partial_budget=partial_budget,
+            spill_dir=spill_dir, cost_model=cost_model,
+            prefetch_workers=1 if (prefetch and tiering) else 0)
+        self._tiering = tiering
 
         self._epoch = 0
         # content-addressed finalized results: (program, partial keys, ...)
@@ -1038,6 +1068,23 @@ class GridSession:
         fold_impl = self.engine.fold_path(program, spec.dtype, n_groups)
         impl_sig = fold_impl if fold_impl != "xla" else ""
         acct = _BlockAccount()
+        if (self._tiering and self._devices is not None
+                and self.blocks.prefetch_enabled):
+            # overlap host→device promotion of upcoming cold blocks with
+            # the folds of earlier ones: every work item whose partial
+            # isn't servable and whose block sits in a lower tier gets a
+            # background device_put; the fold loop below claims each
+            # completed promotion with its original classification
+            for w in work:
+                if w.selected == 0 or w.owner is None:
+                    continue
+                pk = self.blocks.partial_key(
+                    w.region, family, qualifier, prog_key, w.mask_sig,
+                    eta, group_sig=gsig, impl=impl_sig)
+                if self.blocks.peek_partial(pk):
+                    continue
+                self.blocks.prefetch(w.region, family, qualifier, w.owner,
+                                     self._put_block)
         partials: List[Any] = []
         owners: List[Optional[int]] = []
         p_total = p_reused = rows_folded = local_rows = chunks = 0
@@ -1286,6 +1333,53 @@ class GridSession:
 
     def _mesh_shape(self) -> Tuple[Tuple[str, int], ...]:
         return tuple((a, self.mesh.shape[a]) for a in self.mesh.axis_names)
+
+    def close(self) -> None:
+        """Release tier resources (the prefetch worker, every spill file,
+        and the session-owned spill dir).  The session stays usable for
+        in-memory work afterwards; cached lower-tier content re-gathers
+        from the table on next use."""
+        self.blocks.close()
+
+    def __enter__(self) -> "GridSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def prefetch_plan(self, plan: GridQuery) -> int:
+        """Kick background device promotion for the blocks a plan is about
+        to fold; returns the number of promotions enqueued.
+
+        Promotion-only and best-effort: a region whose block was demoted
+        out of the device tier (or never committed) gets its
+        ``device_put`` overlapped with the folds of earlier blocks in the
+        same pass; regions that still have cached partials for their
+        current content are skipped (a warm query folds nothing, so
+        promoting its payload would waste HBM).  A no-op unless tiering is
+        configured — flat unbounded sessions already keep every block
+        device-resident.  Callers must hold whatever epoch isolation they
+        run queries under (the frontend calls this inside its read lock).
+        """
+        if (not self._tiering or self._devices is None
+                or not self.blocks.prefetch_enabled):
+            return 0
+        columns = plan.columns or ((self.payload_family,
+                                    self.payload_qualifier),)
+        regions = self.table.regions.prune(plan.start, plan.stop)
+        alloc = self.placement.alloc
+        issued = 0
+        for region in regions:
+            if self.blocks.has_partials(region.rid):
+                continue
+            owner = self._node_index.get(alloc.get(region.rid))
+            if owner is None:
+                continue
+            for family, qualifier in columns:
+                if self.blocks.prefetch(region, family, qualifier, owner,
+                                        self._put_block):
+                    issued += 1
+        return issued
 
     def imbalance(self) -> float:
         """Max relative deviation of node work from #CPU×MIPS-proportional."""

@@ -63,6 +63,22 @@ from repro.utils import shard_map_compat
 PyTree = Any
 
 
+def partial_to_host(partial: PyTree) -> Tuple[List[np.ndarray], Any]:
+    """Flatten a fold partial into host numpy leaves + its treedef — the
+    serialization half of the BlockStore's partial spill tier.  Device
+    leaves are pulled to host; the treedef round-trips the pytree shape
+    through :func:`partial_from_host` without pickling the structure."""
+    leaves, treedef = jax.tree_util.tree_flatten(partial)
+    return [np.asarray(leaf) for leaf in leaves], treedef
+
+
+def partial_from_host(leaves: Sequence[np.ndarray], treedef: Any) -> PyTree:
+    """Rebuild a spilled fold partial from its host leaves.  Leaves stay
+    numpy — the merge paths accept host arrays and JAX converts on first
+    use, so promotion costs no eager ``device_put``."""
+    return jax.tree_util.tree_unflatten(treedef, list(leaves))
+
+
 class MapReduceProgram:
     """An associative summary-statistic program (a commutative monoid).
 

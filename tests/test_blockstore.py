@@ -75,9 +75,48 @@ class TestLRUCache:
         c.put("c", 3)
         assert "a" not in c
 
-    def test_cap_must_be_positive(self):
+    def test_cap_semantics(self):
+        # negative caps are errors; 0 disables; None is unbounded
         with pytest.raises(ValueError):
-            LRUCache(0)
+            LRUCache(-1)
+        with pytest.raises(ValueError):
+            LRUCache(None, max_bytes=-1)
+        disabled = LRUCache(0)
+        assert not disabled.put("a", 1)
+        assert len(disabled) == 0 and disabled.evictions == 1
+        unbounded = LRUCache(None)
+        for i in range(10_000):
+            unbounded.put(i, i)
+        assert len(unbounded) == 10_000 and unbounded.evictions == 0
+
+    def test_byte_budget_evicts_before_insert(self):
+        c = LRUCache(None, max_bytes=100, weigher=lambda v: v)
+        assert c.put("a", 60) and c.put("b", 30)
+        assert c.nbytes == 90
+        # inserting 30 must evict 'a' FIRST (never 120 bytes resident)
+        assert c.put("c", 30)
+        assert "a" not in c and c.nbytes == 60
+
+    def test_oversized_entry_never_admitted(self):
+        evicted = []
+        c = LRUCache(None, max_bytes=100, weigher=lambda v: v,
+                     on_evict=lambda k, v: evicted.append(k))
+        c.put("cold", 40)
+        assert not c.put("huge", 500)
+        # the oversized entry is reported evicted; the colder resident
+        # survives untouched
+        assert evicted == ["huge"]
+        assert "cold" in c and c.nbytes == 40
+
+    def test_replace_preserves_recency(self):
+        c = LRUCache(2)
+        c.put("a", 1)
+        c.put("b", 2)
+        assert c.replace("a", 10)       # 'a' stays coldest
+        c.put("c", 3)
+        assert "a" not in c and c.peek("b") == 2
+        assert not c.replace("zz", 0)   # absent keys are not inserted
+        assert "zz" not in c
 
 
 class TestBlockStoreVersions:

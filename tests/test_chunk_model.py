@@ -9,6 +9,7 @@ from repro.core.chunk_model import (
     ChunkModelParams,
     PAPER_PARAMS,
     TPU_V5E_PARAMS,
+    TierCostModel,
     tpu_chunk_params,
 )
 
@@ -103,3 +104,76 @@ class TestTPUTranslation:
         t_paper = ChunkModel(PAPER_PARAMS).optimal_eta()[1]
         t_tpu = ChunkModel(TPU_V5E_PARAMS).optimal_eta()[1]
         assert t_tpu < t_paper / 100
+
+
+class TestSpillTerm:
+    """tpu_chunk_params' alpha is the real non-resident fraction, not a
+    hard-coded zero, and spilled traffic blends HBM with disk bandwidth."""
+
+    FIT = dict(n_img=1000, row_bytes=1e6, n_devices=64)      # 1 GB << fleet
+    SPILL = dict(n_img=4000, row_bytes=8e6, n_devices=2)     # 32 GB vs 16 GB
+
+    def test_fitting_dataset_keeps_alpha_zero(self):
+        p = tpu_chunk_params(**self.FIT)
+        assert p.alpha == 0.0
+
+    def test_fitting_dataset_ignores_disk_rates(self):
+        # back-compat: when nothing spills, disk bandwidth is irrelevant
+        fast = tpu_chunk_params(**self.FIT)
+        slow = tpu_chunk_params(**self.FIT, disk_bw_r=1e6, disk_bw_w=1e6)
+        assert (fast.v_disc_r, fast.v_disc_w, fast.alpha) == (
+            slow.v_disc_r, slow.v_disc_w, slow.alpha)
+
+    def test_oversubscribed_dataset_spills_exact_fraction(self):
+        # mem budget = half of 16 GB HBM x 2 devices = 16 GB; dataset 32 GB
+        p = tpu_chunk_params(**self.SPILL)
+        assert p.alpha == pytest.approx(0.5)
+
+    def test_blend_is_harmonic_and_monotone_in_disk_rate(self):
+        hbm = tpu_chunk_params(**self.SPILL)          # no disk arg: HBM-speed
+        mid = tpu_chunk_params(**self.SPILL, disk_bw_r=300e6)
+        slow = tpu_chunk_params(**self.SPILL, disk_bw_r=30e6)
+        assert slow.v_disc_r < mid.v_disc_r < hbm.v_disc_r
+        # harmonic blend at alpha=0.5, exact
+        expect = 1.0 / (0.5 / 819e9 + 0.5 / 300e6)
+        assert mid.v_disc_r == pytest.approx(expect)
+
+    def test_spill_term_raises_wall_time(self):
+        resident = tpu_chunk_params(**self.FIT, disk_bw_r=300e6)
+        spilling = tpu_chunk_params(**self.SPILL, disk_bw_r=300e6)
+        eta = 16
+        # alpha > 0 adds disc read+write work per generated chunk
+        assert ChunkModel(spilling).wall_time(eta)["total"] > 0
+        assert resident.alpha == 0.0 and spilling.alpha > 0.0
+
+
+class TestTierCostModel:
+    def test_defaults_prefer_disk_over_refabric(self):
+        # local SSD round-trip beats two trips over the 70 MB/s fabric
+        cm = TierCostModel()
+        assert cm.should_spill_block(10_000_000)
+        assert not cm.should_spill_block(0)
+
+    def test_slow_disk_prefers_regather(self):
+        cm = TierCostModel(disk_bw_r=1e6, disk_bw_w=1e6)
+        assert not cm.should_spill_block(10_000_000)
+
+    def test_partials_spill_when_refold_is_expensive(self):
+        cm = TierCostModel()
+        # a 1 KB accumulator standing in for a 20 MB source block
+        assert cm.should_spill_partial(1_000, 20_000_000)
+        assert not cm.should_spill_partial(0, 20_000_000)
+
+    def test_refold_includes_refetch_and_stream(self):
+        cm = TierCostModel(refetch_bw=70e6, fold_bw=819e9,
+                           fold_overhead=5e-6)
+        n = 20_000_000
+        assert cm.refold_s(n) == pytest.approx(
+            n / 70e6 + n / 819e9 + 5e-6)
+
+    def test_from_params_uses_model_rates(self):
+        cm = TierCostModel.from_params(TPU_V5E_PARAMS)
+        assert cm.refetch_bw == TPU_V5E_PARAMS.bandwidth
+        assert cm.fold_bw == TPU_V5E_PARAMS.v_disc_r
+        # ICI-speed refetch beats any SSD: nothing should spill
+        assert not cm.should_spill_block(10_000_000)

@@ -19,6 +19,8 @@ seeded random walk that needs no third-party package — the walk covers the
 Hypothesis isn't installed.
 """
 
+import os
+
 import numpy as np
 import pytest
 
@@ -47,17 +49,23 @@ SPLIT_BYTES = int(8 * 13e6)
 
 
 class DifferentialDriver:
-    """One live GridSession + its NumPy oracle + the op vocabulary."""
+    """One live GridSession + its NumPy oracle + the op vocabulary.
 
-    def __init__(self):
+    ``session_kwargs`` overrides session construction — the spill-pressure
+    variants pass tiny per-tier byte budgets plus a tmpdir spill dir, so
+    the SAME op vocabulary and oracles run with blocks and partials
+    constantly demoting through the tier chain."""
+
+    def __init__(self, session_kwargs=None):
         self.table = make_mip_table(
             payload_shape=PAYLOAD,
             extra_index_columns=[ColumnSpec("age", (), np.float32),
                                  ColumnSpec("sex", (), np.int8)],
             split_policy=HierarchicalSplitPolicy(max_region_bytes=SPLIT_BYTES),
         )
-        self.session = GridSession(self.table, default_eta=4,
-                                   block_cache_cap=32)
+        kwargs = dict(default_eta=4, block_cache_cap=32)
+        kwargs.update(session_kwargs or {})
+        self.session = GridSession(self.table, **kwargs)
         # oracle: rowkey -> {column: value}; ALL query semantics re-derived
         # from this dict with plain numpy
         self.rows = {}
@@ -295,10 +303,37 @@ class DifferentialDriver:
         assert self.session.epoch >= self.last_epoch
         assert self.table.num_rows == len(self.rows)
         self.table.check_invariants()
-        s = self.session.blocks.stats
-        # a gather is followed by a device transfer (fold path) or is a
-        # host-only retrieve read (fetch_host) — never silently dropped
-        assert s.hits + s.transfers + s.host_reads >= s.gathers
+        blocks = self.session.blocks
+        s = blocks.stats.snapshot()
+        # a gather is followed by a device transfer (fold path), a
+        # host-only retrieve read (fetch_host), or a host-side serve of a
+        # block too big for the device tier — never silently dropped
+        assert s.hits + s.transfers + s.host_reads + s.host_serves \
+            >= s.gathers
+        # per-tier byte gauges must equal a from-scratch recount of what
+        # the blocks actually hold, across every evict/demote/promote/
+        # rebalance interleaving the walk produced
+        dev = host = disk = 0
+        for b in blocks._blocks.values():
+            if b.device is not None:
+                dev += b.device_nbytes
+            if b.host is not None and not b.host_mmap:
+                host += b.nbytes
+            if b.spill_path is not None:
+                disk += b.spill_nbytes
+        for _path, sz, _td in blocks._spilled_partials.values():
+            disk += sz
+        assert s.device_bytes == dev, (s.device_bytes, dev)
+        assert s.host_bytes == host, (s.host_bytes, host)
+        assert s.disk_bytes == disk, (s.disk_bytes, disk)
+        # budgets are hard ceilings between operations
+        if blocks.device_budget is not None:
+            assert dev <= blocks.device_budget
+        if blocks.host_budget is not None:
+            assert host <= blocks.host_budget
+        if blocks.disk_budget is not None:
+            assert disk <= blocks.disk_budget
+        assert blocks.resident_nbytes() == dev + host
 
     OPS = ("upload", "upload_overwrite", "remove_key", "remove_range",
            "rebalance", "query_full", "query_prefix", "query_predicate",
@@ -353,6 +388,41 @@ def test_differential_random_walk(walk_seed):
     # the walk must actually have exercised the reuse machinery
     assert drv.session.blocks.stats.hits > 0
     assert drv.session.blocks.stats.gathers > 0
+
+
+def _spill_kwargs(tmpdir, device_budget=256):
+    """Byte budgets tiny enough that the walk's blocks/partials constantly
+    demote: payload blocks run tens-to-hundreds of bytes (24 B/row), so a
+    256 B device tier host-serves big blocks and demotes the rest, 2 KiB
+    of host RAM forces disk spill, and a bounded disk tier exercises
+    spill-file drops.  ``prefetch=False`` keeps the walk single-threaded
+    so ``check_state``'s exact gauge recount can't race a background
+    promotion (the prefetcher has its own deterministic tests)."""
+    return dict(device_budget=device_budget, host_budget=2048,
+                disk_budget=1 << 20, partial_budget=4096,
+                spill_dir=str(tmpdir.join("spill")), prefetch=False)
+
+
+@pytest.mark.parametrize("walk_seed", [0, 1])
+def test_differential_random_walk_under_spill(walk_seed, tmpdir):
+    """The SAME differential walk with forced tier pressure: every query
+    result stays exact and every per-tier byte gauge stays truthful while
+    blocks and partials demote/promote through the chain."""
+    drv = DifferentialDriver(session_kwargs=_spill_kwargs(tmpdir))
+    rng = np.random.default_rng(walk_seed)
+    ops = list(DifferentialDriver.OPS)
+    weights = np.array([4, 2, 2, 1, 1, 2, 3, 2, 2, 2, 1], dtype=float)
+    weights /= weights.sum()
+    # CI's memory-constrained leg lengthens the walk (SPILL_WALK_STEPS)
+    # to churn many more demote/spill/promote transitions per seed
+    for _ in range(int(os.environ.get("SPILL_WALK_STEPS", "40"))):
+        op = rng.choice(ops, p=weights)
+        drv.apply(str(op), int(rng.integers(0, 2**31)))
+    s = drv.session.blocks.stats.snapshot()
+    # the pressure must actually have moved payloads between tiers
+    assert s.demotions + s.spills + s.spill_drops + s.host_serves > 0, s
+    drv.session.close()
+    assert drv.session.blocks.tier_bytes()["disk"] == 0
 
 
 # ----------------------------------------------------------------------
@@ -415,6 +485,25 @@ if HAVE_HYPOTHESIS:
         def state_consistent(self):
             self.drv.check_state()
 
+    class SpillDifferentialMachine(GridDifferentialMachine):
+        """The same rule vocabulary under forced tier pressure: tiny byte
+        budgets + a private spill dir, so Hypothesis shrinks any
+        interleaving where demote/promote/spill breaks a result or a
+        gauge."""
+
+        def __init__(self):
+            RuleBasedStateMachine.__init__(self)
+            import tempfile
+            self._spill_root = tempfile.mkdtemp(prefix="grid-diff-spill-")
+            self.drv = DifferentialDriver(session_kwargs=dict(
+                device_budget=256, host_budget=2048, disk_budget=1 << 20,
+                partial_budget=4096, spill_dir=self._spill_root,
+                prefetch=False))
+
+        def teardown(self):
+            self.drv.session.close()
+
     # step count / example budget come from the ci/dev profiles registered
     # in conftest.py — no override here, or the profile knob goes dead
     TestGridDifferential = GridDifferentialMachine.TestCase
+    TestGridDifferentialSpill = SpillDifferentialMachine.TestCase

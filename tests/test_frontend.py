@@ -328,6 +328,46 @@ class TestAdmission:
                               timeout=120)
             assert int(val) == 64
 
+    def test_deadline_enforced_during_execution(self):
+        """A query whose deadline passes AFTER dispatch aborts at the
+        next fold-gate entry instead of running to completion."""
+        s = make_session()
+        with GridFrontend(s, workers=1, tick_ms=0.0) as fe:
+            doomed = fe.submit(self._slow_plan(s, delay=0.6),
+                               deadline=0.15)
+            with pytest.raises(QueryTimeoutError):
+                doomed.result(timeout=120)
+            assert fe.stats.timeouts == 1
+            assert fe.stats.served == 0
+            # aborted before folding a single block
+            assert s.blocks.stats.folds == 0
+            # the flight was released: the identical plan re-executes
+            val, _ = fe.query(self._slow_plan(s, delay=0.0), timeout=120)
+            assert int(val) == 64
+            assert fe.stats.served == 1 and fe.stats.timeouts == 1
+
+    def test_timed_out_sync_query_is_abandoned_once(self):
+        """query(timeout=) that gives up must settle its task exactly
+        once (as a timeout) and release the flight — the old behaviour
+        left the task running and counted it ``served``."""
+        s = make_session()
+        with GridFrontend(s, workers=1, tick_ms=0.0) as fe:
+            blocker = fe.submit(self._slow_plan(s))
+            plan = s.scan().map(CountProgram()).reduce()
+            with pytest.raises(QueryTimeoutError):
+                fe.query(plan, timeout=0.05)
+            assert fe.stats.timeouts == 1
+            blocker.result(timeout=120)
+            # resubmitting is NOT coalesced onto the abandoned flight
+            val, _ = fe.query(s.scan().map(CountProgram()).reduce(),
+                              timeout=120)
+            assert int(val) == 64
+            snap = fe.stats.snapshot()
+            assert snap.served == 2          # blocker + the retry
+            assert snap.failed == 1          # the abandoned task, once
+            assert snap.timeouts == 1
+            assert snap.served + snap.failed == snap.submitted
+
     def test_submit_after_close_raises(self):
         s = make_session()
         fe = GridFrontend(s, workers=1)

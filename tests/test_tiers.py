@@ -1,0 +1,398 @@
+"""Tiered BlockStore: byte budgets, demotion/promotion through the
+device → host → disk chain, partial spill, honest residency accounting,
+and the background prefetcher.
+
+The differential harness (test_differential.py) runs whole mutation/query
+walks under tier pressure; this file pins each tier mechanism
+deterministically — budgets are hard ceilings, demotions are loss-free,
+spilled partials serve without re-folding, and a prefetched promotion is
+claimed with its original classification.
+"""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.blockstore import BlockStore, DeviceBlock
+from repro.core.chunk_model import TierCostModel
+from repro.core.grid import GridSession
+from repro.core.regions import HierarchicalSplitPolicy, Region
+from repro.core.stats import CountProgram, MeanProgram, VarianceProgram
+from repro.core.table import ColumnSpec, make_mip_table
+
+PAYLOAD = (3, 4)
+ROW_BYTES = int(np.prod(PAYLOAD)) * 4          # float32 payload row
+
+
+def make_table(groups=tuple("abcdefghij"), per=4, seed=0):
+    """10 presplit regions × 4 rows: payload blocks of 192 B each, so
+    byte budgets in the hundreds force every tier transition."""
+    rng = np.random.default_rng(seed)
+    t = make_mip_table(
+        payload_shape=PAYLOAD,
+        extra_index_columns=[ColumnSpec("age", (), np.float32),
+                             ColumnSpec("sex", (), np.int8)],
+        split_policy=HierarchicalSplitPolicy(max_region_bytes=10**18),
+        presplit_keys=list(groups)[1:],
+    )
+    keys = [f"{g}{i:04d}" for g in groups for i in range(per)]
+    n = len(keys)
+    t.upload(keys, {
+        "img": {"data": rng.normal(size=(n,) + PAYLOAD).astype(np.float32)},
+        "idx": {"size": rng.integers(6_000_000, 20_000_001, n),
+                "age": rng.uniform(4, 80, n).astype(np.float32),
+                "sex": rng.integers(0, 2, n).astype(np.int8)}})
+    return t
+
+
+def gauge_truth(blocks):
+    """Recompute per-tier bytes from what the blocks actually hold."""
+    dev = host = disk = 0
+    for b in blocks._blocks.values():
+        if b.device is not None:
+            dev += b.device_nbytes
+        if b.host is not None and not b.host_mmap:
+            host += b.nbytes
+        if b.spill_path is not None:
+            disk += b.spill_nbytes
+    for _p, sz, _t in blocks._spilled_partials.values():
+        disk += sz
+    return {"device": dev, "host": host, "disk": disk}
+
+
+def assert_gauges_exact(blocks):
+    assert blocks.tier_bytes() == gauge_truth(blocks)
+
+
+def region(rid=1):
+    return Region(rid, bytes([64 + rid]), bytes([65 + rid]))
+
+
+def fake_device(host, owner):
+    """A stand-in device commit: a padded copy with its own nbytes."""
+    dev = np.ascontiguousarray(host)
+    return dev
+
+
+# ----------------------------------------------------------------------
+# store-level tier mechanics
+# ----------------------------------------------------------------------
+
+class TestTierMechanics:
+    def _store(self, tmpdir, **kw):
+        kw.setdefault("spill_dir", str(tmpdir.join("spill")))
+        return BlockStore(cap=None, **kw)
+
+    def _fill(self, bs, n=6, rows=100):
+        data = {}
+        for rid in range(1, n + 1):
+            data[rid] = (np.arange(rows, dtype=np.float64) * rid)
+            blk, reused, gathered = bs.fetch(
+                region(rid), "img", "data", owner_index=0,
+                gather_host=lambda rid=rid: data[rid],
+                to_device=fake_device)
+            assert gathered and not reused
+        return data
+
+    def test_device_budget_demotes_coldest(self, tmpdir):
+        bs = self._store(tmpdir, device_budget=2 * 800)
+        self._fill(bs)                         # 6 × 800 B device copies
+        assert bs.stats.device_bytes <= 1600
+        assert bs.stats.demotions == 4
+        assert_gauges_exact(bs)
+        # demoted content survives one tier down (host), not re-gathered
+        blk, reused, gathered = bs.fetch(
+            region(1), "img", "data", owner_index=0,
+            gather_host=lambda: 1 / 0, to_device=fake_device)
+        assert not gathered
+        bs.close()
+
+    def test_host_budget_spills_and_mmap_promotes(self, tmpdir):
+        bs = self._store(tmpdir, host_budget=3 * 800)
+        data = self._fill(bs)
+        assert bs.stats.host_bytes <= 2400
+        assert bs.stats.spills >= 1
+        assert os.listdir(bs.spill_dir)
+        assert_gauges_exact(bs)
+        # a spilled block re-serves as an mmap view, bytes exact
+        blk, gathered = bs.fetch_host(region(1), "img", "data",
+                                      gather_host=lambda: 1 / 0)
+        assert not gathered and blk.host_mmap
+        np.testing.assert_array_equal(np.asarray(blk.host), data[1])
+        assert bs.stats.spill_reads >= 1
+        assert_gauges_exact(bs)
+        bs.close()
+
+    def test_disk_budget_drops_spill_files(self, tmpdir):
+        bs = self._store(tmpdir, host_budget=800, disk_budget=2000)
+        self._fill(bs)
+        assert bs.stats.disk_bytes <= 2000
+        assert bs.stats.spill_drops >= 1
+        assert_gauges_exact(bs)
+        # a fully dropped block re-gathers losslessly
+        calls = []
+        blk, gathered = bs.fetch_host(
+            region(1), "img", "data",
+            gather_host=lambda: calls.append(1) or
+            np.arange(100, dtype=np.float64))
+        assert blk.rows == 100
+        bs.close()
+
+    def test_no_spill_dir_drops_instead(self, tmpdir):
+        bs = BlockStore(cap=None, host_budget=800, spill_dir=None)
+        self._fill(bs)
+        assert bs.stats.spills == 0 and bs.stats.spill_drops >= 1
+        assert bs.stats.host_bytes <= 800
+        assert_gauges_exact(bs)
+
+    def test_cost_model_can_refuse_spill(self, tmpdir):
+        # a disk so slow the oracle prefers re-gathering: drops, no files
+        slow = TierCostModel(disk_bw_r=1.0, disk_bw_w=1.0)
+        bs = self._store(tmpdir, host_budget=800, cost_model=slow)
+        self._fill(bs)
+        assert bs.stats.spills == 0 and bs.stats.spill_drops >= 1
+        assert not os.listdir(bs.spill_dir)
+        bs.close()
+
+    def test_oversized_block_never_enters_device_tier(self, tmpdir):
+        bs = self._store(tmpdir, device_budget=100)   # < one 800 B block
+        blk, reused, gathered = bs.fetch(
+            region(1), "img", "data", owner_index=0,
+            gather_host=lambda: np.arange(100, dtype=np.float64),
+            to_device=fake_device)
+        # served host-side, classified transferred (gather ⟹ transfer)
+        assert gathered and not reused and blk.device is None
+        assert bs.stats.host_serves == 1 and bs.stats.device_bytes == 0
+        assert_gauges_exact(bs)
+        bs.close()
+
+    def test_resident_nbytes_per_payload(self, tmpdir):
+        bs = self._store(tmpdir)
+        blk, *_ = bs.fetch(
+            region(1), "img", "data", owner_index=0,
+            gather_host=lambda: np.arange(100, dtype=np.float64),
+            to_device=fake_device)
+        # both payloads held: host + device
+        assert bs.resident_nbytes() == blk.nbytes + blk.device_nbytes
+        # drop the device copy: residency falls to the host copy alone
+        # (the pre-tiering accounting kept double-charging here)
+        bs.device_budget = 0
+        bs._enforce_tiers()
+        assert bs.resident_nbytes() == blk.nbytes
+        # spill the host copy: nothing pinned in RAM, content on disk
+        bs.host_budget = 0
+        bs._enforce_tiers()
+        assert bs.resident_nbytes() == 0
+        assert bs.tier_bytes()["disk"] > 0
+        assert_gauges_exact(bs)
+        bs.close()
+
+    def test_touch_unlinks_superseded_spill_files(self, tmpdir):
+        bs = self._store(tmpdir, host_budget=800)
+        self._fill(bs)
+        assert os.listdir(bs.spill_dir)
+        bs.touch(range(1, 7), epoch=1)
+        assert bs.tier_bytes()["disk"] == 0
+        assert not os.listdir(bs.spill_dir)
+        assert_gauges_exact(bs)
+        bs.close()
+
+    def test_close_removes_owned_spill_dir(self, tmpdir):
+        bs = self._store(tmpdir, host_budget=800)
+        self._fill(bs)
+        spill = bs.spill_dir
+        assert os.path.isdir(spill)
+        bs.close()
+        assert not os.path.isdir(spill)
+        # close is idempotent and leaves the store usable in-memory
+        bs.close()
+        blk, g = bs.fetch_host(region(9), "img", "data",
+                               gather_host=lambda: np.zeros(4))
+        assert g
+
+
+class TestPartialSpill:
+    def test_evicted_partial_demotes_and_serves_without_refold(self, tmpdir):
+        bs = BlockStore(cap=None, partial_cap=2,
+                        spill_dir=str(tmpdir.join("s")))
+        keys = []
+        for rid in range(1, 6):
+            k = bs.partial_key(region(rid), "img", "data",
+                               ("mean",), "full", 4)
+            keys.append(k)
+            bs.put_partial(k, {"count": np.float64(rid),
+                               "sums": np.arange(3.) * rid})
+        assert bs.partial_count == 2 and bs.spilled_partial_count == 3
+        folds_before = bs.stats.folds
+        # a spilled partial promotes back exactly, WITHOUT counting a fold
+        p = bs.get_partial(keys[0])
+        assert p is not None and float(p["count"]) == 1.0
+        np.testing.assert_array_equal(p["sums"], np.arange(3.))
+        assert bs.stats.folds == folds_before
+        assert bs.stats.partial_spill_reads == 1
+        # the index treats spilled partials as servable throughout
+        for rid in range(1, 6):
+            assert bs.has_partials(rid)
+        assert_gauges_exact(bs)
+        bs.close()
+
+    def test_refold_supersedes_spilled_copy(self, tmpdir):
+        bs = BlockStore(cap=None, partial_cap=1,
+                        spill_dir=str(tmpdir.join("s")))
+        k1 = bs.partial_key(region(1), "img", "data", ("m",), "full", 4)
+        k2 = bs.partial_key(region(2), "img", "data", ("m",), "full", 4)
+        bs.put_partial(k1, {"v": np.float64(1)})
+        bs.put_partial(k2, {"v": np.float64(2)})   # k1 evicts -> spills
+        assert bs.spilled_partial_count == 1
+        bs.put_partial(k1, {"v": np.float64(10)})  # fresh fold supersedes
+        assert bs.get_partial(k1)["v"] == 10.0
+        assert bs.has_partials(1) and bs.has_partials(2)
+        assert_gauges_exact(bs)
+        bs.close()
+
+
+# ----------------------------------------------------------------------
+# session-level: queries stay exact while everything demotes
+# ----------------------------------------------------------------------
+
+class TestTieredSession:
+    def test_query_exact_at_10x_device_budget(self, tmpdir):
+        """The acceptance scenario: the dataset is 10× the device byte
+        budget, every query answers exactly, and no tier ever exceeds
+        its budget."""
+        t = make_table()                       # 10 regions × 192 B blocks
+        total = 40 * ROW_BYTES                 # 1920 B of payload
+        with GridSession(t, default_eta=4, device_budget=total // 10,
+                         host_budget=total // 2,
+                         spill_dir=str(tmpdir.join("s")),
+                         prefetch=False) as s:
+            expect = t.column("img", "data").astype(np.float64)
+            for _ in range(3):                 # cold, warm, warm
+                (mean, var, count), rep = (
+                    s.scan().map(MeanProgram()).map(VarianceProgram())
+                    .map(CountProgram()).reduce().collect())
+                rep.query.check_block_invariant()
+                rep.query.check_partial_invariant()
+                assert int(count) == 40
+                np.testing.assert_allclose(np.asarray(mean),
+                                           expect.mean(0), atol=1e-4)
+                np.testing.assert_allclose(
+                    np.asarray(var["var"]), expect.var(0), atol=2e-3)
+                tb = s.blocks.tier_bytes()
+                assert tb["device"] <= total // 10
+                assert tb["host"] <= total // 2
+                assert_gauges_exact(s.blocks)
+            # warm repeats folded nothing: partials carried the answer
+            assert rep.query.rows_folded == 0
+            st = s.blocks.stats.snapshot()
+            assert st.demotions + st.host_serves > 0
+
+    def test_mutation_under_spill_stays_exact(self, tmpdir):
+        t = make_table()
+        with GridSession(t, default_eta=4, device_budget=400,
+                         host_budget=800, spill_dir=str(tmpdir.join("s")),
+                         prefetch=False) as s:
+            s.run(MeanProgram())
+            s.upload(["a9999"], {
+                "img": {"data": np.full((1,) + PAYLOAD, 5.0, np.float32)},
+                "idx": {"size": np.array([10_000_000]),
+                        "age": np.array([30.0], np.float32),
+                        "sex": np.array([1], np.int8)}})
+            res, rep = s.run(MeanProgram())
+            rep.query.check_block_invariant()
+            np.testing.assert_allclose(
+                np.asarray(res),
+                t.column("img", "data").astype(np.float64).mean(0),
+                atol=1e-4)
+            assert_gauges_exact(s.blocks)
+
+    def test_auto_spill_dir_created_and_removed(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4, host_budget=800, prefetch=False)
+        try:
+            s.run(MeanProgram())
+            spill = s.blocks.spill_dir
+            assert spill is not None and os.path.isdir(spill)
+        finally:
+            s.close()
+        assert not os.path.isdir(spill)
+
+    def test_partial_budget_spills_partials_not_results(self, tmpdir):
+        t = make_table()
+        with GridSession(t, default_eta=4, partial_budget=256,
+                         spill_dir=str(tmpdir.join("s")),
+                         prefetch=False) as s:
+            r1, _ = s.run(MeanProgram())
+            assert s.blocks.stats.partial_spills > 0
+            # plan-result cache cleared: the repeat must reconstruct the
+            # answer from (mostly spilled) partials without re-folding
+            s._results.clear()
+            folds = s.blocks.stats.folds
+            r2, rep = s.run(MeanProgram())
+            np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+            assert s.blocks.stats.folds == folds
+            assert rep.query.rows_folded == 0
+
+
+# ----------------------------------------------------------------------
+# background prefetch
+# ----------------------------------------------------------------------
+
+def drain_prefetch(blocks, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        with blocks._lock:
+            if not blocks._prefetch_inflight:
+                return
+        time.sleep(0.005)
+    raise AssertionError("prefetch jobs did not drain")
+
+
+class TestPrefetch:
+    def test_promotion_claimed_with_original_classification(self, tmpdir):
+        t = make_table()
+        with GridSession(t, default_eta=4, device_budget=2 * 512,
+                         host_budget=10**6,
+                         spill_dir=str(tmpdir.join("s"))) as s:
+            s.run(MeanProgram())               # commit + demote most blocks
+            # partials (and the plan-result cache) make every region
+            # warm; clear both so the next query actually fetches
+            # (prefetch skips partial-covered work)
+            s.blocks.clear_partials()
+            s._results.clear()
+            plan = s.scan().map(MeanProgram()).reduce()
+            issued = s.prefetch_plan(plan)
+            assert issued > 0
+            drain_prefetch(s.blocks)
+            st = s.blocks.stats.snapshot()
+            assert st.prefetches > 0
+            res, rep = plan.collect()
+            rep.query.check_block_invariant()
+            rep.query.check_partial_invariant()
+            # the query claimed promoted blocks instead of re-transferring
+            assert s.blocks.stats.prefetch_hits > 0
+            np.testing.assert_allclose(
+                np.asarray(res),
+                t.column("img", "data").astype(np.float64).mean(0),
+                atol=1e-4)
+            drain_prefetch(s.blocks)
+            assert_gauges_exact(s.blocks)
+
+    def test_prefetch_never_gathers(self, tmpdir):
+        t = make_table()
+        with GridSession(t, default_eta=4, device_budget=2 * 512,
+                         spill_dir=str(tmpdir.join("s"))) as s:
+            plan = s.scan().map(MeanProgram()).reduce()
+            # nothing cached yet: promotion-only prefetch must issue ZERO
+            # jobs (the table is never read outside a query's own fetch)
+            assert s.prefetch_plan(plan) == 0
+            assert s.blocks.stats.gathers == 0
+
+    def test_flat_session_prefetch_is_noop(self):
+        t = make_table()
+        s = GridSession(t, default_eta=4)      # no budgets: no tiering
+        plan = s.scan().map(MeanProgram()).reduce()
+        assert s.prefetch_plan(plan) == 0
+        assert not s.blocks.prefetch_enabled
