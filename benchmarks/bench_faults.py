@@ -1,0 +1,176 @@
+"""Fault-tolerance overhead bench: what does the safety net cost when
+nothing goes wrong — and how fast is recovery when something does?
+
+Two interleaved arms run the SAME spill-pressure query workload:
+
+- **plain** — no injector: the zero-cost fast path (``faults is None``
+  guards every instrumented site).
+- **armed** — an injector with a never-firing rule plus the retry
+  policy: every ``fire()`` call, retry wrapper, and spill CRC
+  write/verify is live, but no fault ever triggers.
+
+``fault_overhead_ratio`` (gated, lower is better, ≤ 1.05) is the
+median of per-round paired armed/plain wall ratios: each round times
+both arms back to back, so machine drift cancels inside the pair
+instead of letting one arm's lucky minimum skew an unpaired min/min.
+
+Recovery walls (informational, absolute seconds): re-deriving every
+payload block after a full spill-tier corruption, and re-homing after a
+permanent owner loss (single-device: host-degraded serving).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.faults import FaultInjector, FaultRule, RetryPolicy
+from repro.core.grid import GridSession
+from repro.core.stats import MeanProgram, VarianceProgram
+from repro.core.table import make_mip_table
+
+N_REGIONS = 12
+PER_REGION = 8
+PAYLOAD = (32, 32)                      # 4 KB float32 rows
+ROW_BYTES = int(np.prod(PAYLOAD)) * 4
+
+
+def _make_table(seed=0):
+    rng = np.random.default_rng(seed)
+    groups = [f"g{i:02d}" for i in range(N_REGIONS)]
+    t = make_mip_table(payload_shape=PAYLOAD, presplit_keys=groups[1:])
+    keys = [f"{g}x{i:04d}" for g in groups for i in range(PER_REGION)]
+    n = len(keys)
+    t.upload(keys, {
+        "img": {"data": rng.normal(size=(n,) + PAYLOAD).astype(np.float32)},
+        "idx": {"size": rng.integers(6_000_000, 20_000_001, n)}})
+    return t
+
+
+def _session(t, spill_root, armed: bool):
+    total = N_REGIONS * PER_REGION * ROW_BYTES
+    kw = dict(default_eta=PER_REGION,
+              device_budget=total // 8, host_budget=total // 4,
+              spill_dir=tempfile.mkdtemp(dir=spill_root), prefetch=False)
+    if armed:
+        # a rule that can never fire: the full instrumentation path runs
+        # (site counters, rule scan, retry wrappers, spill CRC), but the
+        # workload itself is fault-free
+        kw["fault_injector"] = FaultInjector(rules=(
+            FaultRule(site="gather", kind="transient", after=10 ** 9),))
+        kw["retry_policy"] = RetryPolicy()
+    return GridSession(t, **kw)
+
+
+def _one_pass(t, spill_root, armed: bool, expect) -> float:
+    """Cold query + partial-less repeat: gathers, folds, demotes, spills,
+    then re-reads spill files — the whole checksummed surface."""
+    s = _session(t, spill_root, armed)
+    try:
+        t0 = time.perf_counter()
+        res, _ = s.run(MeanProgram())
+        jax.block_until_ready(res)
+        s.blocks.clear_partials()
+        s._results.clear()
+        res, _ = s.run(MeanProgram())
+        jax.block_until_ready(res)
+        wall = time.perf_counter() - t0
+        np.testing.assert_allclose(np.asarray(res), expect, atol=1e-4)
+        if armed:
+            assert s.blocks.stats.faults_injected == 0
+    finally:
+        s.close()
+    return wall
+
+
+def _corrupt_recovery(t, spill_root, expect) -> float:
+    """Mangle EVERY spilled payload, then time the lossless re-derive."""
+    s = _session(t, spill_root, armed=True)
+    try:
+        s.run(MeanProgram())
+        spill = s.blocks.spill_dir
+        payloads = [f for f in os.listdir(spill) if f.endswith(".npy")]
+        for f in payloads:
+            p = os.path.join(spill, f)
+            with open(p, "r+b") as fh:
+                fh.seek(os.path.getsize(p) // 2)
+                fh.write(b"\xff\xff\xff\xff")
+        t0 = time.perf_counter()
+        res, _ = s.run(VarianceProgram())
+        jax.block_until_ready(res["var"])
+        wall = time.perf_counter() - t0
+        np.testing.assert_allclose(
+            np.asarray(res["var"]),
+            t.column("img", "data").astype(np.float64).var(0), atol=1e-3)
+        assert s.blocks.stats.spill_corruptions >= len(payloads) > 0
+    finally:
+        s.close()
+    return wall
+
+
+def _quarantine_recovery(t, spill_root, expect) -> float:
+    """Kill the (only local) device after warmup; time the degraded
+    re-fold that the quarantine path serves from host copies."""
+    s = _session(t, spill_root, armed=True)
+    try:
+        s.run(MeanProgram())
+        s.faults.lost_devices.add(0)
+        t0 = time.perf_counter()
+        res, _ = s.run(VarianceProgram())
+        jax.block_until_ready(res["var"])
+        wall = time.perf_counter() - t0
+        assert s.blocks.stats.quarantines == 1
+        np.testing.assert_allclose(
+            np.asarray(res["var"]),
+            t.column("img", "data").astype(np.float64).var(0), atol=1e-3)
+    finally:
+        s.close()
+    return wall
+
+
+def run(smoke: bool = False, verbose: bool = True):
+    t = _make_table()
+    expect = t.column("img", "data").astype(np.float64).mean(0)
+    # paired rounds: each round times plain then armed back to back and
+    # contributes ONE ratio — the ±20% run-to-run wall noise is shared
+    # drift that divides out, so the median ratio is tight enough for a
+    # ±5% gate where an unpaired min/min is not
+    rounds = 5 if smoke else 7
+    spill_root = tempfile.mkdtemp(prefix="bench-faults-")
+    try:
+        # one throwaway pass per arm absorbs jit compilation
+        _one_pass(t, spill_root, armed=False, expect=expect)
+        _one_pass(t, spill_root, armed=True, expect=expect)
+        plain, armed = [], []
+        for _ in range(rounds):          # interleaved: drift hits both arms
+            plain.append(_one_pass(t, spill_root, False, expect))
+            armed.append(_one_pass(t, spill_root, True, expect))
+        corrupt_s = _corrupt_recovery(t, spill_root, expect)
+        quarantine_s = _quarantine_recovery(t, spill_root, expect)
+    finally:
+        shutil.rmtree(spill_root, ignore_errors=True)
+
+    ratios = sorted(a / p for a, p in zip(armed, plain))
+    b = {
+        "rounds": rounds,
+        "plain_wall_s": min(plain),
+        "armed_wall_s": min(armed),
+        "fault_overhead_ratio": ratios[len(ratios) // 2],
+        "corrupt_recovery_wall_s": corrupt_s,
+        "corrupt_recovery_over_plain": corrupt_s / min(plain),
+        "quarantine_recovery_wall_s": quarantine_s,
+    }
+    if verbose:
+        for k, v in b.items():
+            print(f"  {k}: {v}")
+    return b
+
+
+if __name__ == "__main__":
+    run()

@@ -9,7 +9,7 @@ summary EXPERIMENTS.md quotes, and writes one JSON artifact per bench
 
 ``--smoke`` runs every artifact-emitting bench except the table-scheme
 sweep and the roofline (balancer, chunk model, kernels, query pruning,
-blockstore, fold engine, group_by, frontend, tiers) — CI uploads the JSON files from each
+blockstore, fold engine, group_by, frontend, tiers, faults) — CI uploads the JSON files from each
 run and gates headline metrics against ``benchmarks/perf_baselines.json``
 via ``benchmarks/check_regression.py``.
 """
@@ -161,6 +161,19 @@ def run_tiers() -> None:
                    f"spills={b['cold_spills']}"))
 
 
+def run_faults(smoke: bool = True) -> None:
+    from benchmarks import bench_faults
+
+    _run_bench(
+        "faults",
+        "[PR 9] Fault tolerance: armed-injector overhead + recovery walls",
+        lambda: bench_faults.run(smoke=smoke),
+        lambda b: (f"overhead_x={b['fault_overhead_ratio']:.3f};"
+                   f"corrupt_recover_s={b['corrupt_recovery_wall_s']:.2f};"
+                   f"quarantine_recover_s="
+                   f"{b['quarantine_recovery_wall_s']:.2f}"))
+
+
 def run_kernels() -> None:
     from benchmarks import bench_kernels
 
@@ -201,6 +214,7 @@ def main() -> None:
         run_group_by()
         run_frontend(smoke=True)
         run_tiers()
+        run_faults(smoke=True)
         print("\nsmoke benchmarks complete")
         return
 
@@ -215,6 +229,7 @@ def main() -> None:
     run_group_by()
     run_frontend(smoke=False)
     run_tiers()
+    run_faults(smoke=False)
     run_kernels()
 
     print("\n--- Roofline (single-pod dry-run artifacts) ---")

@@ -75,10 +75,12 @@ consistent point-in-time copy for benches and tests.
 
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import os
 import shutil
 import threading
+import zlib
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, Iterable, List, Optional, Set, Tuple
@@ -86,6 +88,8 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core.chunk_model import TierCostModel
+from repro.core.faults import (FaultInjector, RetryPolicy,
+                               SpillCorruptionError)
 from repro.core.regions import Region
 
 #: (region signature, family, qualifier, version) — the content address.
@@ -101,6 +105,28 @@ def _unlink(path: Optional[str]) -> None:
         os.unlink(path)
     except OSError:
         pass
+
+
+def _sidecar(path: str) -> str:
+    """The CRC manifest that travels with every spill file."""
+    return path + ".crc"
+
+
+def _unlink_spill(path: Optional[str]) -> None:
+    """Delete a spill payload together with its CRC sidecar."""
+    if not path:
+        return
+    _unlink(path)
+    _unlink(_sidecar(path))
+
+
+def _crc_file(path: str) -> int:
+    """CRC-32 of a file's bytes, streamed (spill files can be large)."""
+    crc = 0
+    with open(path, "rb") as f:
+        for buf in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(buf, crc)
+    return crc & 0xFFFFFFFF
 
 
 def _payload_nbytes(value: Any) -> int:
@@ -206,6 +232,20 @@ class LRUCache:
         self._on_evict = on_evict
         self._lock = threading.RLock()
         self.evictions = 0
+        self.evict_errors = 0
+
+    def _notify_evict(self, key, value) -> None:
+        """Fire ``on_evict`` without letting a raising hook corrupt the
+        sweep: the entry's own accounting (``nbytes``/``_w``/count) is
+        settled by the caller *before* the callback, so a hook failure is
+        counted and swallowed — the byte gauge stays exact and remaining
+        victims still evict instead of aborting the sweep mid-way."""
+        if self._on_evict is None:
+            return
+        try:
+            self._on_evict(key, value)
+        except Exception:
+            self.evict_errors += 1
 
     def __len__(self) -> int:
         with self._lock:
@@ -246,8 +286,7 @@ class LRUCache:
                 if prev is not _MISSING:
                     self.nbytes -= self._w.pop(key, 0)
                 self.evictions += 1
-                if self._on_evict is not None:
-                    self._on_evict(key, value)
+                self._notify_evict(key, value)
                 return False
             prev = self._d.pop(key, _MISSING)
             if prev is not _MISSING:
@@ -261,8 +300,7 @@ class LRUCache:
                 k, v = self._d.popitem(last=False)
                 self.nbytes -= self._w.pop(k, 0)
                 self.evictions += 1
-                if self._on_evict is not None:
-                    self._on_evict(k, v)
+                self._notify_evict(k, v)
             self._d[key] = value
             if self.max_bytes is not None:
                 self._w[key] = w
@@ -389,6 +427,12 @@ class BlockStoreStats(AtomicStats):
     device_bytes: int = 0   # gauge: committed device payload bytes
     host_bytes: int = 0     # gauge: real (non-mmap) host copies
     disk_bytes: int = 0     # gauge: spill files on disk (blocks + partials)
+    # --- fault tolerance ----------------------------------------------
+    spill_corruptions: int = 0  # spill reads that failed CRC / vanished
+    spill_recoveries: int = 0   # lost spills re-derived (device or table)
+    retries: int = 0        # retry attempts consumed, all sites
+    faults_injected: int = 0    # FaultInjector fires observed via on_fire
+    quarantines: int = 0    # owner devices permanently quarantined
 
 
 def _never_gather() -> np.ndarray:   # pragma: no cover - guarded by callers
@@ -437,7 +481,9 @@ class BlockStore:
                  partial_budget: Optional[int] = None,
                  spill_dir: Optional[str] = None,
                  cost_model: Optional[TierCostModel] = None,
-                 prefetch_workers: int = 1):
+                 prefetch_workers: int = 1,
+                 fault_injector: Optional[FaultInjector] = None,
+                 retry_policy: Optional[RetryPolicy] = None):
         self._closed = False
         self.stats = BlockStoreStats()
         self.device_budget = device_budget
@@ -445,11 +491,21 @@ class BlockStore:
         self.disk_budget = disk_budget
         self.cost_model = cost_model if cost_model is not None \
             else TierCostModel()
+        self._faults = fault_injector
+        self._retry = retry_policy
         self.spill_dir = spill_dir
         self._owns_spill_dir = False
+        self.orphans_swept = 0
         if spill_dir is not None:
             self._owns_spill_dir = not os.path.isdir(spill_dir)
             os.makedirs(spill_dir, exist_ok=True)
+            self.orphans_swept = self._sweep_orphans()
+            if self._owns_spill_dir:
+                # belt under close(): even on abnormal exit (exception,
+                # SIGTERM-handled shutdown) the dir leaves with the
+                # process.  Harmless double-removal after a clean close.
+                atexit.register(shutil.rmtree, spill_dir,
+                                ignore_errors=True)
         self._spill_seq = 0
         # one re-entrant lock serializes every compound cache operation
         # (fetch's get-then-put, the partial index maintenance, touch/drop
@@ -626,7 +682,7 @@ class BlockStore:
         mutation happens inside a compound store operation)."""
         d, h, k = self._block_charges(blk)
         self._charge(device=-d, host=-h, disk=-k)
-        _unlink(blk.spill_path)
+        _unlink_spill(blk.spill_path)
 
     def _drop_block(self, key) -> None:
         """Pop one block and settle its tier charges (the non-LRU removal
@@ -654,6 +710,115 @@ class BlockStore:
         self._spill_seq += 1
         return os.path.join(self.spill_dir,
                             f"{kind}-{self._spill_seq:06d}{suffix}")
+
+    # ------------------------------------------------------------------
+    # checksummed, crash-consistent spill I/O
+    # ------------------------------------------------------------------
+
+    def _sweep_orphans(self) -> int:
+        """Startup crash-consistency sweep of the spill dir: delete
+        half-written ``*.tmp`` files (a crash mid-write; ``os.replace``
+        guarantees the final name is never half-written) and CRC sidecars
+        whose payload is gone (a crash between payload unlink and sidecar
+        unlink).  Returns the number of orphans removed."""
+        try:
+            names = os.listdir(self.spill_dir)
+        except OSError:
+            return 0
+        present = set(names)
+        removed = 0
+        for name in names:
+            full = os.path.join(self.spill_dir, name)
+            if name.endswith(".tmp"):
+                _unlink(full)
+                removed += 1
+            elif name.endswith(".crc") and name[:-4] not in present:
+                _unlink(full)
+                removed += 1
+        return removed
+
+    def _write_spill(self, path: str,
+                     writer: Callable[[Any], None]) -> int:
+        """Crash-consistent spill write: ``writer(file)`` fills a ``.tmp``
+        sibling (an open file object, so numpy does not append its own
+        extension), the CRC manifest is computed from the temp bytes, and
+        ``os.replace`` publishes payload then sidecar atomically — a crash
+        at any point leaves either nothing under the final name or a
+        complete, verifiable pair (plus temps the startup sweep removes).
+        Returns the payload's on-disk size.  Transient injected faults are
+        retried under the store's policy; the final failure propagates so
+        callers fall back to their lossy path."""
+        def attempt() -> int:
+            tmp = path + ".tmp"
+            try:
+                with open(tmp, "wb") as f:
+                    writer(f)
+                crc = _crc_file(tmp)
+                sz = int(os.path.getsize(tmp))
+                os.replace(tmp, path)
+            except BaseException:
+                _unlink(tmp)
+                raise
+            side = _sidecar(path)
+            stmp = side + ".tmp"
+            try:
+                with open(stmp, "w") as f:
+                    f.write(f"{crc:08x} {sz}\n")
+                os.replace(stmp, side)
+            except BaseException:
+                _unlink(stmp)
+                raise
+            if self._faults is not None:
+                # fired after publication so file-mangling fault kinds hit
+                # the real spill file; the CRC check catches them on read
+                self._faults.fire("spill_write", path=path)
+            return sz
+
+        if self._retry is not None:
+            return self._retry.call(
+                attempt, key=path,
+                on_retry=lambda e, a: self.stats.inc(retries=1))
+        return attempt()
+
+    def _verify_spill(self, path: str) -> None:
+        """Check a spill file against its CRC sidecar; raises
+        :class:`SpillCorruptionError` on any mismatch, truncation, or a
+        missing/unreadable file or sidecar."""
+        side = _sidecar(path)
+        try:
+            with open(side, "r") as f:
+                tok = f.read().split()
+            want_crc, want_sz = int(tok[0], 16), int(tok[1])
+        except (OSError, ValueError, IndexError):
+            raise SpillCorruptionError(path, "missing/unreadable sidecar")
+        try:
+            have_sz = os.path.getsize(path)
+        except OSError:
+            raise SpillCorruptionError(path, "spill file missing")
+        if have_sz != want_sz:
+            raise SpillCorruptionError(
+                path, f"size {have_sz} != {want_sz} (truncated?)")
+        if _crc_file(path) != want_crc:
+            raise SpillCorruptionError(path)
+
+    def _read_spill_block(self, path: str) -> Optional[np.ndarray]:
+        """Open one block spill file as a verified read-only mmap.
+        ``None`` means the file is corrupt, truncated, or gone (or
+        transient read faults exhausted their retries) — callers treat
+        that as the tier being empty and recover from the next one."""
+        def attempt():
+            if self._faults is not None:
+                self._faults.fire("spill_read", path=path)
+            self._verify_spill(path)
+            return np.load(path, mmap_mode="r")
+        try:
+            if self._retry is not None:
+                return self._retry.call(
+                    attempt, key=path,
+                    on_retry=lambda e, a: self.stats.inc(retries=1))
+            return attempt()
+        except Exception:
+            return None
 
     # ------------------------------------------------------------------
     # tier enforcement (demotions)
@@ -696,7 +861,9 @@ class BlockStore:
         if blk.host is None and blk.spill_path is None:
             # the device copy is the only one: pull it back to host first,
             # else the content would silently become a table re-read
-            blk = self._ensure_host(key, blk)
+            got = self._ensure_host(key, blk)
+            assert got is not None   # the device copy guarantees a tier
+            blk = got
         new = dataclasses.replace(blk, device=None, device_index=None,
                                   device_nbytes=0)
         self._blocks.replace(key, new)
@@ -715,15 +882,23 @@ class BlockStore:
         if (self.spill_dir is not None and not self._closed
                 and self.cost_model.should_spill_block(blk.nbytes)):
             path = self._new_spill_path("blk", ".npy")
-            np.save(path, np.asarray(blk.host))
-            sz = int(os.path.getsize(path))
-            new = dataclasses.replace(blk, host=None, host_mmap=False,
-                                      spill_path=path, spill_nbytes=sz)
-            self._blocks.replace(key, new)
-            self._charge(host=-blk.nbytes, disk=sz)
-            self.stats.inc(spills=1)
-            self._enforce_disk_if_bounded()
-            return
+            try:
+                sz = self._write_spill(
+                    path, lambda f: np.save(f, np.asarray(blk.host)))
+            except Exception:
+                # spill write failed outright (retries exhausted / disk
+                # error): fall through to the lossy drop path below —
+                # the table stays authoritative either way
+                _unlink_spill(path)
+                sz = None
+            if sz is not None:
+                new = dataclasses.replace(blk, host=None, host_mmap=False,
+                                          spill_path=path, spill_nbytes=sz)
+                self._blocks.replace(key, new)
+                self._charge(host=-blk.nbytes, disk=sz)
+                self.stats.inc(spills=1)
+                self._enforce_disk_if_bounded()
+                return
         # no disk tier below (or the oracle prefers re-gathering): drop the
         # payload; a block left with no payload at all leaves entirely and
         # re-gathers losslessly on next use
@@ -758,7 +933,7 @@ class BlockStore:
     def _drop_spill_file(self, key, blk: DeviceBlock) -> None:
         """Delete one block's spill file (and any mmap view of it); the
         block survives only if another tier still holds the content."""
-        _unlink(blk.spill_path)
+        _unlink_spill(blk.spill_path)
         self._charge(disk=-blk.spill_nbytes)
         keep_host = blk.host is not None and not blk.host_mmap
         new = dataclasses.replace(
@@ -772,26 +947,46 @@ class BlockStore:
     # tier promotion (reads walk down the chain)
     # ------------------------------------------------------------------
 
-    def _ensure_host(self, key, blk: DeviceBlock) -> DeviceBlock:
+    def _ensure_host(self, key, blk: DeviceBlock) -> Optional[DeviceBlock]:
         """Re-materialize ``blk.host`` from the highest tier holding the
-        content: spill file (as a read-only mmap, charged to disk) first,
-        else the device copy (a real RAM copy, charged to host).  Returns
-        the possibly-replaced cache entry."""
+        content: spill file (as a verified read-only mmap, charged to
+        disk) first, else the device copy (a real RAM copy, charged to
+        host).  Returns the possibly-replaced cache entry — or ``None``
+        when the only tier was a spill file that failed its CRC check (or
+        vanished): the record is dropped and the caller re-derives the
+        content losslessly from the table."""
         if blk.host is not None:
             return blk
+        recovering = False
         if blk.spill_path is not None:
-            host = np.load(blk.spill_path, mmap_mode="r")
-            new = dataclasses.replace(blk, host=host, host_mmap=True)
-            self._blocks.replace(key, new)
-            self.stats.inc(spill_reads=1)
-            return new
+            host = self._read_spill_block(blk.spill_path)
+            if host is not None:
+                new = dataclasses.replace(blk, host=host, host_mmap=True)
+                self._blocks.replace(key, new)
+                self.stats.inc(spill_reads=1)
+                return new
+            # corrupt / truncated / deleted spill: detach it and fall
+            # back to the next tier down
+            self.stats.inc(spill_corruptions=1)
+            _unlink_spill(blk.spill_path)
+            self._charge(disk=-blk.spill_nbytes)
+            blk = dataclasses.replace(blk, spill_path=None, spill_nbytes=0)
+            self._blocks.replace(key, blk)
+            recovering = True
         if blk.device is not None:
             host = np.ascontiguousarray(np.asarray(blk.device)[:blk.rows])
             host.flags.writeable = False
             new = dataclasses.replace(blk, host=host, host_mmap=False)
             if self._blocks.replace(key, new):
                 self._charge(host=new.nbytes)
+            if recovering:
+                self.stats.inc(spill_recoveries=1)
             return new
+        if recovering:
+            # no tier left holding the content: drop the record (its
+            # charges are zero by now) and let the caller re-gather
+            self._drop_block(key)
+            return None
         raise AssertionError(    # pragma: no cover - payload-less blocks
             "block with no payload in any tier")  # are dropped eagerly
 
@@ -802,6 +997,22 @@ class BlockStore:
     def key_of(self, region: Region, family: str, qualifier: str) -> BlockKey:
         return (region.signature, family, qualifier,
                 self.version_of(region.rid))
+
+    def _gather_block(self, key: BlockKey, region: Region, family: str,
+                      qualifier: str,
+                      gather_host: Callable[[], np.ndarray]) -> DeviceBlock:
+        """Gather one region column from the table into a fresh host block
+        (the content-miss path, shared with spill-corruption recovery)."""
+        host = np.ascontiguousarray(gather_host())
+        host.flags.writeable = False
+        blk = DeviceBlock(
+            rid=region.rid, family=family, qualifier=qualifier,
+            version=key[3], rows=int(host.shape[0]),
+            nbytes=int(host.nbytes), host=host,
+        )
+        self.stats.inc(gathers=1)
+        self._put_and_charge(key, blk)
+        return blk
 
     def peek(self, region: Region, family: str,
              qualifier: str) -> Optional[DeviceBlock]:
@@ -857,16 +1068,9 @@ class BlockStore:
             blk = self._blocks.get(key)
             gathered = False
             if blk is None:
-                host = np.ascontiguousarray(gather_host())
-                host.flags.writeable = False
-                blk = DeviceBlock(
-                    rid=region.rid, family=family, qualifier=qualifier,
-                    version=key[3], rows=int(host.shape[0]),
-                    nbytes=int(host.nbytes), host=host,
-                )
+                blk = self._gather_block(key, region, family, qualifier,
+                                         gather_host)
                 gathered = True
-                self.stats.inc(gathers=1)
-                self._put_and_charge(key, blk)
             if to_device is None:
                 # host-only fallback: every layout build re-ships the whole
                 # assembled array, so no block is ever device-"reused" — a
@@ -875,7 +1079,14 @@ class BlockStore:
                 # honest about what actually crosses host→device here.
                 if not gathered:
                     self.stats.inc(hits=1)
-                blk = self._ensure_host(key, blk)
+                got = self._ensure_host(key, blk)
+                if got is None:
+                    # spill lost every copy: re-derive from the table
+                    got = self._gather_block(key, region, family,
+                                             qualifier, gather_host)
+                    gathered = True
+                    self.stats.inc(spill_recoveries=1)
+                blk = got
                 self.stats.inc(transfers=1)
                 self._enforce_tiers()
                 return blk, False, gathered
@@ -883,7 +1094,13 @@ class BlockStore:
             if blk.device is not None and blk.device_index == owner_index:
                 self.stats.inc(hits=1)
                 return blk, True, False
-            blk = self._ensure_host(key, blk)
+            got = self._ensure_host(key, blk)
+            if got is None:
+                got = self._gather_block(key, region, family, qualifier,
+                                         gather_host)
+                gathered = True
+                self.stats.inc(spill_recoveries=1)
+            blk = got
             if (self.device_budget is not None
                     and blk.nbytes > self.device_budget):
                 # larger than the whole device tier: committing would only
@@ -930,19 +1147,19 @@ class BlockStore:
             blk = self._blocks.get(key)
             if blk is not None:
                 self.stats.inc(hits=1)
-                blk = self._ensure_host(key, blk)
+                got = self._ensure_host(key, blk)
+                if got is None:
+                    # spill lost every copy: re-derive from the table
+                    got = self._gather_block(key, region, family,
+                                             qualifier, gather_host)
+                    self.stats.inc(host_reads=1, spill_recoveries=1)
+                    self._enforce_tiers()
+                    return got, True
                 self._enforce_tiers()
-                return blk, False
-            host = np.ascontiguousarray(gather_host())
-            host.flags.writeable = False
-            blk = DeviceBlock(
-                rid=region.rid, family=family, qualifier=qualifier,
-                version=key[3], rows=int(host.shape[0]),
-                nbytes=int(host.nbytes), host=host,
-            )
-            self.stats.inc(gathers=1, host_reads=1)
-            if self._blocks.put(key, blk):
-                self._charge(host=blk.nbytes)
+                return got, False
+            blk = self._gather_block(key, region, family, qualifier,
+                                     gather_host)
+            self.stats.inc(host_reads=1)
             self._enforce_tiers()
             return blk, True
 
@@ -1089,11 +1306,14 @@ class BlockStore:
         from repro.core.mapreduce import partial_to_host
         leaves, treedef = partial_to_host(value)
         path = self._new_spill_path("part", ".npz")
-        np.savez(path, *leaves)
-        sz = int(os.path.getsize(path))
+        try:
+            sz = self._write_spill(path, lambda f: np.savez(f, *leaves))
+        except BaseException:
+            _unlink_spill(path)
+            raise
         old = self._spilled_partials.pop(key, None)
         if old is not None:          # re-spill: replace the stale file
-            _unlink(old[0])
+            _unlink_spill(old[0])
             self._charge(disk=-old[1])
         self._spilled_partials[key] = (path, sz, treedef)
         self._charge(disk=sz)
@@ -1106,7 +1326,7 @@ class BlockStore:
         rec = self._spilled_partials.pop(key, None)
         if rec is None:
             return False
-        _unlink(rec[0])
+        _unlink_spill(rec[0])
         self._charge(disk=-rec[1])
         return True
 
@@ -1125,17 +1345,32 @@ class BlockStore:
                 return None
             path, sz, treedef = rec
             from repro.core.mapreduce import partial_from_host
-            try:
+
+            def read_npz():
+                if self._faults is not None:
+                    self._faults.fire("spill_read", path=path)
+                self._verify_spill(path)
                 with np.load(path) as z:
                     leaves = [z[f"arr_{i}"] for i in range(len(z.files))]
-                value = partial_from_host(leaves, treedef)
-            except Exception:        # pragma: no cover - corrupt spill:
-                self._charge(disk=-sz)       # treat as a plain miss
+                return partial_from_host(leaves, treedef)
+
+            try:
+                if self._retry is not None:
+                    value = self._retry.call(
+                        read_npz, key=path,
+                        on_retry=lambda e, a: self.stats.inc(retries=1))
+                else:
+                    value = read_npz()
+            except Exception:
+                # corrupt/lost spilled partial: drop it and report a plain
+                # miss — the caller re-folds losslessly from the payload
+                self.stats.inc(spill_corruptions=1)
+                self._charge(disk=-sz)
                 self._unindex_partial(key)
-                _unlink(path)
+                _unlink_spill(path)
                 return None
             self._charge(disk=-sz)
-            _unlink(path)
+            _unlink_spill(path)
             self.stats.inc(partial_hits=1, partial_spill_reads=1)
             # promote back into the RAM cache WITHOUT re-counting a fold or
             # re-indexing (the spilled entry stayed indexed); byte pressure

@@ -307,6 +307,15 @@ class TierCostModel:
     refetch_bw: float = 70 * MB    # backing-table re-read (paper's network)
     fold_bw: float = 819e9         # fold streaming rate (HBM-bound compute)
     fold_overhead: float = 5e-6    # per-fold kernel dispatch (s)
+    # fault-adjusted re-fetch: on a lossy fabric a table re-read is not
+    # one transfer but an expected-attempts multiple of it (a capped
+    # geometric: each attempt independently fails with this probability
+    # and is retried up to ``max_refetch_attempts`` times), plus the
+    # retry policy's mean backoff between attempts.  Defaults keep the
+    # fault-free arithmetic bit-identical.
+    refetch_fault_rate: float = 0.0   # per-attempt failure probability
+    retry_backoff_s: float = 0.0      # mean sleep between attempts (s)
+    max_refetch_attempts: int = 3
 
     def disk_read_s(self, nbytes: int) -> float:
         return nbytes / self.disk_bw_r
@@ -317,22 +326,41 @@ class TierCostModel:
     def refetch_s(self, nbytes: int) -> float:
         return nbytes / self.refetch_bw
 
+    def expected_attempts(self) -> float:
+        """Mean number of table-read attempts under the fault rate: the
+        expectation of a geometric capped at ``max_refetch_attempts``,
+        ``(1 - p^k) / (1 - p)``.  Exactly 1.0 when the rate is zero."""
+        p = min(max(self.refetch_fault_rate, 0.0), 0.999999)
+        if p <= 0.0:
+            return 1.0
+        return (1.0 - p ** self.max_refetch_attempts) / (1.0 - p)
+
+    def expected_refetch_s(self, nbytes: int) -> float:
+        """Fault-adjusted cost of re-deriving content from the table:
+        expected attempts × transfer time, plus the backoff slept between
+        the extra attempts.  Collapses to :meth:`refetch_s` fault-free."""
+        n = self.expected_attempts()
+        return n * self.refetch_s(nbytes) + (n - 1.0) * self.retry_backoff_s
+
     def refold_s(self, block_nbytes: int) -> float:
         """Re-deriving a lost partial: worst case re-acquires the source
         block over the fabric, then streams it through the fold."""
-        return (self.refetch_s(block_nbytes)
+        return (self.expected_refetch_s(block_nbytes)
                 + block_nbytes / self.fold_bw + self.fold_overhead)
 
     def should_spill_block(self, nbytes: int) -> bool:
         """Spill a host payload iff the write amortizes within two future
-        accesses — i.e. ``write + read <= 2 × refetch``.  With default
-        rates local disk beats the storage fabric, so blocks spill; a
-        deployment whose table is faster than its scratch disk drops the
-        payload and re-gathers instead."""
+        accesses — i.e. ``write + read <= 2 × expected refetch``.  With
+        default rates local disk beats the storage fabric, so blocks
+        spill; a deployment whose table is faster than its scratch disk
+        drops the payload and re-gathers instead.  A non-zero
+        ``refetch_fault_rate`` inflates the re-fetch side, biasing
+        placement toward the (checksummed, locally verifiable) spill
+        tier exactly when the fabric is unreliable."""
         if nbytes <= 0:
             return False
         return (self.disk_write_s(nbytes) + self.disk_read_s(nbytes)
-                <= 2.0 * self.refetch_s(nbytes))
+                <= 2.0 * self.expected_refetch_s(nbytes))
 
     def should_spill_partial(self, partial_nbytes: int,
                              block_nbytes: int) -> bool:

@@ -62,6 +62,12 @@ from concurrent.futures import TimeoutError as _FutureTimeout
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.blockstore import AtomicStats, LRUCache
+from repro.core.faults import (
+    DeviceLostError,
+    QueryFaultedError,
+    RetryPolicy,
+    TransientFaultError,
+)
 from repro.core.grid import GridSession, RunReport
 from repro.core.plan import GridQuery
 from repro.core.stats import GroupedResult
@@ -96,6 +102,10 @@ class FrontendStats(AtomicStats):
     ticks: int = 0              # scheduler windows that dispatched work
     mutations: int = 0          # write-side verbs applied
     queue_depth_peak: int = 0   # max tasks waiting in one tick window
+    # --- fault tolerance ----------------------------------------------
+    retries: int = 0            # dispatch-level query re-executions
+    faults: int = 0             # fault-kind failures observed at dispatch
+    breaker_opens: int = 0      # per-plan circuit breakers tripped open
 
     def __post_init__(self):
         super().__post_init__()
@@ -177,6 +187,17 @@ class _GateEntry:
         self.exc: Optional[BaseException] = None
 
 
+class _Breaker:
+    """Per-plan-signature circuit breaker state (guarded by the
+    frontend's breaker lock)."""
+
+    __slots__ = ("failures", "opened_until")
+
+    def __init__(self):
+        self.failures = 0
+        self.opened_until = 0.0
+
+
 @dataclasses.dataclass
 class _Task:
     """One admitted query waiting for (or in) execution."""
@@ -187,6 +208,7 @@ class _Task:
     future: Future
     t_submit: float
     flight_key: Optional[Tuple] = None
+    breaker_key: Optional[Tuple] = None
     # resolution claim: exactly ONE of _finish / _fail / _abandon settles
     # the task (guarded by the frontend's open lock), so a sync caller
     # abandoning a timed-out query and the executor finishing the same
@@ -216,16 +238,36 @@ class GridFrontend:
     coalesce:
         ``False`` disables all three sharing layers (single-flight,
         tick merging, fold gate) — the control arm for benchmarks.
+    retry_policy:
+        Backoff schedule for dispatch-level retries of fault-kind
+        failures (transient device faults, device loss already handled
+        by the session's quarantine).  Defaults to the session's policy.
+    breaker_threshold:
+        Consecutive fault-kind failures of one plan signature before its
+        circuit breaker opens (0 disables breakers).
+    breaker_cooldown_s:
+        How long an open breaker fast-fails submissions of that plan
+        before letting a probe through.
     """
 
     def __init__(self, session: GridSession, *, workers: int = 4,
                  tick_ms: float = 2.0, max_pending: int = 256,
-                 coalesce: bool = True):
+                 coalesce: bool = True,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 1.0):
         self.session = session
         self.tick_ms = float(tick_ms)
         self.max_pending = int(max_pending)
         self.coalesce = bool(coalesce)
         self.stats = FrontendStats()
+        self._retry = (retry_policy if retry_policy is not None
+                       else session.retry_policy)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        # per-plan-signature circuit breakers (bounded: cold plans age out)
+        self._breakers: LRUCache = LRUCache(512)
+        self._breaker_lock = threading.Lock()
 
         self._rwlock = _EpochRWLock()
         self._pool = ThreadPoolExecutor(
@@ -281,6 +323,18 @@ class GridFrontend:
                 deadline: Optional[float]) -> _Task:
         if self._closed:
             raise RuntimeError("frontend is closed")
+        bkey: Optional[Tuple] = None
+        if self.breaker_threshold > 0:
+            bkey = plan.signature()
+            with self._breaker_lock:
+                br = self._breakers.peek(bkey)
+                open_until = 0.0 if br is None else br.opened_until
+            if time.monotonic() < open_until:
+                self.stats.inc(rejected=1)
+                raise QueryFaultedError(
+                    "circuit breaker open for this plan "
+                    f"(cooldown {self.breaker_cooldown_s}s after "
+                    f"{self.breaker_threshold} consecutive faults)")
         with self._open_lock:
             if self._open >= self.max_pending:
                 self.stats.inc(rejected=1)
@@ -293,7 +347,7 @@ class GridFrontend:
         fut: Future = Future()
         task = _Task(plan=plan, eta=eta,
                      deadline=None if deadline is None else now + deadline,
-                     future=fut, t_submit=now)
+                     future=fut, t_submit=now, breaker_key=bkey)
         self.stats.inc(submitted=1)
 
         if self.coalesce:
@@ -454,9 +508,8 @@ class GridFrontend:
         try:
             if len(live) == 1:
                 t = live[0]
-                with self._rwlock.read():
-                    self.session.prefetch_plan(t.plan)
-                    out = self.session._execute_plan(t.plan, eta=t.eta)
+                out = self._execute_with_retries(
+                    live, lambda: self._locked_exec(t.plan, t.eta))
                 self._finish(t, out)
                 return
             # merged tick: one fused pass answers every plan in the group
@@ -467,11 +520,8 @@ class GridFrontend:
                 programs = programs + t.plan.programs
             merged = live[0].plan._fork(programs=programs)
             self.stats.inc(batch_merges=1, batched_queries=len(live))
-            with self._rwlock.read():
-                # one promotion sweep serves every coalesced member
-                self.session.prefetch_plan(merged)
-                results, report = self.session._execute_plan(
-                    merged, eta=live[0].eta)
+            results, report = self._execute_with_retries(
+                live, lambda: self._locked_exec(merged, live[0].eta))
             for t, off, k in offsets:
                 self._finish(t, (self._split(results, off, k), report))
         except BaseException as e:     # noqa: BLE001 — resolve every future
@@ -479,6 +529,53 @@ class GridFrontend:
                 self._fail(t, e)
         finally:
             self._exec_tls.tasks = None
+
+    def _locked_exec(self, plan: GridQuery,
+                     eta: Optional[int]) -> Tuple[Any, RunReport]:
+        with self._rwlock.read():
+            # one promotion sweep serves every coalesced member
+            self.session.prefetch_plan(plan)
+            return self.session._execute_plan(plan, eta=eta)
+
+    def _execute_with_retries(self, live: List[_Task],
+                              run: Callable[[], Tuple]) -> Tuple:
+        """Run one execution attempt, retrying fault-kind failures.
+
+        The session already degrades device→host→re-derive internally;
+        what reaches here is a fault it could not absorb (an exhausted
+        transient budget, or device loss surfacing mid-attempt before
+        quarantine re-homing).  Each retry re-takes the read lock, so it
+        executes against the freshly healed placement.  Retries stop at
+        the policy's attempt budget or the group's last deadline,
+        whichever is first; exhaustion raises :class:`QueryFaultedError`
+        carrying the full fault chain for the client to inspect.
+        """
+        faults = self.session.faults
+        chain: List[BaseException] = []
+        attempt = 0
+        while True:
+            try:
+                if faults is not None:
+                    faults.fire("dispatch")
+                return run()
+            except (TransientFaultError, DeviceLostError) as e:
+                chain.append(e)
+                self.stats.inc(faults=1)
+                attempt += 1
+                delay = self._retry.delay_s(attempt - 1, key="dispatch")
+                deadline = min(
+                    (t.deadline for t in live
+                     if not t.done and t.deadline is not None),
+                    default=None)
+                out_of_time = (deadline is not None
+                               and time.monotonic() + delay > deadline)
+                if attempt >= self._retry.max_attempts or out_of_time:
+                    raise QueryFaultedError(
+                        f"query faulted after {attempt} attempt(s)"
+                        + (" (deadline reached)" if out_of_time else ""),
+                        chain=tuple(chain)) from e
+                self.stats.inc(retries=1)
+                time.sleep(delay)
 
     def _check_deadline(self) -> None:
         """Mid-execution deadline gate, called from ``_fold_gate`` entry
@@ -533,6 +630,7 @@ class GridFrontend:
     def _finish(self, task: _Task, out: Tuple[Any, RunReport]) -> None:
         if not self._claim(task):
             return                # abandoned meanwhile: already settled
+        self._breaker_ok(task)
         self.stats.record_latency(time.monotonic() - task.t_submit)
         self.stats.inc(served=1)
         task.future.set_result(out)
@@ -546,9 +644,39 @@ class GridFrontend:
             with self._flights_lock:
                 if self._flights.peek(task.flight_key) is task.future:
                     self._flights.pop(task.flight_key)
+        if isinstance(exc, (QueryFaultedError, TransientFaultError,
+                            DeviceLostError)):
+            self._breaker_fault(task)
         timeout = timeout or isinstance(exc, QueryTimeoutError)
         self.stats.inc(failed=1, timeouts=1 if timeout else 0)
         task.future.set_exception(exc)
+
+    # --- circuit breakers ---------------------------------------------
+
+    def _breaker_ok(self, task: _Task) -> None:
+        if task.breaker_key is None:
+            return
+        with self._breaker_lock:
+            br = self._breakers.peek(task.breaker_key)
+            if br is not None:
+                br.failures = 0
+
+    def _breaker_fault(self, task: _Task) -> None:
+        """Count one fault-kind failure toward the plan's breaker; trip
+        it open (cooldown fast-fail) at the threshold."""
+        if task.breaker_key is None or self.breaker_threshold <= 0:
+            return
+        with self._breaker_lock:
+            br = self._breakers.get(task.breaker_key)
+            if br is None:
+                br = _Breaker()
+                self._breakers.put(task.breaker_key, br)
+            br.failures += 1
+            now = time.monotonic()
+            if br.failures >= self.breaker_threshold and now >= br.opened_until:
+                br.opened_until = now + self.breaker_cooldown_s
+                br.failures = 0
+                self.stats.inc(breaker_opens=1)
 
     def _resolve_from_leader(self, task: _Task, leader: Future) -> None:
         exc = leader.exception()

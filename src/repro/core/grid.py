@@ -80,6 +80,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
+import re
+import shutil
 import tempfile
 from typing import (
     Any, Callable, Dict, FrozenSet, List, Mapping, Optional, Sequence, Set,
@@ -100,6 +102,12 @@ from repro.core.blockstore import (
     AtomicStats, BlockStore, DeviceBlock, LRUCache,
 )
 from repro.core.chunk_model import TierCostModel
+from repro.core.faults import (
+    DeviceLostError,
+    FaultInjector,
+    RetryPolicy,
+    TransientFaultError,
+)
 from repro.core.mapreduce import MapReduceEngine, MapReduceProgram, MapReduceStats
 from repro.core.placement import Placement
 from repro.core.plan import GridQuery, prefix_range
@@ -115,6 +123,49 @@ from repro.core.table import (
     _as_key,
 )
 from repro.utils import make_mesh
+
+#: auto-named session spill dirs: grid-spill-<pid>-<hex session id>
+_SPILL_DIR_RE = re.compile(r"^grid-spill-(\d+)-[0-9a-f]+$")
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except OSError:       # e.g. EPERM: the pid exists, owned by another user
+        return True
+    return True
+
+
+def sweep_stale_spill_dirs(root: Optional[str] = None) -> int:
+    """Best-effort removal of spill dirs leaked by *dead* sessions.
+
+    The ``atexit``/``close`` teardown covers normal exits, but a SIGKILL
+    (OOM killer, job scheduler preemption — routine on the paper's shared
+    grid) leaves ``grid-spill-<pid>-*`` dirs behind.  Every session
+    startup sweeps its temp root for dirs whose embedded pid no longer
+    runs; live sessions (including our own process) are never touched.
+    Returns the number of directories removed.
+    """
+    root = root if root is not None else tempfile.gettempdir()
+    try:
+        names = os.listdir(root)
+    except OSError:
+        return 0
+    swept = 0
+    for name in names:
+        m = _SPILL_DIR_RE.match(name)
+        if m is None:
+            continue
+        pid = int(m.group(1))
+        if pid == os.getpid() or _pid_alive(pid):
+            continue
+        path = os.path.join(root, name)
+        if os.path.isdir(path):
+            shutil.rmtree(path, ignore_errors=True)
+            swept += 1
+    return swept
 
 
 @dataclasses.dataclass
@@ -336,6 +387,8 @@ class GridSession:
         spill_dir: Optional[str] = None,
         cost_model: Optional["TierCostModel"] = None,
         prefetch: bool = True,
+        fault_injector: Optional[FaultInjector] = None,
+        retry_policy: Optional[RetryPolicy] = None,
     ):
         self.table = table
         self.mesh = (mesh if mesh is not None
@@ -367,8 +420,20 @@ class GridSession:
         #: mode off-TPU (the test/bench harness on CPU).
         self.engine = MapReduceEngine(self.mesh, data_axis,
                                       fold_impl=fold_impl,
-                                      fold_interpret=fold_interpret)
+                                      fold_interpret=fold_interpret,
+                                      fault_injector=fault_injector)
         self.metrics = SessionMetrics()
+        #: chaos harness + recovery policy.  ``fault_injector`` (usually
+        #: None outside tests/benches) fires injected faults at the named
+        #: sites; ``retry_policy`` bounds the in-place retries wrapped
+        #: around device transfers, table gathers, folds, and spill I/O.
+        #: Owner devices that fail PERMANENTLY land in ``_quarantined``
+        #: and their regions re-home through the balancer (see
+        #: :meth:`_quarantine`).
+        self.faults = fault_injector
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else RetryPolicy())
+        self._quarantined: Set[int] = set()
         #: tiered storage (device HBM → host RAM → disk): any byte budget
         #: bounds its tier; ``spill_dir`` enables the disk tier (a
         #: session-private temp dir is created — and removed on
@@ -381,6 +446,9 @@ class GridSession:
                        partial_budget)) or spill_dir is not None
         if spill_dir is None and (host_budget is not None
                                   or disk_budget is not None):
+            # a crashed predecessor can't clean up after itself: sweep its
+            # leaked dirs before creating our own under the same root
+            sweep_stale_spill_dirs()
             spill_dir = os.path.join(
                 tempfile.gettempdir(),
                 f"grid-spill-{os.getpid()}-{id(self):x}")
@@ -389,8 +457,14 @@ class GridSession:
             device_budget=device_budget, host_budget=host_budget,
             disk_budget=disk_budget, partial_budget=partial_budget,
             spill_dir=spill_dir, cost_model=cost_model,
-            prefetch_workers=1 if (prefetch and tiering) else 0)
+            prefetch_workers=1 if (prefetch and tiering) else 0,
+            fault_injector=fault_injector, retry_policy=self.retry_policy)
         self._tiering = tiering
+        if fault_injector is not None and fault_injector.on_fire is None:
+            # mirror every observed fire into the store's counters so one
+            # snapshot tells the whole fault story
+            fault_injector.on_fire = (
+                lambda site, kind: self.blocks.stats.inc(faults_injected=1))
 
         self._epoch = 0
         # content-addressed finalized results: (program, partial keys, ...)
@@ -618,6 +692,60 @@ class GridSession:
         return moved
 
     # ------------------------------------------------------------------
+    # permanent owner failure: quarantine + re-home
+    # ------------------------------------------------------------------
+
+    @property
+    def quarantined_devices(self) -> FrozenSet[int]:
+        """Device indices permanently quarantined after a non-transient
+        failure; their regions were re-homed onto the survivors."""
+        return frozenset(self._quarantined)
+
+    def _quarantine(self, owner: Optional[int]) -> None:
+        """Permanent owner failure: mark the device dead and re-home its
+        regions through the balancer.  Idempotent per device; the first
+        call counts one ``quarantines`` and pays one re-home epoch."""
+        if owner is None or owner in self._quarantined:
+            return
+        self._quarantined.add(owner)
+        if self.faults is not None:
+            # keep the injector's sticky lost-set consistent even when the
+            # loss was detected (a real device_put error), not injected
+            self.faults.lost_devices.add(owner)
+        self.blocks.stats.inc(quarantines=1)
+        self._rehome_quarantined()
+
+    def _rehome_quarantined(self) -> List[int]:
+        """Drain every quarantined device's regions onto the survivors.
+
+        This is the paper's region-server failover expressed through the
+        offline balancer: dead nodes are simply *absent* from the node
+        list handed to :func:`~repro.core.balancer.rebalance`, so their
+        regions are treated as homeless and re-assigned first, and the
+        survivors rebalance around the new load.  Like any rebalance, the
+        move bumps the placement version and advances a
+        ``touch_blocks=False`` epoch — block content versions are
+        untouched, so every still-resident host/disk block and cached
+        partial survives and a moved region re-commits to its new owner
+        with one ``device_put`` and ZERO table re-reads.  With no live
+        node left the session keeps serving host-degraded (folds run on
+        host copies; nothing is re-homed)."""
+        live = [n for d, n in enumerate(self.placement.nodes)
+                if d not in self._quarantined]
+        if not live:
+            return []
+        old = dict(self.placement.alloc)
+        new_alloc, moved = rebalance_allocation(
+            old, self.table.region_bytes(), live, tolerance=0.05)
+        self.metrics.inc(rebalances=1)
+        if moved:
+            self.placement.alloc.clear()
+            self.placement.alloc.update(new_alloc)
+            self.placement.version += 1
+            self._advance_epoch(set(moved), touch_blocks=False)
+        return moved
+
+    # ------------------------------------------------------------------
     # GridQuery: lazy scan -> filter -> map -> reduce plans
     # ------------------------------------------------------------------
 
@@ -765,6 +893,10 @@ class GridSession:
         alloc = self.placement.alloc
         for region in regions:
             owner = self._node_index.get(alloc.get(region.rid))
+            if owner is not None and owner in self._quarantined:
+                # permanently lost owner whose regions could not re-home
+                # (no live node left): serve host-degraded
+                owner = None
             rows = region.row_slice(keys)
             n = rows.stop - rows.start
             if n == 0:
@@ -1175,35 +1307,67 @@ class GridSession:
         can account the fetch classification exactly once."""
         blk, reused, gathered = self._fetch_block(
             w.region, family, qualifier, owner=w.owner)
-        src = blk.device if blk.device is not None else blk.host
-        bmask = None if w.mask_sig == "full" else mask[w.rows]
-        gid_arr = None
+        base_mask = None if w.mask_sig == "full" else mask[w.rows]
+        gid_base = None
         if group is not None:
             # Densified gid blocks depend only on (region lineage,
             # mapping), not on the program — cache them so dirty-region
             # re-folds across plans skip the factorize pass.
-            gid_arr = self.blocks.get_gids(
+            gid_base = self.blocks.get_gids(
                 w.region, group.family, group.qualifier, group.sig)
-            if gid_arr is None:
+            if gid_base is None:
                 key_col = self.table.column(group.family, group.qualifier)
-                gid_arr = group.gids_for(key_col[w.rows])
+                gid_base = group.gids_for(key_col[w.rows])
                 self.blocks.put_gids(
                     w.region, group.family, group.qualifier,
-                    group.sig, gid_arr)
-        src_rows = int(src.shape[0])
-        if src_rows != blk.rows:
-            # committed pre-padded to the fold bucket: extend the (tiny)
-            # mask/gid arrays host-side to match
-            m = np.zeros(src_rows, bool)
-            m[:blk.rows] = True if bmask is None else bmask
-            bmask = m
-            if gid_arr is not None:
-                g2 = np.zeros(src_rows, np.int32)
-                g2[:blk.rows] = gid_arr
-                gid_arr = g2
-        partial = self.engine.fold_block(
-            program, src, bmask, eta, spec.shape, spec.dtype,
-            gids=gid_arr, num_groups=n_groups)
+                    group.sig, gid_base)
+
+        def fold_with(b: DeviceBlock, force_host: bool = False):
+            # mask/gid padding is keyed off the actual source shape — the
+            # committed device copy is pre-padded to the fold bucket, a
+            # host-degraded copy is not.  ``force_host`` ignores a device
+            # copy outright: after a quarantine it lives on dead silicon
+            use_device = b.device is not None and not force_host
+            src = b.device if use_device else b.host
+            bmask, gid_arr = base_mask, gid_base
+            src_rows = int(src.shape[0])
+            if src_rows != b.rows:
+                # committed pre-padded to the fold bucket: extend the
+                # (tiny) mask/gid arrays host-side to match
+                m = np.zeros(src_rows, bool)
+                m[:b.rows] = True if bmask is None else bmask
+                bmask = m
+                if gid_arr is not None:
+                    g2 = np.zeros(src_rows, np.int32)
+                    g2[:b.rows] = gid_arr
+                    gid_arr = g2
+            return self.engine.fold_block(
+                program, src, bmask, eta, spec.shape, spec.dtype,
+                gids=gid_arr, num_groups=n_groups,
+                owner=w.owner if use_device else None)
+
+        def run(b: DeviceBlock, force_host: bool = False):
+            if self.faults is None:
+                return fold_with(b, force_host)
+            return self.retry_policy.call(
+                lambda: fold_with(b, force_host),
+                key=f"fold:{w.region.rid}",
+                on_retry=lambda e, a: self.blocks.stats.inc(retries=1))
+
+        try:
+            partial = run(blk)
+        except DeviceLostError as e:
+            # the owner died mid-fold: quarantine it (re-homing its
+            # regions for later plans) and re-fold this block's host copy
+            # — still resident in the store, so no table re-read unless
+            # the host tier, too, was lost
+            self._quarantine(e.device if e.device is not None else w.owner)
+            hblk, regath = self.blocks.fetch_host(
+                w.region, family, qualifier,
+                gather_host=self._gather_fn(w.region, family, qualifier))
+            gathered = gathered or regath
+            blk = hblk
+            partial = run(hblk, force_host=True)
         self.blocks.put_partial(pkey, partial)
         return partial, blk, reused, gathered
 
@@ -1293,20 +1457,55 @@ class GridSession:
         need = max(rows_per_dev, default=0)
         return max(chunk, -(-max(need, 1) // chunk) * chunk)
 
+    def _gather_fn(self, region: Region, family: str,
+                   qualifier: str) -> Callable[[], np.ndarray]:
+        """The table-read thunk handed to the BlockStore, wrapped (when a
+        fault injector is live) so transient gather faults retry in place
+        before the store ever sees an exception."""
+        def base() -> np.ndarray:
+            return self.table.region_column(region, family, qualifier)
+        if self.faults is None:
+            return base
+
+        def attempt() -> np.ndarray:
+            self.faults.fire("gather")
+            return base()
+
+        return lambda: self.retry_policy.call(
+            attempt, key=f"gather:{region.rid}",
+            on_retry=lambda e, a: self.blocks.stats.inc(retries=1))
+
     def _fetch_block(
         self, region: Region, family: str, qualifier: str,
         owner: Optional[int],
     ) -> Tuple[DeviceBlock, bool, bool]:
         """Store-first block access; ``owner`` is the region's device index
         (derived once per plan in ``_plan_work``, not re-derived per
-        block)."""
-        blk, reused, gathered = self.blocks.fetch(
-            region, family, qualifier, owner,
-            gather_host=lambda: self.table.region_column(
-                region, family, qualifier),
-            to_device=None if self._devices is None else self._put_block,
-        )
-        return blk, reused, gathered
+        block).
+
+        Degradation ladder on faults: transient ``device_put`` failures
+        already retried inside :meth:`_put_block`; a PERMANENT owner loss
+        quarantines the device (re-homing its regions for every later
+        plan) and this fetch falls back to the host tier — the content is
+        served without device commitment, so the query completes with the
+        payload folding host-side instead of raising."""
+        if owner is not None and owner in self._quarantined:
+            owner = None       # stale work item from before a re-home
+        gather = self._gather_fn(region, family, qualifier)
+        to_device = None if self._devices is None else self._put_block
+        try:
+            return self.blocks.fetch(region, family, qualifier, owner,
+                                     gather_host=gather,
+                                     to_device=to_device)
+        except DeviceLostError as e:
+            self._quarantine(e.device if e.device is not None else owner)
+        except TransientFaultError:
+            pass               # retries exhausted: degrade below
+        # device commitment failed for good: serve the host tier (the
+        # store's cached copy, or one verified table re-read)
+        blk, gathered = self.blocks.fetch_host(region, family, qualifier,
+                                               gather_host=gather)
+        return blk, False, gathered
 
     def _put_block(self, host: np.ndarray, owner_index: Optional[int]):
         """Commit one block to its owner shard's device (the per-shard
@@ -1318,14 +1517,27 @@ class GridSession:
         executable with NO per-fold pad copy — the pad memcpy is paid once
         per gather, where it amortizes.  The block's ``host`` array and
         ``rows`` stay logical; ``_run_blockwise`` extends row masks/gids to
-        the padded shape host-side (tiny bool/int32 arrays)."""
+        the padded shape host-side (tiny bool/int32 arrays).
+
+        Transient injected transfer faults retry here under the session
+        policy; :class:`DeviceLostError` propagates to
+        :meth:`_fetch_block`, which owns quarantine + host degrade."""
         bucket = self.engine.bucket_rows(len(host))
         if bucket != len(host):
             host = np.concatenate(
                 [host, np.zeros((bucket - len(host),) + host.shape[1:],
                                 host.dtype)])
         dev = None if owner_index is None else self._devices[owner_index]
-        return jax.device_put(host, dev)
+        if self.faults is None:
+            return jax.device_put(host, dev)
+
+        def attempt():
+            self.faults.fire("device_put", device=owner_index)
+            return jax.device_put(host, dev)
+
+        return self.retry_policy.call(
+            attempt, key=f"device_put:{owner_index}",
+            on_retry=lambda e, a: self.blocks.stats.inc(retries=1))
 
     # ------------------------------------------------------------------
     # helpers / diagnostics

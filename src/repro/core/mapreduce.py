@@ -179,9 +179,16 @@ class MapReduceEngine:
                  block_pad: str = "pow2",
                  merge_strategy: str = "auto",
                  fold_impl: str = "pallas",
-                 fold_interpret: bool = False):
+                 fold_interpret: bool = False,
+                 fault_injector=None):
         self.mesh = mesh
         self.data_axis = data_axis
+        #: optional chaos harness (repro.core.faults.FaultInjector): every
+        #: block-fold dispatch fires its "fold" site with the owner device,
+        #: so injected fold faults (transient, permanent owner loss,
+        #: straggler delay) surface here and the session's retry/quarantine
+        #: wrapper around fold_block owns the response
+        self.fault_injector = fault_injector
         # LRU-capped: one entry per (program, row signature, eta, C); an
         # evicted executable rebuilds on next use (compile_count bumps again)
         self._compiled = LRUCache(executable_cache_cap)
@@ -484,6 +491,7 @@ class MapReduceEngine:
         dtype,
         gids: Optional[Any] = None,      # [rows] int32 group ids (grouped)
         num_groups: int = 0,
+        owner: Optional[int] = None,     # fault context: owning device index
     ) -> PyTree:
         """Fold one block into a partial — the map phase at block granularity.
 
@@ -497,6 +505,10 @@ class MapReduceEngine:
         the fold is group-aware: the partial's leaves carry a leading group
         axis (see :class:`~repro.core.stats.GroupedProgram`).
         """
+        if self.fault_injector is not None:
+            # fired before any padding/compile work so an injected fold
+            # fault costs the caller nothing but the retry itself
+            self.fault_injector.fire("fold", device=owner)
         rows = int(block.shape[0])
         grouped = num_groups > 0
         if grouped and gids is None:

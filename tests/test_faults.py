@@ -1,0 +1,683 @@
+"""Fault injection and self-healing: the injector/retry substrate, the
+checksummed spill chain, quarantine + re-home, and the frontend's
+dispatch-level retries and circuit breakers.
+
+The two ``slow``-marked subprocess tests are the PR acceptance walks: a
+60+ step differential walk under a seeded fault schedule (spill
+corruption, transient transfers, one permanent owner loss, stragglers)
+that must produce bit-exact results, and a quarantine re-home that must
+move every resident payload without a single table re-read.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.blockstore import BlockStore, LRUCache
+from repro.core.chunk_model import TierCostModel
+from repro.core.faults import (
+    DeviceLostError,
+    FaultInjector,
+    FaultRule,
+    QueryFaultedError,
+    RetryPolicy,
+    SpillCorruptionError,
+    TransientFaultError,
+)
+from repro.core.frontend import GridFrontend
+from repro.core.grid import GridSession, sweep_stale_spill_dirs
+from repro.core.stats import CountProgram, MeanProgram, VarianceProgram
+from test_grid import make_population
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _subprocess_env(devices=4):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), os.path.join(REPO, "tests")])
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+# ----------------------------------------------------------------------
+# FaultRule / FaultInjector
+# ----------------------------------------------------------------------
+
+class TestFaultRules:
+    def test_rule_validation(self):
+        with pytest.raises(ValueError):
+            FaultRule(site="nope", kind="transient")
+        with pytest.raises(ValueError):
+            FaultRule(site="gather", kind="nope")
+        with pytest.raises(ValueError):
+            FaultRule(site="gather", kind="corrupt")   # file kind, dry site
+        with pytest.raises(ValueError):
+            FaultRule(site="spill_read", kind="device_lost")
+        with pytest.raises(ValueError):
+            FaultRule(site="gather", kind="transient", p=1.5)
+
+    def test_after_and_times_pin_exact_calls(self):
+        inj = FaultInjector(rules=(
+            FaultRule(site="gather", kind="transient", after=3, times=2),))
+        pattern = []
+        for _ in range(8):
+            try:
+                inj.fire("gather")
+                pattern.append(False)
+            except TransientFaultError:
+                pattern.append(True)
+        # skips the first 3 calls, fires exactly twice, then is spent
+        assert pattern == [False] * 3 + [True] * 2 + [False] * 3
+        assert inj.counts == {"gather:transient": 2}
+        assert inj.faults_injected == 2
+        assert inj.site_calls("gather") == 8
+
+    def test_probabilistic_schedule_replays_from_seed(self):
+        def run(seed):
+            inj = FaultInjector(rules=(
+                FaultRule(site="device_put", kind="transient", p=0.5),),
+                seed=seed)
+            out = []
+            for _ in range(64):
+                try:
+                    inj.fire("device_put", device=0)
+                    out.append(0)
+                except TransientFaultError:
+                    out.append(1)
+            return out
+
+        a, b = run(11), run(11)
+        assert a == b, "same seed must replay bit-for-bit"
+        assert 0 < sum(a) < 64, "p=0.5 must fire sometimes, not always"
+
+    def test_device_scoped_rule_ignores_other_devices(self):
+        inj = FaultInjector(rules=(
+            FaultRule(site="device_put", kind="transient", device=1),))
+        inj.fire("device_put", device=0)            # no raise
+        with pytest.raises(TransientFaultError):
+            inj.fire("device_put", device=1)
+
+    def test_device_loss_is_sticky(self):
+        inj = FaultInjector(rules=(
+            FaultRule(site="device_put", kind="device_lost", device=1,
+                      times=1),))
+        with pytest.raises(DeviceLostError) as e:
+            inj.fire("device_put", device=1)
+        assert e.value.device == 1
+        assert inj.lost_devices == {1}
+        # the rule is spent (times=1) but the loss is permanent: every
+        # later put/fold against the device keeps failing
+        for site in ("device_put", "fold"):
+            with pytest.raises(DeviceLostError):
+                inj.fire(site, device=1)
+        inj.fire("device_put", device=0)            # healthy device fine
+        assert inj.counts["device_put:device_lost"] == 2
+
+    def test_delay_sleeps_without_raising(self):
+        inj = FaultInjector(rules=(
+            FaultRule(site="fold", kind="delay", delay_s=0.02),))
+        t0 = time.monotonic()
+        inj.fire("fold", device=0)
+        assert time.monotonic() - t0 >= 0.015
+        assert inj.counts == {"fold:delay": 1}
+
+    def test_file_kind_without_file_does_not_count(self, tmpdir):
+        inj = FaultInjector(rules=(
+            FaultRule(site="spill_read", kind="corrupt"),))
+        inj.fire("spill_read", path=str(tmpdir.join("missing.npy")))
+        assert inj.faults_injected == 0
+        assert inj.counts == {}
+
+    def test_corrupt_flips_bytes_in_place(self, tmpdir):
+        path = str(tmpdir.join("x.bin"))
+        with open(path, "wb") as f:
+            f.write(b"\x00" * 64)
+        inj = FaultInjector(rules=(
+            FaultRule(site="spill_read", kind="corrupt"),))
+        inj.fire("spill_read", path=path)
+        data = open(path, "rb").read()
+        assert len(data) == 64 and data != b"\x00" * 64
+        assert inj.counts == {"spill_read:corrupt": 1}
+
+    def test_on_fire_observer_sees_every_fire(self):
+        seen = []
+        inj = FaultInjector(rules=(
+            FaultRule(site="gather", kind="transient", times=1),))
+        inj.on_fire = lambda site, kind: seen.append((site, kind))
+        with pytest.raises(TransientFaultError):
+            inj.fire("gather")
+        inj.fire("gather")
+        assert seen == [("gather", "transient")]
+
+
+# ----------------------------------------------------------------------
+# RetryPolicy
+# ----------------------------------------------------------------------
+
+class TestRetryPolicy:
+    def test_backoff_grows_and_jitter_is_deterministic(self):
+        p = RetryPolicy(base_delay_s=1e-3, multiplier=2.0, jitter=0.25)
+        assert p.delay_s(2, "k") == p.delay_s(2, "k")
+        for a in range(4):
+            base = 1e-3 * 2 ** a
+            assert 0.75 * base <= p.delay_s(a, "k") <= 1.25 * base
+        # jitter de-synchronizes different retriers of the same attempt
+        assert p.delay_s(1, "alpha") != p.delay_s(1, "beta")
+
+    def test_call_retries_transients_then_succeeds(self):
+        attempts, retries, slept = [], [], []
+        def fn():
+            attempts.append(1)
+            if len(attempts) < 3:
+                raise TransientFaultError("flaky")
+            return "ok"
+        p = RetryPolicy(max_attempts=4, base_delay_s=1e-3)
+        out = p.call(fn, key="k",
+                     on_retry=lambda e, a: retries.append(a),
+                     sleep=slept.append)
+        assert out == "ok" and len(attempts) == 3
+        assert retries == [1, 2] and len(slept) == 2
+
+    def test_exhaustion_propagates_final_error_unwrapped(self):
+        p = RetryPolicy(max_attempts=3, base_delay_s=0.0, jitter=0.0)
+        calls = []
+        def fn():
+            calls.append(1)
+            raise TransientFaultError("always")
+        with pytest.raises(TransientFaultError):
+            p.call(fn, sleep=lambda _s: None)
+        assert len(calls) == 3
+
+    def test_permanent_faults_are_not_retried(self):
+        p = RetryPolicy(max_attempts=5)
+        calls = []
+        def fn():
+            calls.append(1)
+            raise DeviceLostError(2)
+        with pytest.raises(DeviceLostError):
+            p.call(fn, sleep=lambda _s: None)
+        assert len(calls) == 1
+
+
+# ----------------------------------------------------------------------
+# satellite: LRU on_evict hooks that raise
+# ----------------------------------------------------------------------
+
+class TestLRUEvictErrors:
+    def test_raising_hook_is_counted_and_sweep_continues(self):
+        def bomb(_key, _val):
+            raise RuntimeError("hook exploded")
+        lru = LRUCache(2, on_evict=bomb)
+        vals = {k: np.zeros(4, np.float32) for k in "abcd"}
+        for k, v in vals.items():
+            lru.put(k, v)
+        # every eviction fired the raising hook; none aborted the sweep
+        assert lru.evict_errors == 2
+        assert lru.evictions == 2
+        assert set(lru.keys()) == {"c", "d"}
+
+    def test_byte_budget_sweep_survives_raising_hook(self):
+        def bomb(_key, _val):
+            raise RuntimeError("hook exploded")
+        lru = LRUCache(None, max_bytes=64, on_evict=bomb)
+        for i in range(6):
+            lru.put(i, np.zeros(8, np.float32))    # 32 B each
+        assert lru.nbytes <= 64
+        assert lru.evict_errors == 4
+
+
+# ----------------------------------------------------------------------
+# checksummed spill: sidecars, atomicity, orphan sweep
+# ----------------------------------------------------------------------
+
+class TestChecksummedSpill:
+    def test_write_spill_publishes_payload_and_sidecar(self, tmpdir):
+        bs = BlockStore(spill_dir=str(tmpdir))
+        path = str(tmpdir.join("blk.npy"))
+        arr = np.arange(12, dtype=np.float32)
+        sz = bs._write_spill(path, lambda f: np.save(f, arr))
+        assert sz == os.path.getsize(path)
+        assert os.path.exists(path + ".crc")
+        bs._verify_spill(path)                     # round-trips clean
+        np.testing.assert_array_equal(np.load(path), arr)
+        bs.close()
+
+    def test_failed_write_leaves_no_partial_files(self, tmpdir):
+        bs = BlockStore(spill_dir=str(tmpdir))
+        path = str(tmpdir.join("blk.npy"))
+        def writer(f):
+            f.write(b"half")
+            raise OSError("disk full")
+        with pytest.raises(OSError):
+            bs._write_spill(path, writer)
+        assert os.listdir(str(tmpdir)) == [], "no torn payload/tmp/sidecar"
+        bs.close()
+
+    @pytest.mark.parametrize("attack", ["corrupt", "truncate", "delete",
+                                        "drop_sidecar"])
+    def test_verify_catches_every_mangle(self, tmpdir, attack):
+        bs = BlockStore(spill_dir=str(tmpdir))
+        path = str(tmpdir.join("blk.npy"))
+        bs._write_spill(path, lambda f: np.save(f, np.arange(64.0)))
+        if attack == "drop_sidecar":
+            os.unlink(path + ".crc")
+        else:
+            inj = FaultInjector(rules=(
+                FaultRule(site="spill_read", kind=attack),))
+            inj.fire("spill_read", path=path)
+        with pytest.raises(SpillCorruptionError):
+            bs._verify_spill(path)
+        bs.close()
+
+    def test_startup_sweeps_orphaned_tmp_and_sidecars(self, tmpdir):
+        spill = tmpdir.mkdir("spill")
+        spill.join("a.npy.tmp").write(b"torn write")
+        spill.join("b.npy.crc").write("deadbeef 42\n")   # payload gone
+        keep = spill.join("c.npy")
+        keep.write(b"payload")
+        spill.join("c.npy.crc").write("cafebabe 7\n")
+        bs = BlockStore(spill_dir=str(spill))
+        assert bs.orphans_swept == 2
+        assert sorted(os.listdir(str(spill))) == ["c.npy", "c.npy.crc"]
+        bs.close()
+
+
+class TestStaleSpillDirSweep:
+    def test_dead_session_dirs_are_reaped_live_kept(self, tmpdir):
+        root = str(tmpdir)
+        proc = subprocess.Popen(["sleep", "0"])
+        proc.wait()
+        dead_pid = proc.pid          # reaped: os.kill(pid, 0) now fails
+        os.makedirs(os.path.join(root, f"grid-spill-{dead_pid}-ab12"))
+        live = os.path.join(root, f"grid-spill-{os.getpid()}-cd34")
+        os.makedirs(live)
+        unrelated = os.path.join(root, "grid-spill-not-a-pid")
+        os.makedirs(unrelated)
+        assert sweep_stale_spill_dirs(root) == 1
+        assert os.path.isdir(live), "our own spill dir must survive"
+        assert os.path.isdir(unrelated), "non-matching names untouched"
+
+    def test_session_close_removes_owned_spill_dir(self, tmpdir):
+        spill = str(tmpdir.join("owned"))
+        s = GridSession(make_population(16), device_budget=0,
+                        host_budget=0, spill_dir=spill, prefetch=False)
+        s.run(MeanProgram())
+        assert os.path.isdir(spill)
+        s.close()
+        assert not os.path.exists(spill)
+
+
+# ----------------------------------------------------------------------
+# recovery through the session stack
+# ----------------------------------------------------------------------
+
+class TestSpillRecovery:
+    def _disk_session(self, tmpdir, **kw):
+        """Every payload block rides the disk tier: no device, no host."""
+        kw.setdefault("device_budget", 0)
+        kw.setdefault("host_budget", 0)
+        return GridSession(make_population(32), default_eta=8,
+                           spill_dir=str(tmpdir.join("spill")),
+                           prefetch=False, **kw)
+
+    def test_corrupted_block_spill_rederives_losslessly(self, tmpdir):
+        s = self._disk_session(tmpdir)
+        expect = s.table.column("img", "data").mean(axis=0)
+        res, _ = s.run(MeanProgram())
+        np.testing.assert_allclose(np.asarray(res), expect, atol=1e-5)
+        spill = str(tmpdir.join("spill"))
+        payloads = [f for f in os.listdir(spill) if f.endswith(".npy")]
+        assert payloads, "blocks must have spilled to disk"
+        for f in payloads:     # flip bytes in EVERY spilled block
+            p = os.path.join(spill, f)
+            with open(p, "r+b") as fh:
+                fh.seek(os.path.getsize(p) // 2)
+                fh.write(b"\xff\xff\xff\xff")
+        res2, _ = s.run(VarianceProgram())
+        np.testing.assert_allclose(np.asarray(res2["var"]),
+                                   s.table.column("img", "data").var(axis=0),
+                                   atol=1e-4)
+        st = s.blocks.stats.snapshot()
+        assert st.spill_corruptions >= len(payloads)
+        assert st.spill_recoveries >= len(payloads)
+        s.close()
+
+    def test_deleted_block_spill_rederives_losslessly(self, tmpdir):
+        inj = FaultInjector(rules=(
+            FaultRule(site="spill_read", kind="delete", times=2),))
+        s = self._disk_session(tmpdir, fault_injector=inj)
+        s.run(MeanProgram())
+        res, _ = s.run(VarianceProgram())
+        np.testing.assert_allclose(np.asarray(res["var"]),
+                                   s.table.column("img", "data").var(axis=0),
+                                   atol=1e-4)
+        st = s.blocks.stats.snapshot()
+        assert st.spill_corruptions >= 1
+        assert st.spill_recoveries >= 1
+        assert st.faults_injected == inj.faults_injected > 0
+        s.close()
+
+    def test_corrupted_partial_spill_refolds_exactly(self, tmpdir):
+        inj = FaultInjector(rules=(
+            FaultRule(site="spill_read", kind="corrupt", times=1),))
+        s = GridSession(make_population(32), default_eta=8,
+                        partial_budget=1,
+                        spill_dir=str(tmpdir.join("spill")),
+                        prefetch=False, fault_injector=inj)
+        res, _ = s.run(MeanProgram())
+        # drop the finalized-result cache so the repeat must re-assemble
+        # from partials: it reads the spilled partial back, the injected
+        # flip is caught by the CRC, and the partial silently refolds
+        s._results.clear()
+        res2, _ = s.run(MeanProgram())
+        np.testing.assert_array_equal(np.asarray(res), np.asarray(res2))
+        assert s.blocks.stats.spill_corruptions >= 1
+        s.close()
+
+    def test_transient_device_put_retries_then_serves(self):
+        inj = FaultInjector(rules=(
+            FaultRule(site="device_put", kind="transient", times=2),))
+        s = GridSession(make_population(32), default_eta=8,
+                        fault_injector=inj,
+                        retry_policy=RetryPolicy(max_attempts=4,
+                                                 base_delay_s=1e-5))
+        res, _ = s.run(MeanProgram())
+        np.testing.assert_allclose(np.asarray(res),
+                                   s.table.column("img", "data").mean(axis=0),
+                                   atol=1e-5)
+        st = s.blocks.stats.snapshot()
+        assert st.retries >= 1
+        assert st.faults_injected == 2
+        s.close()
+
+    def test_exhausted_transients_degrade_to_host_serving(self):
+        # EVERY device_put fails: blocks can never commit to the device,
+        # so queries must fall back to host-resident folding — correct
+        # results, zero crashes
+        inj = FaultInjector(rules=(
+            FaultRule(site="device_put", kind="transient", p=1.0),))
+        s = GridSession(make_population(32), default_eta=8,
+                        fault_injector=inj,
+                        retry_policy=RetryPolicy(max_attempts=2,
+                                                 base_delay_s=1e-5))
+        res, _ = s.run(MeanProgram())
+        np.testing.assert_allclose(np.asarray(res),
+                                   s.table.column("img", "data").mean(axis=0),
+                                   atol=1e-5)
+        st = s.blocks.stats.snapshot()
+        assert st.transfers == 0, "nothing can have committed to the device"
+        assert st.device_bytes == 0
+        assert st.retries >= 1 and st.faults_injected >= 2
+        s.close()
+
+
+class TestQuarantine:
+    def test_single_device_loss_degrades_to_host(self):
+        s = GridSession(make_population(32), default_eta=8,
+                        fault_injector=FaultInjector())
+        s.run(MeanProgram())
+        s.faults.lost_devices.add(0)       # the only device dies
+        res, _ = s.run(VarianceProgram())  # new program: must re-fold
+        np.testing.assert_allclose(np.asarray(res["var"]),
+                                   s.table.column("img", "data").var(axis=0),
+                                   atol=1e-4)
+        assert s.quarantined_devices == frozenset({0})
+        assert s.blocks.stats.quarantines == 1
+        res2, _ = s.run(CountProgram())    # keeps serving afterwards
+        assert int(np.asarray(res2)) == 32
+        s.close()
+
+
+# ----------------------------------------------------------------------
+# fault-adjusted tier costs
+# ----------------------------------------------------------------------
+
+class TestFaultAdjustedCosts:
+    def test_zero_rate_collapses_to_plain_refetch(self):
+        m = TierCostModel()
+        assert m.expected_attempts() == 1.0
+        assert m.expected_refetch_s(1 << 20) == m.refetch_s(1 << 20)
+
+    def test_capped_geometric_attempts(self):
+        import dataclasses
+        m = dataclasses.replace(TierCostModel(), refetch_fault_rate=0.5,
+                                max_refetch_attempts=3)
+        assert m.expected_attempts() == pytest.approx((1 - 0.5 ** 3) / 0.5)
+
+    def test_fault_rate_inflates_refetch_and_biases_toward_spill(self):
+        import dataclasses
+        m0 = TierCostModel()
+        m1 = dataclasses.replace(m0, refetch_fault_rate=0.9,
+                                 retry_backoff_s=0.01)
+        n = 1 << 22
+        assert m1.expected_refetch_s(n) > m0.expected_refetch_s(n)
+        # spilling can only become MORE attractive as the fabric flakes
+        for nbytes in (1 << 12, 1 << 20, 1 << 26):
+            if m0.should_spill_block(nbytes):
+                assert m1.should_spill_block(nbytes)
+
+
+# ----------------------------------------------------------------------
+# frontend: dispatch retries, QueryFaultedError, circuit breakers
+# ----------------------------------------------------------------------
+
+def _frontend_session(**kw):
+    return GridSession(make_population(32), default_eta=8, **kw)
+
+
+class TestFrontendFaults:
+    def test_dispatch_transient_retries_then_serves(self):
+        inj = FaultInjector(rules=(
+            FaultRule(site="dispatch", kind="transient", times=1),))
+        s = _frontend_session(fault_injector=inj)
+        with GridFrontend(s, tick_ms=0,
+                          retry_policy=RetryPolicy(max_attempts=3,
+                                                   base_delay_s=1e-4)) as fe:
+            res, _ = fe.query(s.scan().map(MeanProgram()).reduce(),
+                              timeout=60)
+            stats = fe.stats.snapshot()
+        np.testing.assert_allclose(np.asarray(res),
+                                   s.table.column("img", "data").mean(axis=0),
+                                   atol=1e-5)
+        assert stats.retries == 1 and stats.faults == 1
+        assert stats.served == 1 and stats.failed == 0
+        s.close()
+
+    def test_exhausted_retries_raise_query_faulted_with_chain(self):
+        inj = FaultInjector(rules=(
+            FaultRule(site="dispatch", kind="transient", p=1.0),))
+        s = _frontend_session(fault_injector=inj)
+        with GridFrontend(s, tick_ms=0, coalesce=False,
+                          retry_policy=RetryPolicy(max_attempts=3,
+                                                   base_delay_s=1e-4),
+                          breaker_threshold=0) as fe:
+            with pytest.raises(QueryFaultedError) as e:
+                fe.query(s.scan().map(MeanProgram()).reduce(), timeout=60)
+            stats = fe.stats.snapshot()
+        assert len(e.value.chain) == 3
+        assert all(isinstance(c, TransientFaultError) for c in e.value.chain)
+        assert "TransientFaultError" in e.value.describe()
+        assert stats.failed == 1 and stats.faults == 3 and stats.retries == 2
+        s.close()
+
+    def test_breaker_opens_after_threshold_and_fast_fails(self):
+        inj = FaultInjector(rules=(
+            FaultRule(site="dispatch", kind="transient", p=1.0),))
+        s = _frontend_session(fault_injector=inj)
+        plan = s.scan().map(MeanProgram()).reduce()
+        with GridFrontend(s, tick_ms=0, coalesce=False,
+                          retry_policy=RetryPolicy(max_attempts=2,
+                                                   base_delay_s=1e-4),
+                          breaker_threshold=2,
+                          breaker_cooldown_s=30.0) as fe:
+            for _ in range(2):
+                with pytest.raises(QueryFaultedError):
+                    fe.query(plan, timeout=60)
+            stats_mid = fe.stats.snapshot()
+            # breaker now open: submission fails synchronously, without
+            # touching the executor
+            with pytest.raises(QueryFaultedError) as e:
+                fe.submit(plan)
+            stats = fe.stats.snapshot()
+        assert "circuit breaker open" in str(e.value)
+        assert stats_mid.breaker_opens == 1
+        assert stats.rejected == 1
+        assert stats.submitted == 2, "fast-fail must not count a submission"
+        s.close()
+
+    def test_breaker_cooldown_lets_probe_through(self):
+        inj = FaultInjector(rules=(
+            FaultRule(site="dispatch", kind="transient", times=4),))
+        s = _frontend_session(fault_injector=inj)
+        plan = s.scan().map(MeanProgram()).reduce()
+        with GridFrontend(s, tick_ms=0, coalesce=False,
+                          retry_policy=RetryPolicy(max_attempts=2,
+                                                   base_delay_s=1e-4),
+                          breaker_threshold=2,
+                          breaker_cooldown_s=0.05) as fe:
+            for _ in range(2):
+                with pytest.raises(QueryFaultedError):
+                    fe.query(plan, timeout=60)
+            time.sleep(0.1)     # cooldown expires; the schedule is spent
+            res, _ = fe.query(plan, timeout=60)
+            stats = fe.stats.snapshot()
+        np.testing.assert_allclose(np.asarray(res),
+                                   s.table.column("img", "data").mean(axis=0),
+                                   atol=1e-5)
+        assert stats.served == 1
+        s.close()
+
+    def test_success_resets_breaker_failure_count(self):
+        # fail once, succeed once, fail once: threshold=2 must NOT trip
+        inj = FaultInjector(rules=(
+            FaultRule(site="dispatch", kind="transient", times=1),
+            FaultRule(site="dispatch", kind="transient", after=2, times=1),))
+        s = _frontend_session(fault_injector=inj)
+        plan = s.scan().map(MeanProgram()).reduce()
+        with GridFrontend(s, tick_ms=0, coalesce=False,
+                          retry_policy=RetryPolicy(max_attempts=1,
+                                                   base_delay_s=1e-4),
+                          breaker_threshold=2,
+                          breaker_cooldown_s=30.0) as fe:
+            with pytest.raises(QueryFaultedError):
+                fe.query(plan, timeout=60)
+            fe.query(plan, timeout=60)          # success: counter resets
+            with pytest.raises(QueryFaultedError):
+                fe.query(plan, timeout=60)
+            fe.query(plan, timeout=60)          # breaker never opened
+            stats = fe.stats.snapshot()
+        assert stats.breaker_opens == 0
+        s.close()
+
+
+# ----------------------------------------------------------------------
+# acceptance walks (multi-device, subprocess)
+# ----------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestAcceptanceWalks:
+    def test_differential_walk_with_owner_loss_4dev(self):
+        """60+ interleaved steps under the full fault mix — including one
+        PERMANENT owner loss mid-walk — with bit-exact oracle agreement,
+        recount-exact gauges, >= 1 spill recovery, and a quarantine that
+        re-homed the dead owner's regions."""
+        body = """
+            import numpy as np
+            from repro.core.balancer import NodeSpec
+            from repro.core.faults import FaultInjector, FaultRule, RetryPolicy
+            from test_differential import (DifferentialDriver,
+                                           FaultWalkDriver, fault_walk_rules)
+
+            rules = fault_walk_rules() + (
+                FaultRule(site="device_put", kind="device_lost", device=2,
+                          after=15, times=1),)
+            inj = FaultInjector(rules=rules, seed=5)
+            import tempfile
+            drv = FaultWalkDriver(session_kwargs=dict(
+                nodes=[NodeSpec(i, cores=1, mips=1.0) for i in range(4)],
+                device_budget=4096, host_budget=256, partial_budget=512,
+                disk_budget=1 << 20,
+                spill_dir=tempfile.mkdtemp(prefix="fault-walk-"),
+                prefetch=False, fault_injector=inj,
+                retry_policy=RetryPolicy(max_attempts=4, base_delay_s=1e-4)))
+            rng = np.random.default_rng(5)
+            ops = list(DifferentialDriver.OPS)
+            w = np.array([4, 2, 2, 1, 1, 2, 3, 2, 2, 2, 1], dtype=float)
+            w /= w.sum()
+            for _ in range(80):
+                drv.apply(str(rng.choice(ops, p=w)),
+                          int(rng.integers(0, 2**31)))
+            s = drv.session.blocks.stats.snapshot()
+            assert s.faults_injected == inj.faults_injected > 0, s
+            assert s.spill_recoveries >= 1, s
+            assert s.retries >= 1, s
+            assert s.quarantines >= 1, s
+            assert 2 in drv.session.quarantined_devices
+            assert 2 in inj.lost_devices
+            drv.session.close()
+            print("FAULT_WALK_OK", s.faults_injected, s.spill_recoveries,
+                  s.quarantines)
+        """
+        proc = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(body)],
+            capture_output=True, text=True, env=_subprocess_env(4),
+            timeout=600)
+        assert proc.returncode == 0, (
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+        assert "FAULT_WALK_OK" in proc.stdout
+
+    def test_quarantine_rehomes_without_table_rereads_4dev(self):
+        """A permanent owner loss re-homes the dead node's regions through
+        the balancer; every resident payload moves as a cached host copy —
+        ZERO table re-reads — and serving continues exactly."""
+        body = """
+            import numpy as np
+            from repro.core.balancer import NodeSpec
+            from repro.core.faults import FaultInjector
+            from repro.core.grid import GridSession
+            from repro.core.stats import (CountProgram, MeanProgram,
+                                          VarianceProgram)
+            from test_grid import make_population
+
+            t = make_population(128, split_bytes=int(50e6))
+            inj = FaultInjector()
+            s = GridSession(t, default_eta=8, fault_injector=inj,
+                            nodes=[NodeSpec(i, cores=1, mips=1.0)
+                                   for i in range(4)])
+            s.run(MeanProgram())                       # warm every owner
+            assert len(set(s.placement.alloc.values())) > 1
+            inj.lost_devices.add(2)                    # owner 2 dies, hard
+            gathers0 = s.blocks.stats.gathers
+            res, _ = s.run(VarianceProgram())          # trips the loss
+            np.testing.assert_allclose(
+                np.asarray(res["var"]),
+                t.column("img", "data").var(axis=0), atol=1e-4)
+            assert s.blocks.stats.quarantines == 1
+            assert s.quarantined_devices == frozenset({2})
+            # the dead node owns nothing after the re-home
+            homes = {s.placement.alloc[r.rid] for r in t.regions}
+            assert 2 not in {s._node_index.get(h) for h in homes}
+            # a fresh program folds on the NEW owners: cached host copies
+            # ship over, the table is never re-read
+            res2, rep2 = s.run(CountProgram())
+            assert int(np.asarray(res2)) == 128
+            q2 = rep2.query
+            assert s.blocks.stats.gathers == gathers0, "zero table re-reads"
+            assert q2.blocks_transferred > 0, q2
+            print("REHOME_OK", s.blocks.stats.quarantines,
+                  q2.blocks_transferred)
+        """
+        proc = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(body)],
+            capture_output=True, text=True, env=_subprocess_env(4),
+            timeout=600)
+        assert proc.returncode == 0, (
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+        assert "REHOME_OK" in proc.stdout

@@ -376,6 +376,44 @@ class TestAdmission:
             fe.submit(s.scan().map(CountProgram()).reduce())
         assert s.fold_gate is None       # hook released
 
+    def test_double_close_is_idempotent(self):
+        s = make_session()
+        fe = GridFrontend(s, workers=1)
+        fe.query(s.scan().map(CountProgram()).reduce(), timeout=120)
+        fe.close()
+        fe.close()                       # second close: clean no-op
+        assert s.fold_gate is None
+        # and the context manager may wrap an already-closed frontend
+        with fe:
+            pass
+
+    def test_close_drains_in_flight_work(self):
+        """close() called while queries are executing and a mutation is
+        queued behind them: everything submitted before the close
+        resolves (no dangling futures), then the frontend shuts down."""
+        s = make_session()
+        fe = GridFrontend(s, workers=2, tick_ms=0.0)
+        futs = [fe.submit(s.scan().map(CountProgram()).reduce())
+                for _ in range(4)]
+        done = threading.Event()
+
+        def mutate():
+            fe.upload(["zzclose"], row_batch(["zzclose"]))
+            done.set()
+
+        mut = threading.Thread(target=mutate)
+        mut.start()
+        fe.close()
+        mut.join(timeout=120)
+        assert done.is_set(), "mutation queued before close must complete"
+        for f in futs:
+            val, _rep = f.result(timeout=120)   # resolved, not abandoned
+            assert int(val) in (64, 65)
+        assert s.table.num_rows == 65
+        snap = fe.stats.snapshot()
+        assert snap.served == snap.submitted == 4
+        assert snap.mutations == 1
+
 
 class TestThreadSafetySubstrate:
     def test_lru_iteration_safe_under_concurrent_eviction(self):
