@@ -1,0 +1,220 @@
+"""Sketch-statistics microbench — fused sketch fold overhead vs the plain
+moments fold, warm repeat cost, and measured accuracy vs the exact oracles.
+
+Three numbers back the sketch PR's claims:
+
+1. **fold overhead** — each sketch program folds a scalar metadata
+   column (the sketch use case: distinct patients, site cardinality,
+   intensity/age quantiles — one item per row) and its cold-data wall is
+   gated against the plain :class:`MomentsProgram` fold over the same
+   column.  The gated metric ``sketch_fold_overhead_vs_moments`` is the
+   WORST of the three per-program ratios (≤ 1.5×, the committed
+   baseline): approximating a statistic must not cost materially more
+   than the exact power sums it complements.  The combined
+   ``.map(cm).map(hll).map(qs)`` pipeline — one gather, three
+   per-program folds, three cache entries by design — is reported
+   unguarded as ``sketch_pipeline_cold_data_s``, as is element-level
+   sketching of a full (16, 16) payload block (256 items/row,
+   ``payload_sketch_cold_data_s``); both scale with work by design.
+2. **warm repeat** — a repeat sketch query on a clean epoch folds ZERO
+   rows (block-partial cache; asserted, and exported as
+   ``warm_rows_folded``) and serves from merged partials.
+3. **accuracy** — the same run reports measured error vs the float64
+   oracles in :mod:`repro.core.ref` as fractions of each documented bound
+   (count-min overcount / ε·n, HLL relative error / standard error, rank
+   error / the dyadic bound); CI's sketch-accuracy leg asserts the
+   bounds, this artifact tracks the margin.
+
+Artifact: ``BENCH_sketches.json`` via benchmarks/run.py (also in
+``--smoke``; the perf gate checks ``sketch_fold_overhead_vs_moments`` and
+``warm_rows_folded``).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import ref
+from repro.core.grid import GridSession
+from repro.core.regions import HierarchicalSplitPolicy
+from repro.core.stats import (
+    CountMinProgram,
+    HyperLogLogProgram,
+    MomentsProgram,
+    QuantileSketchProgram,
+)
+from repro.core.table import ColumnSpec, make_mip_table
+
+N_REGIONS = 16
+ROWS_PER_REGION = 256
+PAYLOAD = (16, 16)
+ETA = 64
+REPS = 10
+
+CM = CountMinProgram(depth=4, width=1024, seed=71)
+HLL = HyperLogLogProgram(p=12, seed=72)
+QS = QuantileSketchProgram(lo=-5.0, hi=5.0, log2_universe=12, depth=4,
+                           width=2048, probes=(0.5, 0.9, 0.99), seed=73)
+
+
+def _make_table(seed=0):
+    rng = np.random.default_rng(seed)
+    groups = [f"g{i:02d}" for i in range(N_REGIONS)]
+    t = make_mip_table(
+        payload_shape=PAYLOAD,
+        extra_index_columns=[ColumnSpec("site", (), np.int32),
+                             ColumnSpec("val", (), np.float32)],
+        split_policy=HierarchicalSplitPolicy(max_region_bytes=10**18),
+        presplit_keys=groups[1:])
+    keys = [f"{g}x{i:04d}" for g in groups for i in range(ROWS_PER_REGION)]
+    n = len(keys)
+    t.upload(keys, {
+        "img": {"data": rng.normal(size=(n,) + PAYLOAD).astype(np.float32)},
+        "idx": {"size": rng.integers(6_000_000, 20_000_001, n),
+                "site": rng.integers(0, 8, n).astype(np.int32),
+                "val": rng.normal(size=n).astype(np.float32).clip(-4.9, 4.9)}})
+    return t
+
+
+def _timed(fn, reps=REPS):
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def _clear_data_caches(s):
+    """Forget results, partials, and resident blocks (compiled executables
+    stay): per-rep full gather+fold cost, no compile — the steady-state
+    regime the overhead ratio is about."""
+    s._results.clear()
+    s.blocks.clear()
+
+
+def _timed_cold_data(s, fn, reps=REPS):
+    samples = []
+    for _ in range(reps):
+        _clear_data_caches(s)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def _sketch_query(s, column="idx:val"):
+    return (s.scan().select(column).map(CM).map(HLL).map(QS).reduce())
+
+
+def _moments_query(s, column="idx:val"):
+    return s.scan().select(column).map(MomentsProgram()).reduce()
+
+
+def run(verbose: bool = True):
+    t = _make_table()
+    vals = t.column("idx", "val")
+    n_items = vals.size
+
+    # --- scalar-column sketch fold: cold, warm, cold-data ---------------
+    s = GridSession(t, default_eta=ETA, compact_gather_threshold=0.0)
+    t0 = time.perf_counter()
+    (cm_res, hll_res, q_res), rep_cold = _sketch_query(s).collect()
+    jax.block_until_ready(q_res["quantiles"])
+    sketch_cold_s = time.perf_counter() - t0
+    assert rep_cold.query.rows_folded == t.num_rows
+
+    def warm():
+        res, rep = _sketch_query(s).collect()
+        assert rep.query.rows_folded == 0, rep.query    # acceptance
+        return res[2]["quantiles"]
+    sketch_warm_s = _timed(warm)
+    pipeline_data_s = _timed_cold_data(
+        s, lambda: _sketch_query(s).collect()[0][2]["quantiles"])
+
+    # --- plain moments fold over the same column (overhead baseline) ----
+    s_m = GridSession(t, default_eta=ETA, compact_gather_threshold=0.0)
+    _moments_query(s_m).collect()                       # compile
+    moments_data_s = _timed_cold_data(
+        s_m, lambda: _moments_query(s_m).collect()[0])
+
+    # --- per-program fold cost: the gated ratio is the worst sketch -----
+    per_program = {}
+    for name, prog in [("cm", CM), ("hll", HLL), ("qs", QS)]:
+        s_1 = GridSession(t, default_eta=ETA, compact_gather_threshold=0.0)
+        def one():
+            return s_1.scan().select("idx:val").map(prog).reduce().collect()[0]
+        one()                                           # compile
+        per_program[name] = _timed_cold_data(s_1, one)
+    overhead = max(per_program.values()) / max(moments_data_s, 1e-9)
+
+    # --- element-level payload sketching: unguarded trajectory metric ---
+    s_p = GridSession(t, default_eta=ETA, compact_gather_threshold=0.0)
+    _sketch_query(s_p, "img:data").collect()            # compile
+    payload_data_s = _timed_cold_data(
+        s_p, lambda: _sketch_query(s_p, "img:data").collect()[0][1],
+        reps=3)
+
+    # --- measured accuracy as a fraction of each documented bound -------
+    cm_np = jax.tree.map(np.asarray, cm_res)
+    uniq, counts = ref.exact_frequencies(vals)
+    est = CM.estimate(cm_np, uniq)
+    eps_n, _ = CM.error_bound(n_items)
+    cm_overcount_frac = float((est - counts).max() / eps_n)
+
+    true_d = ref.exact_distinct(vals)
+    hll_rel_err = abs(float(np.asarray(hll_res["estimate"])) - true_d) / true_d
+    hll_err_frac = hll_rel_err / HLL.std_error()
+
+    v = np.asarray(q_res["quantiles"])
+    below, _ = ref.rank_interval(vals, v - QS.value_resolution())
+    _, at_or_below = ref.rank_interval(vals, v + QS.value_resolution())
+    targets = np.ceil(np.asarray(QS.probes) * n_items)
+    rank_err = ref.interval_distance(targets, below, at_or_below)
+    rank_err_frac = float(rank_err.max() / (QS.rank_error_bound(n_items) + 1))
+
+    out = {
+        "n_rows": t.num_rows,
+        "n_items": int(n_items),
+        "n_regions": N_REGIONS,
+        "eta": ETA,
+        "sketch_cold_s": sketch_cold_s,
+        "sketch_pipeline_cold_data_s": pipeline_data_s,
+        "sketch_warm_s": sketch_warm_s,
+        "moments_cold_data_s": moments_data_s,
+        "cm_cold_data_s": per_program["cm"],
+        "hll_cold_data_s": per_program["hll"],
+        "qs_cold_data_s": per_program["qs"],
+        "sketch_fold_overhead_vs_moments": overhead,
+        "payload_sketch_cold_data_s": payload_data_s,
+        "warm_rows_folded": 0,
+        "cm_overcount_frac_of_bound": cm_overcount_frac,
+        "hll_rel_err": hll_rel_err,
+        "hll_err_frac_of_se": hll_err_frac,
+        "quantile_rank_err_frac_of_bound": rank_err_frac,
+    }
+    if verbose:
+        print(f"sketch pipeline (cm+hll+quantile over {n_items} scalar "
+              f"items): cold={sketch_cold_s*1e3:.1f}ms "
+              f"cold-data={pipeline_data_s*1e3:.1f}ms "
+              f"warm={sketch_warm_s*1e3:.2f}ms")
+        print(f"per-program cold-data: "
+              f"cm={per_program['cm']*1e3:.1f}ms "
+              f"hll={per_program['hll']*1e3:.1f}ms "
+              f"qs={per_program['qs']*1e3:.1f}ms "
+              f"vs moments={moments_data_s*1e3:.1f}ms "
+              f"-> worst overhead {overhead:.2f}x (gate <= 1.5x); "
+              f"payload-element sketch {payload_data_s*1e3:.1f}ms "
+              f"(unguarded)")
+        print(f"accuracy: cm_overcount={cm_overcount_frac:.3f} of eps*n, "
+              f"hll={hll_err_frac:.2f} se, "
+              f"rank={rank_err_frac:.3f} of bound")
+    return out
+
+
+if __name__ == "__main__":
+    run()

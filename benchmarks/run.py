@@ -9,7 +9,8 @@ summary EXPERIMENTS.md quotes, and writes one JSON artifact per bench
 
 ``--smoke`` runs every artifact-emitting bench except the table-scheme
 sweep and the roofline (balancer, chunk model, kernels, query pruning,
-blockstore, fold engine, group_by, frontend, tiers, faults) — CI uploads the JSON files from each
+blockstore, fold engine, group_by, frontend, tiers, faults, sketches) —
+CI uploads the JSON files from each
 run and gates headline metrics against ``benchmarks/perf_baselines.json``
 via ``benchmarks/check_regression.py``.
 """
@@ -174,6 +175,20 @@ def run_faults(smoke: bool = True) -> None:
                    f"{b['quarantine_recovery_wall_s']:.2f}"))
 
 
+def run_sketches() -> None:
+    from benchmarks import bench_sketches
+
+    _run_bench(
+        "sketches",
+        "[PR 10] Sketch statistics: fold overhead, warm repeat, accuracy",
+        bench_sketches.run,
+        lambda b: (f"overhead_x={b['sketch_fold_overhead_vs_moments']:.2f};"
+                   f"warm_rows={b['warm_rows_folded']};"
+                   f"cm_frac={b['cm_overcount_frac_of_bound']:.2f};"
+                   f"hll_se={b['hll_err_frac_of_se']:.2f};"
+                   f"rank_frac={b['quantile_rank_err_frac_of_bound']:.2f}"))
+
+
 def run_kernels() -> None:
     from benchmarks import bench_kernels
 
@@ -215,6 +230,7 @@ def main() -> None:
         run_frontend(smoke=True)
         run_tiers()
         run_faults(smoke=True)
+        run_sketches()
         print("\nsmoke benchmarks complete")
         return
 
@@ -230,6 +246,7 @@ def main() -> None:
     run_frontend(smoke=False)
     run_tiers()
     run_faults(smoke=False)
+    run_sketches()
     run_kernels()
 
     print("\n--- Roofline (single-pod dry-run artifacts) ---")

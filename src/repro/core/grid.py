@@ -305,10 +305,20 @@ class _RegionWork:
 
 @dataclasses.dataclass
 class _GroupInfo:
-    """A plan's resolved stratification: the group-key column, the dense
+    """A plan's resolved stratification: the group-key column(s), the dense
     value→gid mapping over the *selected* rows, and the signature that
     content-addresses group-keyed partials (a gid assignment is only
     meaningful under the exact global mapping it was derived from).
+
+    Composite keys (``group_by(["idx:site", "idx:scanner"])``) densify to
+    ONE gid space: each column factorizes independently, the per-row codes
+    combine lexicographically in listed-column order, and the observed
+    combinations become gids 0..G-1 — so a stratified fold still segment-
+    sums a single ``[G, ...]`` partial per block.  ``keys`` labels groups
+    with scalar values for a single key column and with tuples (listed
+    order) for composites.  The signature hashes the ordered column names
+    with the mapping, so ``["site", "scanner"]`` and ``["scanner",
+    "site"]`` address different partials.
 
     Only the distinct values (``keys`` — needed every execution for the
     result-cache key and the returned group labels) are materialized, and
@@ -316,27 +326,48 @@ class _GroupInfo:
     lazily per region slice (:meth:`gids_for`), so result-cache hits and
     reused partials never pay a full-column densification."""
 
-    family: str
-    qualifier: str
-    keys: np.ndarray           # [G] distinct selected values, ascending
-    sig: str                   # digest of (column identity, mapping)
-    row_nbytes: int            # per-row bytes of the key column (accounting)
+    columns: Tuple[Tuple[str, str], ...]  # (family, qualifier) per key col
+    keys: np.ndarray           # [G] group labels: scalars or tuples
+    per_col_keys: Tuple[np.ndarray, ...]  # per-column distinct values, asc
+    combo_codes: np.ndarray    # [G] observed combined codes, ascending
+    sig: str                   # digest of (ordered columns, mapping)
+    row_nbytes: int            # per-row key bytes, all columns (accounting)
+
+    @property
+    def family(self) -> str:
+        """Joined family label for gid-block cache addressing (the sig
+        already pins the exact column set and order)."""
+        return "|".join(f for f, _ in self.columns)
+
+    @property
+    def qualifier(self) -> str:
+        return "|".join(q for _, q in self.columns)
 
     @property
     def num_groups(self) -> int:
-        return len(self.keys)
+        return len(self.combo_codes)
 
-    def gids_for(self, values: np.ndarray) -> np.ndarray:
+    def gids_for(self, values) -> np.ndarray:
         """Dense int32 group ids for one region's key-column rows —
         computed only when a block actually folds (partial-cache miss).
-        ``values`` must be read from the table at call time (positions may
-        shift under unrelated mutations; the mapping itself is pinned by
-        the lineage-keyed memo).  Values outside the selected universe
-        land on a clipped (valid but masked-off) gid."""
-        if not len(self.keys):
-            return np.zeros(len(values), np.int32)
-        return np.searchsorted(self.keys, values).clip(
-            0, len(self.keys) - 1).astype(np.int32)
+        ``values`` is one array (single key) or a tuple of per-column
+        arrays (composite key, listed order), read from the table at call
+        time (positions may shift under unrelated mutations; the mapping
+        itself is pinned by the lineage-keyed memo).  Values outside the
+        selected universe land on a clipped (valid but masked-off) gid."""
+        cols = values if isinstance(values, (tuple, list)) else (values,)
+        if len(cols) != len(self.columns):
+            raise ValueError(
+                f"expected {len(self.columns)} key column(s), got {len(cols)}")
+        if not len(self.combo_codes):
+            return np.zeros(len(cols[0]), np.int32)
+        combined = np.zeros(len(cols[0]), np.int64)
+        for vals, uniq in zip(cols, self.per_col_keys):
+            code = np.searchsorted(uniq, vals).clip(
+                0, max(len(uniq) - 1, 0))
+            combined = combined * max(len(uniq), 1) + code
+        return np.searchsorted(self.combo_codes, combined).clip(
+            0, len(self.combo_codes) - 1).astype(np.int32)
 
 
 @dataclasses.dataclass
@@ -926,23 +957,52 @@ class GridSession:
         values exactly, so a repeat grouped query costs an LRU lookup, not
         an O(N log N) unique+hash over the selection.
         """
-        gf, gq = plan.group_key
-        memo_key = (gf, gq, work_sig)
+        key_cols = plan.group_key
+        memo_key = (key_cols, work_sig)
         cached = self._groups.get(memo_key)
         if cached is not None:
             return cached
-        spec = self.table.column_spec(gf, gq)
-        if spec.shape != ():
-            raise ValueError(
-                f"group_by column {gf}:{gq} must be scalar per row, "
-                f"got shape {spec.shape}")
-        col = self.table.column(gf, gq)
-        sel_vals = col if mask is None else col[mask]
-        uniq = np.unique(sel_vals)
+        row_nbytes = 0
+        per_col_vals = []
         h = hashlib.blake2b(digest_size=12)
-        h.update(f"{gf}:{gq}:{uniq.dtype.str}".encode())
-        h.update(uniq.tobytes())
-        info = _GroupInfo(gf, gq, uniq, h.hexdigest(), spec.row_nbytes)
+        for gf, gq in key_cols:
+            spec = self.table.column_spec(gf, gq)
+            if spec.shape != ():
+                raise ValueError(
+                    f"group_by column {gf}:{gq} must be scalar per row, "
+                    f"got shape {spec.shape}")
+            row_nbytes += spec.row_nbytes
+            col = self.table.column(gf, gq)
+            per_col_vals.append(col if mask is None else col[mask])
+        per_col_keys = []
+        combined = np.zeros(len(per_col_vals[0]), np.int64)
+        for (gf, gq), vals in zip(key_cols, per_col_vals):
+            uniq, inv = np.unique(vals, return_inverse=True)
+            per_col_keys.append(uniq)
+            combined = combined * max(len(uniq), 1) + inv.reshape(-1)
+            # ordered column identity + per-column universe: the sig
+            # distinguishes ["site","scanner"] from ["scanner","site"]
+            h.update(f"{gf}:{gq}:{uniq.dtype.str}:{len(uniq)};".encode())
+            h.update(uniq.tobytes())
+        combo_codes = np.unique(combined)
+        h.update(combo_codes.tobytes())
+        if len(key_cols) == 1:
+            keys = per_col_keys[0]
+        else:
+            # decode each observed combination back to a tuple label, in
+            # listed-column (lexicographic) order
+            keys = np.empty(len(combo_codes), object)
+            for g, code in enumerate(combo_codes):
+                parts = []
+                rem = int(code)
+                for uniq in reversed(per_col_keys):
+                    rem, idx = divmod(rem, max(len(uniq), 1))
+                    parts.append(uniq[idx].item()
+                                 if hasattr(uniq[idx], "item")
+                                 else uniq[idx])
+                keys[g] = tuple(reversed(parts))
+        info = _GroupInfo(tuple(key_cols), keys, tuple(per_col_keys),
+                          combo_codes, h.hexdigest(), row_nbytes)
         self._groups.put(memo_key, info)
         return info
 
@@ -1316,8 +1376,9 @@ class GridSession:
             gid_base = self.blocks.get_gids(
                 w.region, group.family, group.qualifier, group.sig)
             if gid_base is None:
-                key_col = self.table.column(group.family, group.qualifier)
-                gid_base = group.gids_for(key_col[w.rows])
+                gid_base = group.gids_for(tuple(
+                    self.table.column(f, q)[w.rows]
+                    for f, q in group.columns))
                 self.blocks.put_gids(
                     w.region, group.family, group.qualifier,
                     group.sig, gid_base)

@@ -89,8 +89,10 @@ class MapReduceProgram:
       * ``merge(a, b)``             — associative combine of partials;
       * ``finalize(partial)``       — partial -> user-facing result.
 
-    ``additive`` marks programs whose partials combine by elementwise sum,
-    enabling the single-``psum`` reduce path.
+    ``additive`` marks programs whose partials combine by a per-leaf
+    elementwise operator — sum by default, or the operator named by
+    :meth:`merge_ops_for` — enabling the single-collective reduce path
+    (``psum``/``pmax``).
 
     Programs whose statistic is a projection of the raw power sums may also
     declare :meth:`requires` / :meth:`finalize_shared`; a CSE'd
@@ -118,6 +120,24 @@ class MapReduceProgram:
 
     def merge(self, a: PyTree, b: PyTree) -> PyTree:
         raise NotImplementedError
+
+    def merge_ops_for(self, partial: PyTree) -> Optional[List[str]]:
+        """Per-leaf merge operators for an ``additive`` program, aligned
+        with ``jax.tree.leaves(partial)``: each entry is ``"sum"`` or
+        ``"max"``.  ``None`` (the default) means every leaf merges by
+        elementwise sum — the classic additive monoid.
+
+        This is how a max-merge sketch (HyperLogLog registers) rides the
+        engine's additive fast paths: the tree reduce issues ``pmax``
+        instead of ``psum`` for ``"max"`` leaves, and the stacked funnel /
+        owner pre-merge reduce with ``max(axis=0)`` instead of
+        ``sum(axis=0)``.  Contract: ``zero()`` must be the identity of
+        each leaf's operator (0 works for both sum and max over
+        non-negative registers), and ``merge`` must agree leafwise with
+        the declared operators.  Only consulted when ``additive``; the
+        argument may be a tracer — implementations may inspect only its
+        tree structure, never its values."""
+        return None
 
     def finalize(self, partial: PyTree) -> PyTree:
         raise NotImplementedError
@@ -156,6 +176,38 @@ class MapReduceProgram:
         every leaf).  Must merge/finalize identically to a partial the
         program folded itself, up to float associativity."""
         raise NotImplementedError
+
+
+def _checked_merge_ops(program: MapReduceProgram,
+                       partial: PyTree) -> Optional[List[str]]:
+    """The program's per-leaf merge operators, validated against the
+    partial's actual leaf count — ``None`` for the all-sum common case."""
+    ops = program.merge_ops_for(partial)
+    if ops is None:
+        return None
+    n_leaves = len(jax.tree_util.tree_leaves(partial))
+    if len(ops) != n_leaves:
+        raise ValueError(
+            f"{type(program).__name__}.merge_ops_for returned {len(ops)} "
+            f"operators for a partial with {n_leaves} leaves")
+    bad = sorted(set(ops) - {"sum", "max"})
+    if bad:
+        raise ValueError(f"unknown merge operators {bad}; "
+                         "expected 'sum' or 'max'")
+    return ops
+
+
+def _combine_leafwise(partial_like: PyTree, ops: Optional[List[str]],
+                      sum_fn: Callable[[Any], Any],
+                      max_fn: Callable[[Any], Any]) -> PyTree:
+    """Apply ``sum_fn`` / ``max_fn`` leaf-by-leaf per the operator list
+    (``None`` = all sum) and rebuild the tree."""
+    if ops is None:
+        return jax.tree.map(sum_fn, partial_like)
+    leaves, treedef = jax.tree_util.tree_flatten(partial_like)
+    out = [max_fn(leaf) if op == "max" else sum_fn(leaf)
+           for leaf, op in zip(leaves, ops)]
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 @dataclasses.dataclass
@@ -284,10 +336,13 @@ class MapReduceEngine:
         if program.additive:
             def mapper(values, valid):
                 partial = local_fold(values, valid)
-                total = jax.tree.map(
-                    lambda x: jax.lax.psum(x, axis_name=data_axis), partial
-                )
-                return total
+                # per-leaf collective: psum for sum leaves, pmax for max
+                # leaves (HLL registers) — one hardware all-reduce either way
+                ops = _checked_merge_ops(program, partial)
+                return _combine_leafwise(
+                    partial, ops,
+                    lambda x: jax.lax.psum(x, axis_name=data_axis),
+                    lambda x: jax.lax.pmax(x, axis_name=data_axis))
         else:
             def mapper(values, valid):
                 partial = local_fold(values, valid)
@@ -606,8 +661,11 @@ class MapReduceEngine:
 
         def build():
             def presum(*ps):
+                ops = _checked_merge_ops(program, ps[0])
                 stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
-                return jax.tree.map(lambda s: s.sum(axis=0), stacked)
+                return _combine_leafwise(stacked, ops,
+                                         lambda s: s.sum(axis=0),
+                                         lambda s: s.max(axis=0))
 
             return jax.jit(presum)
 
@@ -660,8 +718,11 @@ class MapReduceEngine:
 
         def build():
             def local(t):
-                return jax.tree.map(
-                    lambda x: jax.lax.psum(x[0], self.data_axis), t)
+                ops = _checked_merge_ops(program, t)
+                return _combine_leafwise(
+                    t, ops,
+                    lambda x: jax.lax.psum(x[0], self.data_axis),
+                    lambda x: jax.lax.pmax(x[0], self.data_axis))
 
             reduce_fn = shard_map_compat(
                 local, mesh=self.mesh, in_specs=P(self.data_axis),
@@ -687,8 +748,11 @@ class MapReduceEngine:
                 if not ps:
                     acc = program.zero(shape, dtype)
                 elif program.additive and len(ps) > 1:
+                    ops = _checked_merge_ops(program, ps[0])
                     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
-                    acc = jax.tree.map(lambda s: s.sum(axis=0), stacked)
+                    acc = _combine_leafwise(stacked, ops,
+                                            lambda s: s.sum(axis=0),
+                                            lambda s: s.max(axis=0))
                 else:
                     items: List[PyTree] = list(ps)
                     while len(items) > 1:

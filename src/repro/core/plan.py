@@ -105,7 +105,8 @@ class GridQuery:
     predicate: Optional[Predicate] = None
     index_qualifiers: Tuple[str, ...] = ()
     programs: Tuple[MapReduceProgram, ...] = ()
-    group_key: Optional[Tuple[str, str]] = None  # stratification column
+    # stratification columns: tuple of (family, qualifier), in key order
+    group_key: Optional[Tuple[Tuple[str, str], ...]] = None
     # (eta, epoch) -> (results, report); dropped by every builder call
     _memo: Dict[Tuple[int, int], Tuple[Any, "RunReport"]] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
@@ -137,21 +138,33 @@ class GridQuery:
                 cols.append(_parse_column(c))
         return self._fork(columns=tuple(cols))
 
-    def group_by(self, column: ColumnRef) -> "GridQuery":
-        """Stratify every mapped statistic by a scalar key column.
+    def group_by(self, column) -> "GridQuery":
+        """Stratify every mapped statistic by one or more scalar key columns.
 
-        ``column`` (e.g. ``"idx:site"``) is read like an index column — a
-        few bytes per row, never the payload.  Execution assigns each
-        selected row a dense group id, the per-block folds segment-sum
-        group-keyed partials in the same single pass, and results come back
-        as one :class:`~repro.core.stats.GroupedResult` per computed column
-        (``keys`` = the distinct group values among selected rows,
-        ascending; result leaves gain a leading group axis).
+        ``column`` is a single column ref (e.g. ``"idx:site"``) or a *list*
+        of refs for a composite key (``group_by(["idx:site",
+        "idx:scanner"])``).  Key columns are read like index columns — a
+        few bytes per row, never the payload.  Execution densifies the
+        (combined) key to one dense group id per selected row, the
+        per-block folds segment-sum group-keyed partials in the same single
+        pass, and results come back as one
+        :class:`~repro.core.stats.GroupedResult` per computed column.
+        Single-column keys label groups with scalar key values; composite
+        keys with tuples, ordered lexicographically by the listed columns
+        (so ``["idx:site", "idx:scanner"]`` and ``["idx:scanner",
+        "idx:site"]`` are distinct groupings with distinct cache
+        identities).
         """
         if self.group_key is not None:
-            raise ValueError("plan already grouped; compose the keys into "
-                             "one column instead")
-        return self._fork(group_key=_parse_column(column))
+            raise ValueError("plan already grouped; pass the composite key "
+                             "as one group_by([...]) list instead")
+        cols = column if isinstance(column, list) else [column]
+        if not cols:
+            raise ValueError("group_by needs at least one key column")
+        parsed = tuple(_parse_column(c) for c in cols)
+        if len(set(parsed)) != len(parsed):
+            raise ValueError(f"duplicate group_by key columns in {parsed}")
+        return self._fork(group_key=parsed)
 
     def where(self, predicate: Predicate,
               index_qualifiers: Sequence[str]) -> "GridQuery":
@@ -214,7 +227,8 @@ class GridQuery:
             f"  select  {', '.join(f'{f}:{q}' for f, q in cols)}",
             f"  where   {self.predicate!r} over idx{list(self.index_qualifiers)}"
             if self.predicate is not None else "  where   -",
-            f"  group   {self.group_key[0]}:{self.group_key[1]}"
+            f"  group   "
+            f"{', '.join(f'{f}:{q}' for f, q in self.group_key)}"
             if self.group_key is not None else "  group   -",
             f"  map     {len(self.programs)} program(s) fused: "
             f"{[type(p).__name__ for p in self.programs]}"

@@ -29,14 +29,17 @@ try:
     settings.load_profile(os.environ.get(
         "HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI") else "dev"))
 except ImportError:
-    # A CI run that EXPLICITLY selected the hypothesis "ci" profile must
-    # not silently drop the property/state-machine tests to 0 examples —
-    # that is how a broken `pip install` once shipped a suite that "passed"
-    # while the differential state machine never ran.  Local containers
-    # without hypothesis (no profile requested) still degrade gracefully.
-    if os.environ.get("HYPOTHESIS_PROFILE") == "ci":
+    # A CI run that EXPLICITLY selected a hypothesis profile must not
+    # silently drop the property/state-machine tests to 0 examples — that
+    # is how a broken `pip install` once shipped a suite that "passed"
+    # while the differential state machine never ran.  This covers both
+    # the PR matrix (HYPOTHESIS_PROFILE=ci) and the nightly deep walk
+    # (HYPOTHESIS_PROFILE=dev under CI).  Local containers without
+    # hypothesis (no profile requested) still degrade gracefully.
+    _profile = os.environ.get("HYPOTHESIS_PROFILE")
+    if _profile == "ci" or (_profile and os.environ.get("CI")):
         raise RuntimeError(
-            "HYPOTHESIS_PROFILE=ci is set but the 'hypothesis' package is "
-            "missing: the CI environment must `pip install -r "
+            f"HYPOTHESIS_PROFILE={_profile} is set but the 'hypothesis' "
+            "package is missing: the CI environment must `pip install -r "
             "requirements.txt` (which pins it). Refusing to skip the "
             "property tests silently.")

@@ -379,6 +379,126 @@ class TestGroupedCaching:
 
 
 # ----------------------------------------------------------------------
+# composite group keys: group_by(["f:a", "f:b"]) — tuple-labeled groups
+# ----------------------------------------------------------------------
+
+class TestCompositeKeys:
+    def composite(self, s, cols=("idx:site", "idx:sex")):
+        return (s.scan().select("img:data").group_by(list(cols))
+                .map(MeanProgram()).map(CountProgram()).reduce())
+
+    def test_composite_key_matches_oracle(self):
+        t = make_table(sites=3)
+        s = GridSession(t, default_eta=4)
+        res, rep = self.composite(s).collect()
+        data = t.column("img", "data")
+        sites, sexes = t.column("idx", "site"), t.column("idx", "sex")
+        combos = sorted({(int(a), int(b)) for a, b in zip(sites, sexes)})
+        assert isinstance(res, GroupedResult)
+        assert [tuple(int(x) for x in k) for k in res.keys] == combos
+        assert rep.query.num_groups == len(combos)
+        mean, count = res.values
+        for g, k in enumerate(res.keys):
+            sel = (sites == k[0]) & (sexes == k[1])
+            np.testing.assert_allclose(np.asarray(mean)[g],
+                                       data[sel].mean(0), atol=1e-4)
+            assert int(np.asarray(count)[g]) == int(sel.sum())
+        rep.query.check_partial_invariant()
+
+    def test_key_order_is_a_distinct_grouping(self):
+        """["idx:site", "idx:sex"] and the reverse are different groupings
+        with different tuple labels AND distinct partial-cache identities
+        (group_sig hashes the ordered column list)."""
+        t = make_table(sites=3)
+        s = GridSession(t, default_eta=4)
+        r1, _ = self.composite(s, ("idx:site", "idx:sex")).collect()
+        r = self.composite(s, ("idx:sex", "idx:site")).stats()
+        q = r.query
+        assert q.partials_reused == 0 and q.rows_folded > 0, q
+        assert q.gather_count == 0          # payload blocks are shared
+        sigs = {info.sig for info in s._groups.values()}
+        assert len(s._groups) == len(sigs) == 2
+        r2, _ = self.composite(s, ("idx:sex", "idx:site")).collect()
+        assert {tuple(map(int, k)) for k in r2.keys} == \
+            {(int(k[1]), int(k[0])) for k in r1.keys}
+
+    def test_composite_mutation_refolds_only_dirty_region(self):
+        t = make_table(sites=3)
+        s = GridSession(t, default_eta=4)
+        self.composite(s).stats()
+        rng = np.random.default_rng(17)
+        key = b"c0002"
+        _, age = s.retrieve("idx", "age", rowkey=key)
+        _, sex = s.retrieve("idx", "sex", rowkey=key)
+        _, site = s.retrieve("idx", "site", rowkey=key)
+        _, size = s.retrieve("idx", "size", rowkey=key)
+        s.upload([key], {
+            "img": {"data": rng.normal(size=(1,) + PAYLOAD)
+                    .astype(np.float32)},
+            "idx": {"size": size, "age": age, "sex": sex, "site": site}},
+            on_duplicate="overwrite")
+        res, rep = self.composite(s).collect()
+        q = rep.query
+        dirty = t.regions.region_for(key)
+        assert q.partials_reused == q.partials_total - 1, q
+        assert q.rows_folded == dirty.num_rows(t.keys), q
+        data = t.column("img", "data")
+        sites, sexes = t.column("idx", "site"), t.column("idx", "sex")
+        mean = res.values[0]
+        for g, k in enumerate(res.keys):
+            sel = (sites == k[0]) & (sexes == k[1])
+            np.testing.assert_allclose(np.asarray(mean)[g],
+                                       data[sel].mean(0), atol=1e-4)
+
+    def test_composite_universe_change_stays_correct(self):
+        t = make_table(sites=2)
+        s = GridSession(t, default_eta=4)
+        self.composite(s).stats()
+        rng = np.random.default_rng(21)
+        s.upload([b"a0001"], {
+            "img": {"data": rng.normal(size=(1,) + PAYLOAD)
+                    .astype(np.float32)},
+            "idx": {"size": np.array([7_000_000]),
+                    "age": np.array([30.0], np.float32),
+                    "sex": np.array([0], np.int8),
+                    "site": np.array([55], np.int32)}},  # NEW site value
+            on_duplicate="overwrite")
+        res, rep = self.composite(s).collect()
+        sites, sexes = t.column("idx", "site"), t.column("idx", "sex")
+        combos = sorted({(int(a), int(b)) for a, b in zip(sites, sexes)})
+        assert [tuple(map(int, k)) for k in res.keys] == combos
+        assert any(int(k[0]) == 55 for k in res.keys)
+
+    def test_tuple_keyed_result_api(self):
+        t = make_table(sites=2)
+        s = GridSession(t, default_eta=4)
+        res, _ = self.composite(s).collect()
+        k0 = tuple(res.keys[0])
+        g = res.group(k0)
+        np.testing.assert_array_equal(np.asarray(g[0]),
+                                      np.asarray(res.values[0])[0])
+        assert res.index_of(k0) == 0
+        d = res.asdict()
+        assert len(d) == len(res)
+        assert all(isinstance(k, tuple) and len(k) == 2 for k in d)
+        with pytest.raises(KeyError):
+            res.index_of((99, 99))
+
+    def test_composite_validation_and_explain(self):
+        s = GridSession(make_table(per=4))
+        with pytest.raises(ValueError):
+            s.scan().group_by([])
+        with pytest.raises(ValueError):
+            s.scan().group_by(["idx:site", "idx:site"])
+        plan = (s.scan().group_by(["idx:site", "idx:sex"])
+                .map(MeanProgram()).reduce())
+        assert "idx:site, idx:sex" in plan.explain()
+        rev = (s.scan().group_by(["idx:sex", "idx:site"])
+               .map(MeanProgram()).reduce())
+        assert plan.signature() != rev.signature()
+
+
+# ----------------------------------------------------------------------
 # GroupedProgram / GroupedResult units
 # ----------------------------------------------------------------------
 

@@ -15,9 +15,9 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_snippet(body: str) -> str:
+def run_snippet(body: str, devices: int = 8) -> str:
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.setdefault("JAX_PLATFORMS", "cpu")
     proc = subprocess.run(
@@ -216,6 +216,131 @@ def test_tree_reduce_merge_8dev():
         print('TREE_REDUCE_OK', s.engine.merge_path_counts)
     """)
     assert "TREE_REDUCE_OK" in out
+
+
+@pytest.mark.slow
+def test_sketch_merge_order_invariance_8dev():
+    """Acceptance: sketch results are BIT-identical whichever merge path
+    runs — the 8-device tree reduce (psum for count leaves, pmax for the
+    HLL registers) vs the forced single-stream funnel.  Int32 sums and
+    maxes carry no rounding, so this is exact equality, not allclose."""
+    out = run_snippet("""
+        import numpy as np, jax
+        from repro.core.grid import GridSession
+        from repro.core.stats import (CountMinProgram, HyperLogLogProgram,
+                                      QuantileSketchProgram)
+        from repro.core.table import make_mip_table, ColumnSpec
+
+        assert jax.device_count() == 8
+        rng = np.random.default_rng(0)
+        groups = [f'g{i:02d}' for i in range(32)]       # high region count
+        t = make_mip_table(
+            payload_shape=(4, 4),
+            extra_index_columns=[ColumnSpec('site', (), np.int32)],
+            presplit_keys=groups[1:])
+        keys = [f'{g}x{i:03d}' for g in groups for i in range(6)]
+        n = len(keys)
+        data = rng.normal(size=(n, 4, 4)).astype(np.float32)
+        t.upload(keys, {'img': {'data': data},
+                        'idx': {'size': rng.integers(6_000_000, 20_000_001, n),
+                                'site': rng.integers(0, 4, n).astype(np.int32)}})
+
+        def plan(sess):
+            return (sess.scan().select('img:data')
+                    .map(CountMinProgram(depth=4, width=1024, seed=51))
+                    .map(HyperLogLogProgram(p=10, seed=52))
+                    .map(QuantileSketchProgram(
+                        lo=-5.0, hi=5.0, log2_universe=11, depth=4,
+                        width=1024, probes=(0.5, 0.9), seed=53))
+                    .reduce())
+
+        s = GridSession(t, default_eta=4)
+        res_t, rep_t = plan(s).collect()
+        assert rep_t.query.merge_path == 'tree', rep_t.query
+
+        s2 = GridSession(t, default_eta=4)
+        s2.engine.merge_strategy = 'funnel'
+        res_f, rep_f = plan(s2).collect()
+        assert rep_f.query.merge_path == 'funnel', rep_f.query
+
+        lt, lf = jax.tree.leaves(res_t), jax.tree.leaves(res_f)
+        assert len(lt) == len(lf)
+        for a, b in zip(lt, lf):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+                'tree vs funnel sketch state diverged'
+
+        # and chunking is irrelevant too: different eta, same bits
+        res_e, _ = plan(GridSession(t, default_eta=4)).collect(eta=16)
+        for a, b in zip(lt, jax.tree.leaves(res_e)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        print('SKETCH_MERGE_OK')
+    """)
+    assert "SKETCH_MERGE_OK" in out
+
+
+@pytest.mark.slow
+def test_grouped_sketch_rebalance_4dev():
+    """Grouped sketch query on 4 devices: per-group estimates match the
+    exact oracles, and a rebalance re-homes the cached group-keyed sketch
+    partials without re-folding a row or changing a bit of the answer."""
+    out = run_snippet("""
+        import numpy as np, jax
+        from repro.core import ref
+        from repro.core.grid import GridSession
+        from repro.core.stats import HyperLogLogProgram, QuantileSketchProgram
+        from repro.core.table import make_mip_table, ColumnSpec
+
+        assert jax.device_count() == 4
+        rng = np.random.default_rng(1)
+        groups = [f'r{i:02d}' for i in range(16)]
+        t = make_mip_table(
+            payload_shape=(4, 4),
+            extra_index_columns=[ColumnSpec('site', (), np.int32)],
+            presplit_keys=groups[1:])
+        keys = [f'{g}x{i:03d}' for g in groups for i in range(8)]
+        n = len(keys)
+        data = rng.normal(size=(n, 4, 4)).astype(np.float32)
+        t.upload(keys, {'img': {'data': data},
+                        'idx': {'size': rng.integers(6_000_000, 20_000_001, n),
+                                'site': rng.integers(0, 3, n).astype(np.int32)}})
+
+        hll = HyperLogLogProgram(p=10, seed=61)
+        qs = QuantileSketchProgram(lo=-5.0, hi=5.0, log2_universe=11,
+                                   depth=4, width=1024, probes=(0.5,),
+                                   seed=62)
+        def plan(sess):
+            return (sess.scan().select('img:data').group_by('idx:site')
+                    .map(hll).map(qs).reduce())
+
+        s = GridSession(t, default_eta=4)
+        res1, rep1 = plan(s).collect()
+        sites = t.column('idx', 'site')
+        hll_res, q_res = res1.values
+        for g, k in enumerate(res1.keys):
+            sub = data[sites == k]
+            true_d = ref.exact_distinct(sub)
+            est = float(np.asarray(hll_res['estimate'])[g])
+            assert abs(est - true_d) <= 4 * hll.std_error() * true_d
+            n_g = sub.size
+            v = np.asarray(q_res['quantiles'])[g]
+            below, _ = ref.rank_interval(sub, v - qs.value_resolution())
+            _, at_or_below = ref.rank_interval(sub,
+                                               v + qs.value_resolution())
+            err = ref.interval_distance(np.ceil(0.5 * n_g),
+                                        below, at_or_below)
+            assert (err <= qs.rank_error_bound(n_g) + 1).all()
+
+        moved = s.rebalance(tolerance=0.0)
+        res2, rep2 = plan(s).collect()
+        assert rep2.query.rows_folded == 0, rep2.query
+        assert list(res1.keys) == list(res2.keys)
+        for a, b in zip(jax.tree.leaves(res1.values),
+                        jax.tree.leaves(res2.values)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+                'rebalance changed grouped sketch bits'
+        print('GROUPED_SKETCH_OK', len(moved))
+    """, devices=4)
+    assert "GROUPED_SKETCH_OK" in out
 
 
 @pytest.mark.slow

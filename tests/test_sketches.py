@@ -1,0 +1,548 @@
+"""Approximate-sketch programs: error bounds vs exact NumPy oracles, the
+exact merge law (bit-identical under any merge order/strategy/chunking),
+spill serialization, and end-to-end session integration.
+
+The acceptance oracles of the sketch PR live here and in
+test_multidevice.py:
+
+- every sketch estimate is within its DOCUMENTED bound of the float64
+  exact answer from :mod:`repro.core.ref` (ε·n / δ for count-min, the
+  dyadic rank bound for quantiles, standard-error multiples for HLL);
+- merged sketch state is bit-identical however the partials are merged
+  (sequential funnel, balanced tree, random permutation, engine funnel)
+  and however the rows are chunked — int32 sums and maxes carry no
+  rounding, so the merge law is exact, not approximate;
+- sketch partials round-trip the BlockStore's ``.npz`` spill path
+  bit-identically;
+- a repeat sketch query on a clean epoch folds zero rows (block-partial
+  caching), and grouped sketch queries match per-group oracles.
+"""
+
+import io
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ref
+from repro.core.grid import GridSession
+from repro.core.mapreduce import (
+    MapReduceEngine,
+    MapReduceProgram,
+    partial_from_host,
+    partial_to_host,
+)
+from repro.core.stats import (
+    CountMinProgram,
+    FusedProgram,
+    GroupedProgram,
+    GroupedResult,
+    HyperLogLogProgram,
+    MeanProgram,
+    QuantileSketchProgram,
+)
+from repro.utils import make_mesh
+
+from test_group_by import PAYLOAD, make_table
+
+SKETCHES = [
+    CountMinProgram(depth=4, width=1024, seed=11),
+    HyperLogLogProgram(p=11, seed=12),
+    # dense mode: U = 2048 <= depth * width -> exact bucket counts
+    QuantileSketchProgram(lo=-4.0, hi=4.0, log2_universe=11, depth=4,
+                          width=1024, probes=(0.25, 0.5, 0.9), seed=13),
+    # count-min mode: U = 65536 > depth * width -> hashed dyadic levels
+    QuantileSketchProgram(lo=-4.0, hi=4.0, log2_universe=16, depth=4,
+                          width=1024, probes=(0.5,), seed=14),
+]
+
+
+def quantile_rank_err(qs, items, quantiles, targets):
+    """Distance from each target rank to the exact rank interval of the
+    returned value widened by ±1 bucket (the documented value
+    quantization); what remains is the sketch's rank error."""
+    res = qs.value_resolution()
+    v = np.asarray(quantiles, np.float64)
+    below, _ = ref.rank_interval(items, v - res)
+    _, at_or_below = ref.rank_interval(items, v + res)
+    return ref.interval_distance(targets, below, at_or_below)
+
+
+def fold_items(program, items, eta=256, zero_shape=(1,)):
+    """Reference fold: chunk ``items`` (as [n, 1] rows) through map_chunk
+    + merge, all rows valid."""
+    rows = np.asarray(items, np.float32).reshape(-1, 1)
+    acc = program.zero(zero_shape, np.float32)
+    for start in range(0, len(rows), eta):
+        chunk = rows[start:start + eta]
+        valid = jnp.ones(len(chunk), bool)
+        acc = program.merge(acc, program.map_chunk(jnp.asarray(chunk), valid))
+    return acc
+
+
+def assert_trees_bitequal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        assert xa.dtype == ya.dtype
+        np.testing.assert_array_equal(xa, ya)
+
+
+# ----------------------------------------------------------------------
+# parameter validation
+# ----------------------------------------------------------------------
+
+class TestValidation:
+    def test_countmin_rejects_bad_params(self):
+        with pytest.raises(ValueError):
+            CountMinProgram(depth=0)
+        with pytest.raises(ValueError):
+            CountMinProgram(width=1000)          # not a power of two
+
+    def test_hll_rejects_bad_precision(self):
+        with pytest.raises(ValueError):
+            HyperLogLogProgram(p=3)
+        with pytest.raises(ValueError):
+            HyperLogLogProgram(p=17)
+
+    def test_quantile_rejects_bad_params(self):
+        with pytest.raises(ValueError):
+            QuantileSketchProgram(lo=1.0, hi=0.0)
+        with pytest.raises(ValueError):
+            QuantileSketchProgram(probes=(0.0,))
+        with pytest.raises(ValueError):
+            QuantileSketchProgram(probes=())
+        with pytest.raises(ValueError):
+            QuantileSketchProgram(width=100)
+
+    def test_cache_keys_distinguish_params(self):
+        assert CountMinProgram(seed=1).cache_key() != \
+            CountMinProgram(seed=2).cache_key()
+        assert QuantileSketchProgram(probes=(0.5,)).cache_key() != \
+            QuantileSketchProgram(probes=(0.9,)).cache_key()
+
+
+# ----------------------------------------------------------------------
+# error bounds vs the exact float64 oracles (repro.core.ref)
+# ----------------------------------------------------------------------
+
+class TestCountMinBounds:
+    def test_point_estimates_within_documented_bound(self):
+        rng = np.random.default_rng(0)
+        # zipf-flavored discrete distribution: few heavy, many light items
+        universe = np.arange(200, dtype=np.float32)
+        weights = 1.0 / np.arange(1, 201) ** 1.2
+        items = rng.choice(universe, size=8000, p=weights / weights.sum())
+        cm = CountMinProgram(depth=4, width=1024, seed=11)
+        res = jax.tree.map(np.asarray, cm.finalize(fold_items(cm, items)))
+        uniq, counts = ref.exact_frequencies(items)
+        est = cm.estimate(res, uniq)
+        assert int(res["n"]) == len(items)
+        # one-sided: never an undercount
+        assert (est >= counts).all()
+        eps_n, delta = cm.error_bound(len(items))
+        # with delta ~ e^-4 per query, allow the documented failure rate
+        # (deterministic for the fixed seed; currently zero violations)
+        violations = int((est - counts > eps_n).sum())
+        assert violations <= max(1, int(np.ceil(2 * delta * len(uniq))))
+
+    def test_heavy_hitters_superset_of_exact(self):
+        rng = np.random.default_rng(1)
+        items = np.concatenate([
+            np.full(3000, 7.0, np.float32),         # ~43% heavy
+            np.full(1500, 13.0, np.float32),        # ~21% heavy
+            rng.normal(size=2500).astype(np.float32)])
+        rng.shuffle(items)
+        cm = CountMinProgram(depth=4, width=1024, seed=3)
+        res = jax.tree.map(np.asarray, cm.finalize(fold_items(cm, items)))
+        exact = ref.exact_heavy_hitters(items, phi=0.2)
+        got = cm.heavy_hitters(res, np.unique(items), phi=0.2)
+        got_vals = {v for v, _ in got}
+        for v, _ in exact:                          # no true HH is missed
+            assert v in got_vals
+        # estimates stay within the overcount bound for the reported set
+        eps_n, _ = cm.error_bound(len(items))
+        exact_map = dict(zip(*map(list, ref.exact_frequencies(items))))
+        for v, e in got:
+            assert e <= exact_map[np.float32(v)] + eps_n
+
+
+class TestHLLBounds:
+    @pytest.mark.parametrize("n_distinct", [100, 2000, 20000])
+    def test_relative_error_within_std_error_multiple(self, n_distinct):
+        rng = np.random.default_rng(n_distinct)
+        uniq = rng.normal(size=n_distinct).astype(np.float32)
+        # duplicate every item ~3x: cardinality must ignore multiplicity
+        items = np.repeat(uniq, rng.integers(1, 5, n_distinct))
+        hll = HyperLogLogProgram(p=12, seed=5)
+        res = jax.tree.map(np.asarray, hll.finalize(fold_items(hll, items)))
+        true = ref.exact_distinct(items)
+        rel_err = abs(float(res["estimate"]) - true) / true
+        assert rel_err <= 4 * hll.std_error(), (rel_err, hll.std_error())
+
+    def test_small_range_linear_counting(self):
+        items = np.arange(40, dtype=np.float32)
+        hll = HyperLogLogProgram(p=12, seed=5)
+        res = jax.tree.map(np.asarray, hll.finalize(fold_items(hll, items)))
+        # linear counting is near-exact far below m
+        assert abs(float(res["estimate"]) - 40) <= 2
+
+    def test_empty_fold_estimates_zero(self):
+        hll = HyperLogLogProgram(p=10)
+        res = hll.finalize(hll.zero((1,), np.float32))
+        assert float(res["estimate"]) == 0.0
+
+
+class TestQuantileBounds:
+    @pytest.mark.parametrize("mode", ["dense", "cm"])
+    @pytest.mark.parametrize("dist", ["uniform", "lognormal", "bimodal"])
+    def test_rank_error_within_documented_bound(self, dist, mode):
+        rng = np.random.default_rng(hash(dist) % 2**31)
+        n = 6000
+        if dist == "uniform":
+            items = rng.uniform(-4, 4, n)
+        elif dist == "lognormal":
+            items = np.clip(rng.lognormal(0.0, 0.7, n) - 2.0, -4, 3.999)
+        else:
+            items = np.concatenate([rng.normal(-2, 0.3, n // 2),
+                                    rng.normal(2.5, 0.5, n - n // 2)])
+        items = np.clip(items, -4, 3.999).astype(np.float32)
+        log2_u = 11 if mode == "dense" else 16
+        qs = QuantileSketchProgram(lo=-4.0, hi=4.0, log2_universe=log2_u,
+                                   depth=4, width=1024,
+                                   probes=(0.1, 0.5, 0.9, 0.99), seed=13)
+        assert qs.dense == (mode == "dense")
+        res = jax.tree.map(np.asarray, qs.finalize(fold_items(qs, items)))
+        assert int(res["n"]) == n
+        # the target rank must sit within the documented rank bound of the
+        # returned value's exact rank interval (±1 bucket of quantization)
+        targets = np.ceil(np.asarray(qs.probes) * n)
+        err = quantile_rank_err(qs, items, res["quantiles"], targets)
+        bound = qs.rank_error_bound(n) + 1
+        assert (err <= bound).all(), (err, bound, res["quantiles"])
+        # and the host-side rank estimator obeys its own contract against
+        # the quantized-bucket oracle: exact when dense, one-sided
+        # overcount within the documented bound in count-min mode
+        ranks = qs.rank_estimate(res, res["quantiles"])
+        b_items = qs._buckets(ref.canonical_items(items), np)
+        b_query = qs._buckets(np.asarray(res["quantiles"], np.float32), np)
+        true_ranks = np.array([(b_items < bq).sum() for bq in b_query])
+        assert (ranks >= true_ranks).all()          # never an undercount
+        assert (ranks - true_ranks <= qs.rank_error_bound(n) + 1e-9).all()
+
+    def test_values_close_to_exact_quantiles(self):
+        rng = np.random.default_rng(2)
+        items = rng.uniform(-4, 4, 8000).astype(np.float32)
+        qs = SKETCHES[2]
+        res = jax.tree.map(np.asarray, qs.finalize(fold_items(qs, items)))
+        exact = ref.exact_quantiles(items, qs.probes)
+        # uniform density ~ n/(hi-lo) per unit: rank bound translates to a
+        # value tolerance of bound/density + one bucket
+        density = len(items) / 8.0
+        tol = (qs.rank_error_bound(len(items)) + 1) / density \
+            + 2 * qs.value_resolution()
+        np.testing.assert_allclose(res["quantiles"], exact, atol=tol)
+
+    def test_empty_fold_is_nan(self):
+        qs = SKETCHES[2]
+        res = qs.finalize(qs.zero((1,), np.float32))
+        assert np.isnan(np.asarray(res["quantiles"])).all()
+
+
+# ----------------------------------------------------------------------
+# the merge law: bit-identical under any merge order / chunking
+# ----------------------------------------------------------------------
+
+class TestMergeLaw:
+    @pytest.mark.parametrize("program", SKETCHES,
+                             ids=lambda p: type(p).__name__)
+    def test_merge_order_invariance_bitwise(self, program):
+        rng = np.random.default_rng(7)
+        items = rng.normal(size=3000).astype(np.float32).clip(-3.9, 3.9)
+        # 13 uneven partials
+        cuts = np.sort(rng.choice(np.arange(1, 3000), 12, replace=False))
+        parts = [fold_items(program, c)
+                 for c in np.split(items, cuts)]
+
+        def funnel(ps):
+            acc = ps[0]
+            for p in ps[1:]:
+                acc = program.merge(acc, p)
+            return acc
+
+        def tree(ps):
+            ps = list(ps)
+            while len(ps) > 1:
+                ps = [program.merge(ps[i], ps[i + 1])
+                      if i + 1 < len(ps) else ps[i]
+                      for i in range(0, len(ps), 2)]
+            return ps[0]
+
+        perm = list(rng.permutation(len(parts)))
+        merged = [funnel(parts), tree(parts),
+                  funnel([parts[i] for i in perm])]
+        for other in merged[1:]:
+            assert_trees_bitequal(merged[0], other)
+            assert_trees_bitequal(program.finalize(merged[0]),
+                                  program.finalize(other))
+
+    @pytest.mark.parametrize("program", SKETCHES,
+                             ids=lambda p: type(p).__name__)
+    def test_chunk_size_invariance_bitwise(self, program):
+        rng = np.random.default_rng(8)
+        items = rng.normal(size=1111).astype(np.float32).clip(-3.9, 3.9)
+        a = fold_items(program, items, eta=64)
+        b = fold_items(program, items, eta=333)
+        assert_trees_bitequal(a, b)
+
+    @pytest.mark.parametrize("program", SKETCHES,
+                             ids=lambda p: type(p).__name__)
+    def test_engine_funnel_matches_pairwise_merge(self, program):
+        """The engine's stacked additive funnel (per-leaf sum/max) must
+        agree bit-for-bit with the program's own pairwise merge."""
+        rng = np.random.default_rng(9)
+        items = rng.normal(size=900).astype(np.float32).clip(-3.9, 3.9)
+        parts = [fold_items(program, c) for c in np.split(items, 3)]
+        mesh = make_mesh((1,), ("data",))
+        eng = MapReduceEngine(mesh, merge_strategy="funnel")
+        got = eng.merge_finalize(program, parts, (1,), np.float32)
+        want = program.finalize(
+            program.merge(program.merge(parts[0], parts[1]), parts[2]))
+        assert_trees_bitequal(got, want)
+
+    def test_grouped_sketch_merge_respects_max(self):
+        """A grouped fused sketch stack merges HLL registers by max and
+        everything else by sum — per leaf, through GroupedProgram."""
+        hll = HyperLogLogProgram(p=8, seed=1)
+        fused = FusedProgram((MeanProgram(), hll))
+        gp = GroupedProgram(fused, 2)
+        rng = np.random.default_rng(3)
+        rows = jnp.asarray(rng.normal(size=(8, 1)).astype(np.float32))
+        gmask = jnp.asarray(np.arange(8) % 2 == 0).reshape(1, 8)
+        gmask = jnp.concatenate([gmask, ~gmask], axis=0)
+        a = gp.map_chunk(rows, gmask)
+        b = gp.map_chunk(rows[::-1], gmask)
+        m = gp.merge(a, b)
+        regs_a = np.asarray(a["private"][0]["regs"])
+        regs_b = np.asarray(b["private"][0]["regs"])
+        np.testing.assert_array_equal(
+            np.asarray(m["private"][0]["regs"]),
+            np.maximum(regs_a, regs_b))
+        (dt, pool), = m["shared"].items()
+        np.testing.assert_array_equal(
+            np.asarray(pool["count"]),
+            np.asarray(a["shared"][dt]["count"])
+            + np.asarray(b["shared"][dt]["count"]))
+
+
+class TestMergeOpsProtocol:
+    def test_default_is_all_sum(self):
+        p = MeanProgram()
+        assert p.merge_ops_for(p.zero((1,), np.float32)) is None
+
+    def test_hll_declares_max_per_leaf(self):
+        hll = HyperLogLogProgram(p=6)
+        assert hll.merge_ops_for(hll.zero((1,), np.float32)) == ["max"]
+
+    def test_fused_composes_private_ops_before_shared(self):
+        fused = FusedProgram((MeanProgram(), HyperLogLogProgram(p=6),
+                              CountMinProgram(depth=2, width=64)))
+        z = fused.zero((1,), np.float32)
+        ops = fused.merge_ops_for(z)
+        leaves = jax.tree.leaves(z)
+        assert len(ops) == len(leaves)
+        # exactly one max leaf: the HLL registers
+        assert ops.count("max") == 1
+        # and it lines up with the int32 register leaf
+        max_leaf = leaves[ops.index("max")]
+        assert max_leaf.shape == (64,) and max_leaf.dtype == jnp.int32
+
+    def test_grouped_delegates_to_fused(self):
+        fused = FusedProgram((MeanProgram(), HyperLogLogProgram(p=6)))
+        gp = GroupedProgram(fused, 3)
+        z = gp.zero((1,), np.float32)
+        assert gp.merge_ops_for(z) == fused.merge_ops_for(z)
+
+    def test_engine_rejects_wrong_length_ops(self):
+        class Bad(MapReduceProgram):
+            additive = True
+
+            def zero(self, row_shape, dtype):
+                return {"a": jnp.zeros((), jnp.int32),
+                        "b": jnp.zeros((), jnp.int32)}
+
+            def map_chunk(self, rows, valid):
+                return self.zero((), None)
+
+            def merge(self, a, b):
+                return jax.tree.map(jnp.add, a, b)
+
+            def finalize(self, p):
+                return p
+
+            def merge_ops_for(self, partial):
+                return ["max"]                    # wrong length
+
+        eng = MapReduceEngine(make_mesh((1,), ("data",)),
+                              merge_strategy="funnel")
+        bad = Bad()
+        parts = [bad.zero((), None), bad.zero((), None)]
+        with pytest.raises(ValueError, match="merge_ops_for"):
+            eng.merge_finalize(bad, parts, (1,), np.float32)
+
+
+# ----------------------------------------------------------------------
+# spill serialization: partials round-trip the .npz path bit-identically
+# ----------------------------------------------------------------------
+
+class TestSpillRoundTrip:
+    @pytest.mark.parametrize("program", SKETCHES,
+                             ids=lambda p: type(p).__name__)
+    def test_npz_round_trip_bitwise(self, program):
+        rng = np.random.default_rng(5)
+        items = rng.normal(size=500).astype(np.float32).clip(-3.9, 3.9)
+        partial = fold_items(program, items)
+        leaves, treedef = partial_to_host(partial)
+        buf = io.BytesIO()
+        np.savez(buf, *leaves)
+        buf.seek(0)
+        loaded = np.load(buf)
+        back = partial_from_host([loaded[k] for k in loaded.files], treedef)
+        assert_trees_bitequal(partial, back)
+        assert_trees_bitequal(program.finalize(partial),
+                              program.finalize(jax.tree.map(
+                                  jnp.asarray, back)))
+
+
+# ----------------------------------------------------------------------
+# session integration: caching, grouping, merge-strategy invariance
+# ----------------------------------------------------------------------
+
+def sketch_plan(s, **kw):
+    return (s.scan().select("img:data")
+            .map(CountMinProgram(depth=4, width=1024, seed=21))
+            .map(HyperLogLogProgram(p=10, seed=22))
+            .map(QuantileSketchProgram(lo=-5.0, hi=5.0, log2_universe=11,
+                                       depth=4, width=1024,
+                                       probes=(0.5, 0.95), seed=23))
+            .reduce())
+
+
+class TestSessionIntegration:
+    def test_sketches_match_oracles_end_to_end(self):
+        t = make_table(per=32, seed=6)
+        s = GridSession(t, default_eta=8)
+        (cm_res, hll_res, q_res), rep = sketch_plan(s).collect()
+        data = t.column("img", "data")
+        n_items = data.size
+        # count-min: n exact, estimates bounded
+        cm = CountMinProgram(depth=4, width=1024, seed=21)
+        assert int(np.asarray(cm_res["n"])) == n_items
+        uniq, counts = ref.exact_frequencies(data)
+        est = cm.estimate(jax.tree.map(np.asarray, cm_res), uniq)
+        assert (est >= counts).all()
+        # hll: within 4 standard errors of the exact distinct count
+        hll = HyperLogLogProgram(p=10, seed=22)
+        true_d = ref.exact_distinct(data)
+        assert abs(float(np.asarray(hll_res["estimate"])) - true_d) \
+            <= 4 * hll.std_error() * true_d
+        # quantiles: rank bound against the exact rank interval
+        qs = QuantileSketchProgram(lo=-5.0, hi=5.0, log2_universe=11,
+                                   depth=4, width=1024,
+                                   probes=(0.5, 0.95), seed=23)
+        targets = np.ceil(np.asarray(qs.probes) * n_items)
+        err = quantile_rank_err(qs, data, np.asarray(q_res["quantiles"]),
+                                targets)
+        assert (err <= qs.rank_error_bound(n_items) + 1).all()
+
+    def test_repeat_sketch_query_folds_zero_rows(self):
+        """Acceptance: repeat sketch queries on a clean epoch reuse every
+        cached block partial and fold zero payload rows."""
+        t = make_table(per=16, seed=7)
+        s = GridSession(t, default_eta=8)
+        r1 = sketch_plan(s).stats()
+        assert r1.query.rows_folded == t.num_rows
+        r2 = sketch_plan(s).stats()              # fresh plan object
+        assert r2.query.rows_folded == 0, r2.query
+        assert r2.query.partials_reused == r2.query.partials_total
+
+    def test_warm_and_cold_results_bitwise_identical(self):
+        t = make_table(per=16, seed=8)
+        s = GridSession(t, default_eta=8)
+        cold, _ = sketch_plan(s).collect()
+        warm, _ = sketch_plan(s).collect()
+        assert_trees_bitequal(cold, warm)
+        # and a completely fresh session agrees bit-for-bit too
+        s2 = GridSession(t, default_eta=8)
+        fresh, _ = sketch_plan(s2).collect()
+        assert_trees_bitequal(cold, fresh)
+
+    def test_eta_invariance_bitwise(self):
+        t = make_table(per=20, seed=9)
+        s = GridSession(t, default_eta=4)
+        a, _ = sketch_plan(s).collect(eta=4)
+        b, _ = sketch_plan(s).collect(eta=16)
+        assert_trees_bitequal(a, b)
+
+    def test_grouped_sketches_match_per_group_oracles(self):
+        t = make_table(per=24, seed=10, sites=3)
+        s = GridSession(t, default_eta=8)
+        hll = HyperLogLogProgram(p=10, seed=31)
+        qs = QuantileSketchProgram(lo=-5.0, hi=5.0, log2_universe=11,
+                                   depth=4, width=1024, probes=(0.5,),
+                                   seed=32)
+        res, rep = (s.scan().select("img:data").group_by("idx:site")
+                    .map(hll).map(qs).reduce().collect())
+        data = t.column("img", "data")
+        sites = t.column("idx", "site")
+        assert isinstance(res, GroupedResult)
+        hll_res, q_res = res.values
+        for g, k in enumerate(res.keys):
+            sub = data[sites == k]
+            true_d = ref.exact_distinct(sub)
+            est = float(np.asarray(hll_res["estimate"])[g])
+            assert abs(est - true_d) <= 4 * hll.std_error() * true_d
+            n_g = sub.size
+            err = quantile_rank_err(qs, sub,
+                                    np.asarray(q_res["quantiles"])[g],
+                                    np.ceil(0.5 * n_g))
+            assert (err <= qs.rank_error_bound(n_g) + 1).all()
+
+    def test_grouped_sketch_composite_key(self):
+        t = make_table(per=24, seed=11, sites=2)
+        s = GridSession(t, default_eta=8)
+        hll = HyperLogLogProgram(p=10, seed=41)
+        res, _ = (s.scan().select("img:data")
+                  .group_by(["idx:site", "idx:sex"])
+                  .map(hll).reduce().collect())
+        data = t.column("img", "data")
+        site, sex = t.column("idx", "site"), t.column("idx", "sex")
+        for g, k in enumerate(res.keys):
+            sub = data[(site == k[0]) & (sex == k[1])]
+            true_d = ref.exact_distinct(sub)
+            est = float(np.asarray(res.values["estimate"])[g])
+            assert abs(est - true_d) <= 4 * hll.std_error() * max(true_d, 1)
+
+    def test_mutation_refolds_dirty_and_matches_fresh_session(self):
+        """Differential: after a mutation, the incrementally-maintained
+        sketch (cached partials + one dirty re-fold) must be bit-identical
+        to a from-scratch session — the merge law end to end."""
+        t = make_table(per=16, seed=12)
+        s = GridSession(t, default_eta=8)
+        sketch_plan(s).collect()
+        rng = np.random.default_rng(13)
+        s.upload([b"b0003"], {
+            "img": {"data": rng.normal(size=(1,) + PAYLOAD)
+                    .astype(np.float32)},
+            "idx": {"size": np.array([7_000_000]),
+                    "age": np.array([33.0], np.float32),
+                    "sex": np.array([1], np.int8),
+                    "site": np.array([0], np.int32)}},
+            on_duplicate="overwrite")
+        warm, rep = sketch_plan(s).collect()
+        assert 0 < rep.query.rows_folded < t.num_rows
+        fresh, _ = sketch_plan(GridSession(t, default_eta=8)).collect()
+        assert_trees_bitequal(warm, fresh)
